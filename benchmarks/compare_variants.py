@@ -1,0 +1,51 @@
+"""Print baseline-vs-variant roofline comparisons for the perf log."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from benchmarks.common import ART
+from benchmarks.roofline import analyze_artifact
+
+DRYRUN_DIR = os.path.join(ART, "dryrun")
+
+
+def row(name: str):
+    path = os.path.join(DRYRUN_DIR, name + ".json")
+    if not os.path.exists(path):
+        return None
+    art = json.load(open(path))
+    r = analyze_artifact(art)
+    if r is None:
+        return None
+    temp = art["memory"]["temp_size_tpu_estimate"] / 2**30
+    return (
+        f"{r.variant:16s} comp={r.compute_s:8.2f}s mem={r.memory_s:8.2f}s "
+        f"coll={r.collective_s:8.2f}s dom={r.dominant:10s} "
+        f"frac={r.roofline_fraction:.2f} mfu={r.mfu:.2f} temp={temp:6.1f}G"
+    )
+
+
+def main(cells):
+    for cell in cells:
+        print(f"== {cell}")
+        base = row(cell)
+        if base:
+            print("  " + base)
+        for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, cell + "__*.json"))):
+            name = os.path.basename(path)[: -len(".json")]
+            r = row(name)
+            if r:
+                print("  " + r)
+
+
+if __name__ == "__main__":
+    cells = sys.argv[1:] or [
+        "qwen3-moe-235b-a22b__train_4k__single_pod",
+        "mistral-large-123b__train_4k__single_pod",
+        "llava-next-34b__prefill_32k__single_pod",
+    ]
+    main(cells)

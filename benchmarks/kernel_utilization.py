@@ -1,0 +1,99 @@
+"""Schedule behaviour across the suite (the paper's §5.2 narrative): modeled
+utilization of the best DP vs best Stream-K++ schedule per size class, plus
+an interpret-mode numerical equivalence check of the actual Pallas kernels
+(performance is modeled — this container has no TPU — correctness is real)."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import csv_row, tuned_db
+from repro.core import costmodel
+from repro.core.policies import DP
+from repro.core.workpart import GemmShape
+
+
+def analyze() -> Dict[str, Dict[str, float]]:
+    db = tuned_db()
+    classes = {
+        "skinny_m (M<=8)": lambda s: s[0] <= 8,
+        "tall_k (K>=16384)": lambda s: s[2] >= 16384,
+        "square_big (M,N>=4096)": lambda s: s[0] >= 4096 and s[1] >= 4096,
+        "all": lambda s: True,
+    }
+    out = {}
+    peak = costmodel.V5E.peak_flops / 1e12
+    for name, pred in classes.items():
+        dp_u, best_u, n = [], [], 0
+        for size, per in db.per_policy.items():
+            if not pred(size):
+                continue
+            n += 1
+            dp_u.append(per["dp"] / peak)
+            best_u.append(max(per.values()) / peak)
+        if n:
+            out[name] = {
+                "n": n,
+                "dp_util": float(np.mean(dp_u)),
+                "best_util": float(np.mean(best_u)),
+                "gain": float(np.mean(best_u) / max(np.mean(dp_u), 1e-12) - 1),
+            }
+    return out
+
+
+def kernel_equivalence_check() -> float:
+    """Run the real Pallas kernels (interpret) on a few suite sizes under
+    their tuned winning policy; return max abs error vs the oracle."""
+    import jax.numpy as jnp
+
+    from repro.core.policies import TileConfig, policy_from_name
+    from repro.core.tuner import TuningDatabase
+    from repro.kernels.streamk import ops as sk_ops
+    from repro.kernels.streamk.ref import gemm_ref
+
+    db = tuned_db()
+    rng = np.random.default_rng(0)
+    max_err = 0.0
+    small = [s for s in db.records if s[0] * s[1] <= 64 * 256 and s[2] <= 512][:4]
+    for size in small:
+        rec = db.records[size]
+        m, n, k = size
+        a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+        bm, bn, bk = (int(x) for x in rec.cfg.split("x"))
+        cfg = TileConfig(min(bm, 8 if m < 8 else bm), 128, 128)
+        got = sk_ops.gemm(
+            a, b, policy=policy_from_name(rec.policy), cfg=cfg, g=4, interpret=True
+        )
+        err = float(jnp.max(jnp.abs(got - gemm_ref(a, b))))
+        max_err = max(max_err, err)
+    return max_err
+
+
+def run() -> List[str]:
+    t0 = time.perf_counter()
+    res = analyze()
+    dt_us = (time.perf_counter() - t0) * 1e6
+    rows = []
+    for name, s in res.items():
+        rows.append(
+            csv_row(
+                f"util.{name.split(' ')[0]}",
+                dt_us,
+                f"n={s['n']} dp={s['dp_util']:.3f} best={s['best_util']:.3f} "
+                f"gain={s['gain']:+.1%}",
+            )
+        )
+    t0 = time.perf_counter()
+    err = kernel_equivalence_check()
+    dt_us = (time.perf_counter() - t0) * 1e6
+    rows.append(csv_row("util.kernel_equiv_maxerr", dt_us, f"{err:.2e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

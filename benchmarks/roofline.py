@@ -1,0 +1,174 @@
+"""Roofline analysis from the dry-run artifacts (§Roofline of EXPERIMENTS.md).
+
+Per (arch x shape x mesh) cell, derive the three roofline terms from the
+compiled artifact's loop-aware HLO analysis:
+
+  compute term    = HLO_FLOPs_per_device            / peak_FLOP/s
+  memory term     = HLO_bytes_per_device            / HBM_bw
+  collective term = collective_bytes_per_device     / link_bw
+
+(per-device quantities: the SPMD program IS the per-chip program, so the
+"/ chips" in the assignment's global formulation is already applied.)
+
+Also reports MODEL_FLOPS = 6*N*D (train) / 2*N_active*D (inference) per
+device, the usefulness ratio MODEL_FLOPS/HLO_FLOPs, the dominant term, and
+the roofline fraction = compute_term / max(all terms) — i.e. what fraction
+of the step the MXU could be busy if the dominant term were perfectly
+overlapped with the rest.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from benchmarks.common import ART, csv_row
+from repro.core.costmodel import V5E
+from repro.models.config import SHAPES_BY_NAME
+
+DRYRUN_DIR = os.path.join(ART, "dryrun")
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    variant: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_per_dev: float
+    hlo_flops_per_dev: float
+    useful_ratio: float
+    roofline_fraction: float
+    step_time_s: float
+    mfu: float
+    fits_hbm: bool
+    note: str = ""
+
+
+def model_flops(art: dict) -> float:
+    """MODEL_FLOPS per device: 6*N*D (train), 2*N_active*D (inference)."""
+    shape = SHAPES_BY_NAME[art["shape"]]
+    n_active = art["params"]["active"]
+    n_dev = art["n_devices"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / n_dev
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / n_dev
+    tokens = shape.global_batch  # one new token per sequence
+    return 2.0 * n_active * tokens / n_dev
+
+
+def analyze_artifact(art: dict, mach=V5E) -> Optional[RooflineRow]:
+    if art.get("status") != "ok":
+        return None
+    lc = art["loop_cost"]
+    compute = lc["flops"] / mach.peak_flops
+    # TPU-estimate bytes: the HLO byte count inherits the CPU backend's f32
+    # shadows; scale by the bf16-shadow correction measured on temp memory.
+    raw_temp = art["memory"].get("temp_size") or 1
+    est_temp = art["memory"].get("temp_size_tpu_estimate") or raw_temp
+    byte_scale = max(0.4, min(1.0, est_temp / raw_temp))
+    memory = lc["bytes"] * byte_scale / mach.hbm_bw
+    coll = lc["collective_bytes"] / mach.ici_bw
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(art)
+    step = max(terms.values())
+    hbm_used = (art["memory"]["argument_size"] or 0) + est_temp
+    return RooflineRow(
+        arch=art["arch"],
+        shape=art["shape"],
+        mesh=art["mesh"],
+        variant=art.get("variant", "baseline"),
+        compute_s=compute,
+        memory_s=memory,
+        collective_s=coll,
+        dominant=dominant,
+        model_flops_per_dev=mf,
+        hlo_flops_per_dev=lc["flops"],
+        useful_ratio=mf / lc["flops"] if lc["flops"] else 0.0,
+        roofline_fraction=compute / step if step else 0.0,
+        step_time_s=step,
+        mfu=(mf / mach.peak_flops) / step if step else 0.0,
+        fits_hbm=hbm_used < 16 * 2**30,
+    )
+
+
+def load_rows(variant: Optional[str] = None) -> List[RooflineRow]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            art = json.load(f)
+        if variant is not None and art.get("variant", "baseline") != variant:
+            continue
+        row = analyze_artifact(art)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def markdown_table(rows: List[RooflineRow]) -> str:
+    hdr = (
+        "| arch | shape | mesh | compute s | memory s | collective s | dominant "
+        "| 6ND/HLO | roofline frac | MFU | fits 16G |\n"
+        "|---|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.compute_s:.4f} | "
+            f"{r.memory_s:.4f} | {r.collective_s:.4f} | {r.dominant} | "
+            f"{r.useful_ratio:.2f} | {r.roofline_fraction:.2f} | {r.mfu:.2f} | "
+            f"{'y' if r.fits_hbm else 'N'} |"
+        )
+    return hdr + "\n".join(lines)
+
+
+def run() -> List[str]:
+    t0 = time.perf_counter()
+    rows = load_rows(variant="baseline")
+    dt_us = (time.perf_counter() - t0) * 1e6
+    out = []
+    if not rows:
+        return [csv_row("roofline.missing", dt_us, "run repro.launch.dryrun --all first")]
+    single = [r for r in rows if r.mesh == "single_pod"]
+    for r in single:
+        out.append(
+            csv_row(
+                f"roofline.{r.arch}.{r.shape}",
+                dt_us,
+                f"comp={r.compute_s:.4f}s mem={r.memory_s:.4f}s coll={r.collective_s:.4f}s "
+                f"dom={r.dominant} frac={r.roofline_fraction:.2f} mfu={r.mfu:.2f}",
+            )
+        )
+    # summary stats
+    import numpy as np
+
+    fr = np.asarray([r.roofline_fraction for r in single])
+    out.append(
+        csv_row(
+            "roofline.summary",
+            dt_us,
+            f"n={len(single)} mean_frac={fr.mean():.2f} worst={fr.min():.2f} "
+            f"best={fr.max():.2f}",
+        )
+    )
+    # persist the markdown table for EXPERIMENTS.md
+    with open(os.path.join(ART, "roofline_baseline.md"), "w") as f:
+        f.write(markdown_table(rows))
+    return out
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

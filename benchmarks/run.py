@@ -1,0 +1,51 @@
+"""Benchmark harness: one module per paper table/figure (+ the roofline).
+Prints ``name,us_per_call,derived`` CSV (see each module for the claim it
+reproduces)."""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        arch_dispatch,
+        bloom_elimination,
+        bloom_query,
+        fig2_tolerance,
+        fig3_gains,
+        kernel_utilization,
+        production_suite,
+        roofline,
+        sensitivity,
+        serving_throughput,
+    )
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (
+        fig2_tolerance,
+        fig3_gains,
+        bloom_elimination,
+        bloom_query,
+        kernel_utilization,
+        arch_dispatch,
+        production_suite,
+        sensitivity,
+        serving_throughput,
+        roofline,
+    ):
+        try:
+            for row in mod.run():
+                print(row)
+        except Exception:  # pragma: no cover
+            failures += 1
+            print(f"{mod.__name__},nan,ERROR")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

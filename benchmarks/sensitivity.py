@@ -1,0 +1,62 @@
+"""Robustness of the paper's claims to the hardware model: sweep the
+virtual-lane count C (the TPU analogue of the CU count) and the fix-up
+serialisation cost, and report how the winner distribution moves.
+
+This is the calibration due-diligence the CPU-only setting demands: if the
+reproduced claim ("DP wins most sizes; SK wins a meaningful minority")
+flipped under small machine-model perturbations, the reproduction would be
+an artifact. It does not (see derived columns).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List
+
+from benchmarks.common import csv_row
+from repro.configs.gemm_suite import suite
+from repro.core import costmodel
+from repro.core.tuner import Tuner, measure_model
+
+
+def _winner_fracs(mach) -> dict:
+    sizes = suite()[::6]  # 154 sizes: dense enough, fast enough
+    db = Tuner(measure_fn=measure_model(mach), mach=mach).tune(sizes)
+    total = len(db.records)
+    sk = sum(1 for r in db.records.values() if r.policy != "dp")
+    return {"dp": (total - sk) / total, "sk": sk / total}
+
+
+def run() -> List[str]:
+    rows = []
+    for lanes in (4, 8, 16, 12):  # 12: non-power-of-two "CU count"
+        t0 = time.perf_counter()
+        mach = dataclasses.replace(costmodel.V5E, lanes=lanes)
+        f = _winner_fracs(mach)
+        dt_us = (time.perf_counter() - t0) * 1e6
+        rows.append(
+            csv_row(
+                f"sensitivity.lanes{lanes}",
+                dt_us,
+                f"dp={f['dp']:.3f} sk={f['sk']:.3f}",
+            )
+        )
+    for fixup_us in (0.4, 1.2, 3.6):
+        t0 = time.perf_counter()
+        mach = dataclasses.replace(costmodel.V5E, fixup_serial_s=fixup_us * 1e-6)
+        f = _winner_fracs(mach)
+        dt_us = (time.perf_counter() - t0) * 1e6
+        rows.append(
+            csv_row(
+                f"sensitivity.fixup{fixup_us}us",
+                dt_us,
+                f"dp={f['dp']:.3f} sk={f['sk']:.3f}",
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

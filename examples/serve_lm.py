@@ -1,0 +1,28 @@
+"""Serving driver: batched requests with continuous batching and a KV cache,
+dispatching every decode GEMM through the Stream-K++ selector (decode GEMMs
+are the skinny-M regime where the paper's policies matter most — the script
+prints the dispatch decisions).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import sys
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    sys.argv = [
+        "serve",
+        "--arch", "granite-8b",
+        "--preset", "100m",
+        "--requests", "12",
+        "--slots", "4",
+        "--max-seq", "256",
+        "--max-new-tokens", "16",
+    ]
+    return serve_main()
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,9 @@
+"""repro — Stream-K++ on TPU.
+
+Adaptive GEMM kernel scheduling (7 Stream-K++ policies) and Bloom-filter
+kernel selection (Open-sieve), reproduced from Sadasivan et al. (AI4S'24)
+and deployed as the dispatch layer of a multi-pod JAX training/serving
+framework. See DESIGN.md / EXPERIMENTS.md at the repository root.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+from repro.checkpoint.manager import CheckpointManager, install_sigterm_handler
+
+__all__ = ["CheckpointManager", "install_sigterm_handler"]

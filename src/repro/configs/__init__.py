@@ -1,0 +1,38 @@
+"""Architecture registry: ``--arch <id>`` resolution for every assigned
+architecture (full configs) and their reduced smoke-test variants."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+_MODULES: Dict[str, str] = {
+    "llava-next-34b": "repro.configs.llava_next_34b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b_a22b",
+    "mistral-large-123b": "repro.configs.mistral_large_123b",
+    "gemma3-27b": "repro.configs.gemma3_27b",
+    "granite-8b": "repro.configs.granite_8b",
+    "nemotron-4-15b": "repro.configs.nemotron_4_15b",
+    "mamba2-1.3b": "repro.configs.mamba2_1_3b",
+    "whisper-large-v3": "repro.configs.whisper_large_v3",
+    "zamba2-1.2b": "repro.configs.zamba2_1_2b",
+}
+
+
+def list_archs() -> List[str]:
+    return sorted(_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; valid: {list_archs()}")
+    return importlib.import_module(_MODULES[name]).FULL
+
+
+def get_reduced(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; valid: {list_archs()}")
+    return importlib.import_module(_MODULES[name]).reduced()

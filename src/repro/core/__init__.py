@@ -1,0 +1,71 @@
+"""The paper's contribution: Stream-K++ scheduling policies, work-centric
+GEMM partitioning, Bloom-filter policy selection (Open-sieve), the
+ckProfiler-analogue tuner, and the GEMM dispatch API."""
+
+from repro.core.policies import (
+    ALL_POLICIES,
+    ALL_SK,
+    DEFAULT_TILE_CONFIGS,
+    DP,
+    HYBRIDS,
+    STREAMKPP_POLICIES,
+    Policy,
+    PolicyKind,
+    TileConfig,
+    policy_from_name,
+)
+from repro.core.workpart import (
+    GemmShape,
+    Partition,
+    TileContribution,
+    WorkRange,
+    cdiv,
+    partition,
+    validate_partition,
+    wave_quantization_efficiency,
+)
+from repro.core.bloom import BloomFilter, encode_mnk, murmur3_32
+from repro.core.opensieve import OpenSieve
+from repro.core.costmodel import Machine, V5E, gemm_tflops, gemm_time_s, best_config
+from repro.core.tuner import Tuner, TuningDatabase, TuningRecord
+from repro.core.selector import KernelSelector, Selection, default_selector
+from repro.core.gemm import gemm, gemm_context, current_log
+
+__all__ = [
+    "ALL_POLICIES",
+    "ALL_SK",
+    "DEFAULT_TILE_CONFIGS",
+    "DP",
+    "HYBRIDS",
+    "STREAMKPP_POLICIES",
+    "Policy",
+    "PolicyKind",
+    "TileConfig",
+    "policy_from_name",
+    "GemmShape",
+    "Partition",
+    "TileContribution",
+    "WorkRange",
+    "cdiv",
+    "partition",
+    "validate_partition",
+    "wave_quantization_efficiency",
+    "BloomFilter",
+    "encode_mnk",
+    "murmur3_32",
+    "OpenSieve",
+    "Machine",
+    "V5E",
+    "gemm_tflops",
+    "gemm_time_s",
+    "best_config",
+    "Tuner",
+    "TuningDatabase",
+    "TuningRecord",
+    "KernelSelector",
+    "Selection",
+    "default_selector",
+    "gemm",
+    "gemm_context",
+    "current_log",
+]

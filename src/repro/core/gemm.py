@@ -1,0 +1,136 @@
+"""Public GEMM dispatch API — the paper's technique as a first-class framework
+feature.
+
+Every projection in ``repro.models`` routes through :func:`gemm`. At trace
+time the dispatcher:
+
+  1. computes the *local* (per-shard) (M, N, K) the MXU will actually see —
+     callers pass the sharding divisors their GSPMD spec implies;
+  2. asks the :class:`KernelSelector` (tuned DB -> Bloom filters -> cost
+     model) for a (policy, tile config);
+  3. executes via the chosen backend:
+       * ``xla``               — jnp.dot (CPU / dry-run lowering; selection
+                                 still exercised + logged),
+       * ``pallas``            — the Stream-K++ Pallas kernel (TPU),
+       * ``pallas_interpret``  — same kernel, interpret mode (CPU-validated).
+
+Backend and selector are ambient (context-managed) so model code stays
+declarative. Every decision is appended to the active ``SelectionLog`` for
+tests/benchmarks to introspect.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policies import Policy, TileConfig
+from repro.core.selector import KernelSelector, Selection, default_selector
+
+_state = threading.local()
+
+
+@dataclass
+class SelectionLogEntry:
+    global_mnk: Tuple[int, int, int]
+    local_mnk: Tuple[int, int, int]
+    selection: Selection
+    tag: str = ""
+
+
+@dataclass
+class GemmContext:
+    selector: KernelSelector
+    backend: str = "xla"  # "xla" | "pallas" | "pallas_interpret"
+    log: List[SelectionLogEntry] = field(default_factory=list)
+
+
+def _ctx() -> GemmContext:
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        ctx = GemmContext(selector=default_selector())
+        _state.ctx = ctx
+    return ctx
+
+
+@contextmanager
+def gemm_context(
+    selector: Optional[KernelSelector] = None, backend: Optional[str] = None
+):
+    """Install a dispatch context for the duration of a trace/eval."""
+    old = getattr(_state, "ctx", None)
+    base = old or _ctx()
+    _state.ctx = GemmContext(
+        selector=selector if selector is not None else base.selector,
+        backend=backend if backend is not None else base.backend,
+    )
+    try:
+        yield _state.ctx
+    finally:
+        _state.ctx = old
+
+
+def current_log() -> List[SelectionLogEntry]:
+    return _ctx().log
+
+
+def gemm(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    divisors: Tuple[int, int, int] = (1, 1, 1),
+    out_dtype=None,
+    tag: str = "",
+    policy: Optional[Policy] = None,
+    cfg: Optional[TileConfig] = None,
+) -> jax.Array:
+    """``x @ w`` with Stream-K++ kernel selection.
+
+    x: (..., K); w: (K, N) -> (..., N). ``divisors`` are the GSPMD sharding
+    factors (dm, dn, dk) so selection keys on the per-shard local shape.
+    ``policy``/``cfg`` override selection (used by the tuner itself).
+    """
+    if x.shape[-1] != w.shape[0]:
+        raise ValueError(f"gemm contraction mismatch: {x.shape} @ {w.shape}")
+    ctx = _ctx()
+    m_global = 1
+    for d in x.shape[:-1]:
+        m_global *= int(d)
+    k_global, n_global = int(w.shape[0]), int(w.shape[1])
+    dm, dn, dk = divisors
+    local = (max(1, m_global // dm), max(1, n_global // dn), max(1, k_global // dk))
+
+    if policy is None or cfg is None:
+        sel = ctx.selector.select(*local)
+        policy = policy or sel.policy
+        cfg = cfg or sel.cfg
+    else:
+        sel = Selection(policy, cfg, "forced", 0, 0)
+    ctx.log.append(
+        SelectionLogEntry((m_global, n_global, k_global), local, sel, tag)
+    )
+
+    out_dtype = out_dtype or x.dtype
+    if ctx.backend == "xla":
+        out = jnp.dot(x, w, preferred_element_type=jnp.float32)
+        return out.astype(out_dtype)
+
+    # Pallas path: flatten leading dims, run the kernel, restore shape.
+    from repro.kernels.streamk import ops as sk_ops
+
+    lead = x.shape[:-1]
+    x2 = x.reshape((m_global, k_global))
+    out2 = sk_ops.gemm(
+        x2,
+        w,
+        policy=policy,
+        cfg=cfg,
+        interpret=(ctx.backend == "pallas_interpret"),
+        out_dtype=out_dtype,
+    )
+    return out2.reshape((*lead, n_global))

@@ -1,0 +1,95 @@
+"""JAX-native Bloom-filter queries.
+
+The Python ``BloomFilter`` is the build-time artifact; at dispatch time inside
+a jit-compiled serving loop we may want to query thousands of (M, N, K) keys
+without leaving the device. This module re-implements MurmurHash3_x86_32 with
+uint32 jnp arithmetic so a *batch* of keys can be queried against the packed
+filter bits vectorised/jit'd. Bit-exactness vs. the Python implementation is a
+test invariant (``tests/test_bloom.py``).
+
+Keys here are the canonical 24-byte `<3q` encoding of (m, n, k), i.e. six
+little-endian uint32 words per key — fixed length, so the murmur block loop
+unrolls statically and there is no tail to handle.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+_C1 = np.uint32(0xCC9E2D51)
+_C2 = np.uint32(0x1B873593)
+
+
+def _rotl32(x, r: int):
+    return (x << r) | (x >> (32 - r))
+
+
+def _mix(h, k):
+    k = k * _C1
+    k = _rotl32(k, 15)
+    k = k * _C2
+    h = h ^ k
+    h = _rotl32(h, 13)
+    return h * np.uint32(5) + np.uint32(0xE6546B64)
+
+
+def murmur3_32_words(words, seed):
+    """MurmurHash3_x86_32 over a fixed-length word array.
+
+    words: uint32[..., W] little-endian words (W*4-byte keys, no tail).
+    seed:  uint32[...] broadcastable to words[..., 0].
+    """
+    words = words.astype(jnp.uint32)
+    h = jnp.broadcast_to(jnp.asarray(seed, jnp.uint32), words.shape[:-1])
+    w = words.shape[-1]
+    for i in range(w):
+        h = _mix(h, words[..., i])
+    h = h ^ jnp.uint32(w * 4)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    return h ^ (h >> 16)
+
+
+def mnk_to_words(m, n, k):
+    """(..., ) int arrays -> uint32[..., 6] matching struct.pack('<3q').
+
+    Avoids uint64 (unavailable without jax x64): GEMM dims are < 2**31, so
+    the high word of each little-endian int64 is statically zero.
+    """
+    m = jnp.asarray(m)
+    n = jnp.asarray(n)
+    k = jnp.asarray(k)
+    zero = jnp.zeros(jnp.broadcast_shapes(m.shape, n.shape, k.shape), jnp.uint32)
+    lo = lambda v: jnp.broadcast_to(v.astype(jnp.uint32), zero.shape)
+    return jnp.stack([lo(m), zero, lo(n), zero, lo(k), zero], axis=-1)
+
+
+def bloom_query(bits_u8, n_bits: int, n_hashes: int, seed: int, m, n, k):
+    """Vectorised membership query.
+
+    bits_u8: uint8[n_bits//8] — the packed filter (``BloomFilter.bits``).
+    m, n, k: broadcastable integer arrays of problem sizes.
+    Returns bool array: True = "possibly present", False = "definitely absent".
+    """
+    words = mnk_to_words(m, n, k)
+    h1 = murmur3_32_words(words, np.uint32(seed))
+    h2 = murmur3_32_words(words, h1 ^ jnp.uint32(0x9747B28C)) | jnp.uint32(1)
+    bits = jnp.asarray(bits_u8, jnp.uint8)
+    hit = jnp.ones(h1.shape, dtype=bool)
+    for i in range(n_hashes):
+        p = (h1 + jnp.uint32(i) * h2) % jnp.uint32(n_bits)
+        byte = bits[(p >> 3).astype(jnp.int32)]
+        bit = (byte >> (p & jnp.uint32(7)).astype(jnp.uint8)) & jnp.uint8(1)
+        hit = hit & (bit == 1)
+    return hit
+
+
+def query_filters(filters, m, n, k):
+    """Query a list of python BloomFilters, returns bool[..., n_filters]."""
+    outs = [
+        bloom_query(f.bits, f.n_bits, f.n_hashes, f.seed, m, n, k) for f in filters
+    ]
+    return jnp.stack(outs, axis=-1)

@@ -1,0 +1,170 @@
+"""Open-sieve: the paper's per-policy Bloom-filter registry.
+
+One Bloom filter per Stream-K++ policy (plus the DP baseline). A one-time
+preprocessing step encodes the tuned winner for every benchmarked problem
+size into the corresponding filter; at dispatch, querying all filters with
+(M, N, K) prunes every policy whose filter answers "definitely absent" — the
+paper measures up to ~95.8% of policy evaluations eliminated at a 100%
+true-negative rate (inherent to Bloom filters).
+
+The paper ships the filters as a generated C++ header (~1 byte per problem
+size); ``encode_cpp_header`` reproduces that artifact and
+``to_bytes``/``from_bytes`` provide the binary codec the framework itself
+uses.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core.bloom import BloomFilter, encode_mnk
+from repro.core.policies import ALL_POLICIES, Policy, policy_from_name
+
+MNK = Tuple[int, int, int]
+
+
+@dataclass
+class QueryStats:
+    """Counters backing the paper's elimination-rate claim."""
+
+    queries: int = 0
+    candidate_evals: int = 0  # policy evaluations NOT pruned
+    pruned_evals: int = 0  # policy evaluations skipped thanks to the filters
+
+    @property
+    def elimination_rate(self) -> float:
+        tot = self.candidate_evals + self.pruned_evals
+        return self.pruned_evals / tot if tot else 0.0
+
+
+class OpenSieve:
+    """Registry: policy name -> BloomFilter, with query bookkeeping."""
+
+    def __init__(
+        self,
+        policies: Sequence[Policy] = ALL_POLICIES,
+        capacity: int = 10_000,
+        fp_rate: float = 0.01,
+    ):
+        self.policies: Tuple[Policy, ...] = tuple(policies)
+        # One distinct hash family (seed) per filter — "7 distinct hash
+        # functions, one for each filter" in the paper.
+        self.filters: Dict[str, BloomFilter] = {
+            p.name: BloomFilter.for_capacity(capacity, fp_rate, seed=i + 1)
+            for i, p in enumerate(self.policies)
+        }
+        self.stats = QueryStats()
+
+    # -- build ----------------------------------------------------------------
+    def insert_winner(self, size: MNK, policy: Policy) -> None:
+        if policy.name not in self.filters:
+            raise KeyError(f"policy {policy.name} not registered")
+        self.filters[policy.name].add(encode_mnk(*size))
+
+    def build_from_winners(self, winners: Mapping[MNK, Policy]) -> "OpenSieve":
+        for size, pol in winners.items():
+            self.insert_winner(size, pol)
+        return self
+
+    # -- query ------------------------------------------------------------------
+    def candidates(self, size: MNK) -> List[Policy]:
+        """Policies whose filter answers "possibly present" for this size."""
+        key = encode_mnk(*size)
+        out = []
+        for p in self.policies:
+            if key in self.filters[p.name]:
+                out.append(p)
+        self.stats.queries += 1
+        self.stats.candidate_evals += len(out)
+        self.stats.pruned_evals += len(self.policies) - len(out)
+        return out
+
+    def validate_true_negative_rate(self, winners: Mapping[MNK, Policy]) -> float:
+        """Assert the Bloom contract on a winner map: the true winner is never
+        pruned. Returns the measured TN rate over non-winner (size, policy)
+        pairs (1.0 == every "absent" answer was correct; Bloom guarantees the
+        converse direction, this checks our plumbing end-to-end)."""
+        for size, pol in winners.items():
+            key = encode_mnk(*size)
+            if key not in self.filters[pol.name]:
+                raise AssertionError(
+                    f"false negative for {size}/{pol.name} — Bloom contract broken"
+                )
+        # TN rate: of all negative answers, how many are genuinely negative.
+        # By construction every negative is genuine (no false negatives), so
+        # this is 1.0 unless plumbing is broken; we still measure it honestly.
+        negatives = genuine = 0
+        for size in winners:
+            key = encode_mnk(*size)
+            for p in self.policies:
+                if key not in self.filters[p.name]:
+                    negatives += 1
+                    if winners[size].name != p.name:
+                        genuine += 1
+        return genuine / negatives if negatives else 1.0
+
+    # -- codec ---------------------------------------------------------------
+    def to_bytes(self) -> bytes:
+        blobs = [(name.encode(), f.to_bytes()) for name, f in self.filters.items()]
+        out = [struct.pack("<4sI", b"OSV1", len(blobs))]
+        for name, blob in blobs:
+            out.append(struct.pack("<II", len(name), len(blob)))
+            out.append(name)
+            out.append(blob)
+        return b"".join(out)
+
+    @classmethod
+    def from_bytes(cls, blob: bytes) -> "OpenSieve":
+        magic, n = struct.unpack_from("<4sI", blob)
+        if magic != b"OSV1":
+            raise ValueError("not an OpenSieve blob")
+        off = 8
+        filters: Dict[str, BloomFilter] = {}
+        for _ in range(n):
+            ln, lb = struct.unpack_from("<II", blob, off)
+            off += 8
+            name = blob[off : off + ln].decode()
+            off += ln
+            filters[name] = BloomFilter.from_bytes(blob[off : off + lb])
+            off += lb
+        sieve = cls.__new__(cls)
+        sieve.policies = tuple(policy_from_name(n) for n in filters)
+        sieve.filters = filters
+        sieve.stats = QueryStats()
+        return sieve
+
+    def encode_cpp_header(self) -> str:
+        """The paper's artifact: a compact generated C++ header embedding the
+        filters (~1 byte of information per problem size once amortised)."""
+        lines = [
+            "// Auto-generated by Open-sieve (Stream-K++ reproduction).",
+            "#pragma once",
+            "#include <cstdint>",
+            "namespace opensieve {",
+        ]
+        for name, f in self.filters.items():
+            arr = ",".join(str(b) for b in f.bits.tobytes())
+            lines += [
+                f"inline constexpr uint32_t {name}_n_bits = {f.n_bits};",
+                f"inline constexpr uint32_t {name}_n_hashes = {f.n_hashes};",
+                f"inline constexpr uint32_t {name}_seed = {f.seed};",
+                f"inline constexpr uint8_t {name}_bits[] = {{{arr}}};",
+            ]
+        lines.append("}  // namespace opensieve")
+        return "\n".join(lines)
+
+    # -- info -----------------------------------------------------------------
+    def summary(self) -> Dict[str, Dict[str, float]]:
+        return {
+            name: {
+                "n_items": f.n_items,
+                "n_bits": f.n_bits,
+                "n_hashes": f.n_hashes,
+                "saturation": f.saturation,
+                "est_fp_rate": f.est_fp_rate,
+            }
+            for name, f in self.filters.items()
+        }

@@ -1,0 +1,147 @@
+"""Runtime kernel selection: Open-sieve query -> candidate policies -> pick.
+
+Dispatch path for a GEMM of local shape (M, N, K):
+  1. Exact tuning-database hit -> return the tuned (policy, config).
+  2. Otherwise query the Bloom filters. Policies answering "definitely
+     absent" are pruned (the paper's headline: up to ~95.8% of evaluations
+     skipped, 100% true-negative rate). Surviving candidates are scored with
+     the fast analytical model and the best wins.
+  3. If every filter says absent (a size the tuner never saw and no filter
+     aliases), fall back to the naive single-policy default the original
+     Stream-K paper proposes — data-parallel — scored against ALL_SK for
+     safety.
+
+Selection happens at *trace time* (shapes are static under jit), so it costs
+nothing at runtime on device; the recorded ``SelectionLog`` is how tests and
+benchmarks introspect dispatch decisions.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import costmodel
+from repro.core.opensieve import OpenSieve
+from repro.core.policies import (
+    ALL_POLICIES,
+    ALL_SK,
+    DEFAULT_TILE_CONFIGS,
+    DP,
+    Policy,
+    TileConfig,
+    policy_from_name,
+)
+from repro.core.tuner import TuningDatabase
+from repro.core.workpart import GemmShape
+
+MNK = Tuple[int, int, int]
+
+
+@dataclass(frozen=True)
+class Selection:
+    policy: Policy
+    cfg: TileConfig
+    source: str  # "tuned" | "sieve" | "fallback"
+    evals: int  # how many (policy) evaluations the scorer performed
+    pruned: int  # how many the Bloom filters eliminated
+
+
+@dataclass
+class SelectorStats:
+    lookups: int = 0
+    tuned_hits: int = 0
+    sieve_hits: int = 0
+    fallbacks: int = 0
+    evals: int = 0
+    pruned: int = 0
+
+    @property
+    def elimination_rate(self) -> float:
+        tot = self.evals + self.pruned
+        return self.pruned / tot if tot else 0.0
+
+
+_CFG_BY_NAME = {c.name: c for c in DEFAULT_TILE_CONFIGS}
+
+
+def _cfg_from_name(name: str) -> TileConfig:
+    if name in _CFG_BY_NAME:
+        return _CFG_BY_NAME[name]
+    bm, bn, bk = (int(x) for x in name.split("x"))
+    return TileConfig(bm, bn, bk)
+
+
+class KernelSelector:
+    def __init__(
+        self,
+        sieve: Optional[OpenSieve] = None,
+        db: Optional[TuningDatabase] = None,
+        mach: costmodel.Machine = costmodel.V5E,
+        policies: Sequence[Policy] = ALL_POLICIES,
+        tile_configs: Sequence[TileConfig] = DEFAULT_TILE_CONFIGS,
+    ):
+        self.sieve = sieve
+        self.db = db
+        self.mach = mach
+        self.policies = tuple(policies)
+        self.tile_configs = tuple(tile_configs)
+        self.stats = SelectorStats()
+        self._cache: Dict[MNK, Selection] = {}
+
+    # -- scoring -----------------------------------------------------------
+    def _score(self, size: MNK, pols: Sequence[Policy]) -> Tuple[Policy, TileConfig, int]:
+        shape = GemmShape(*size)
+        best = None
+        evals = 0
+        for pol in pols:
+            cfg, tf = costmodel.best_config(shape, pol, self.mach, self.tile_configs)
+            evals += 1
+            if best is None or tf > best[2]:
+                best = (pol, cfg, tf)
+        return best[0], best[1], evals
+
+    # -- public ------------------------------------------------------------
+    def select(self, m: int, n: int, k: int) -> Selection:
+        size = (int(m), int(n), int(k))
+        if size in self._cache:
+            return self._cache[size]
+        self.stats.lookups += 1
+
+        sel: Selection
+        if self.db is not None and size in self.db.records:
+            rec = self.db.records[size]
+            sel = Selection(
+                policy=policy_from_name(rec.policy),
+                cfg=_cfg_from_name(rec.cfg),
+                source="tuned",
+                evals=0,
+                pruned=len(self.policies),
+            )
+            self.stats.tuned_hits += 1
+        elif self.sieve is not None:
+            cands = self.sieve.candidates(size)
+            pruned = len(self.policies) - len(cands)
+            if cands:
+                pol, cfg, evals = self._score(size, cands)
+                sel = Selection(pol, cfg, "sieve", evals, pruned)
+                self.stats.sieve_hits += 1
+            else:
+                pol, cfg, evals = self._score(size, (DP, ALL_SK))
+                sel = Selection(pol, cfg, "fallback", evals, pruned)
+                self.stats.fallbacks += 1
+        else:
+            pol, cfg, evals = self._score(size, self.policies)
+            sel = Selection(pol, cfg, "fallback", evals, 0)
+            self.stats.fallbacks += 1
+
+        self.stats.evals += sel.evals
+        self.stats.pruned += sel.pruned
+        self._cache[size] = sel
+        return sel
+
+
+def default_selector() -> KernelSelector:
+    """Selector with no tuning artifacts: pure cost-model scoring over all
+    policies (used by models when no tuned database is supplied)."""
+    return KernelSelector(sieve=None, db=None)

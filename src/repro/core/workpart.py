@@ -1,0 +1,296 @@
+"""Work-centric GEMM partitioning (Algorithm 1 of the paper, generalised to
+the seven Stream-K++ policies).
+
+All of this is *static* integer math over (M, N, K, tile config, grid size,
+policy): given those, every workgroup's iteration range, every tile's set of
+contributing workgroups, and the fix-up plan are fully determined at trace /
+compile time. That is what lets the TPU adaptation replace GPU atomics with a
+deterministic two-phase reduction — the fix-up schedule is a compile-time
+constant table, not a runtime discovery.
+
+Glossary (matches Algorithm 1):
+  iters_per_tile = ceil(K / BK)           (k-iterations per output tile)
+  total_iters    = n_tiles * iters_per_tile
+  g              = grid size (number of persistent workgroups / Pallas
+                   programs); on TPU this is the virtual-lane count.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Tuple
+
+from repro.core.policies import ALL_SK, DP, Policy, PolicyKind, TileConfig
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclass(frozen=True)
+class GemmShape:
+    m: int
+    n: int
+    k: int
+
+    def __post_init__(self):
+        if min(self.m, self.n, self.k) < 1:
+            raise ValueError(f"degenerate GEMM shape {self}")
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.m * self.n * self.k
+
+    def key(self) -> Tuple[int, int, int]:
+        return (self.m, self.n, self.k)
+
+
+@dataclass(frozen=True)
+class WorkRange:
+    """A contiguous range of flattened MAC iterations owned by one workgroup."""
+
+    wg: int
+    start: int  # inclusive, in flattened iteration space
+    end: int  # exclusive
+
+    @property
+    def size(self) -> int:
+        return self.end - self.start
+
+
+@dataclass(frozen=True)
+class TileContribution:
+    """Which workgroups contribute to one output tile in the SK region.
+
+    ``first_wg..last_wg`` is always contiguous because workgroup iteration
+    ranges are contiguous and sorted — the property the fix-up kernel relies
+    on to reduce partials with a static gather.
+    """
+
+    tile: int
+    first_wg: int
+    last_wg: int  # inclusive
+
+    @property
+    def num_contributors(self) -> int:
+        return self.last_wg - self.first_wg + 1
+
+    @property
+    def is_split(self) -> bool:
+        return self.num_contributors > 1
+
+
+@dataclass(frozen=True)
+class Partition:
+    """Complete static schedule for one (shape, tile config, g, policy)."""
+
+    shape: GemmShape
+    cfg: TileConfig
+    g: int
+    policy: Policy
+    m_tiles: int
+    n_tiles: int
+    iters_per_tile: int
+    sk_tiles: int  # tiles [0, sk_tiles) are Stream-K; rest data-parallel
+    sk_ranges: Tuple[WorkRange, ...]
+    contributions: Tuple[TileContribution, ...]  # one per SK tile
+
+    @property
+    def n_tiles_total(self) -> int:
+        return self.m_tiles * self.n_tiles
+
+    @property
+    def dp_tiles(self) -> int:
+        return self.n_tiles_total - self.sk_tiles
+
+    @property
+    def dp_waves(self) -> int:
+        return cdiv(self.dp_tiles, self.g)
+
+    @property
+    def sk_total_iters(self) -> int:
+        return self.sk_tiles * self.iters_per_tile
+
+    @property
+    def n_split_tiles(self) -> int:
+        return sum(1 for c in self.contributions if c.is_split)
+
+    @property
+    def max_contributors(self) -> int:
+        return max((c.num_contributors for c in self.contributions), default=1)
+
+    def tile_mn(self, tile: int) -> Tuple[int, int]:
+        """Output-tile coordinates for a flattened tile index (row-major)."""
+        return tile // self.n_tiles, tile % self.n_tiles
+
+
+def sk_tile_count(n_tiles_total: int, g: int, policy: Policy) -> int:
+    """How many output tiles the Stream-K region covers under a policy.
+
+    HYBRID(1) covers exactly the quantized remainder wave ("data-parallel
+    followed by one-batch Stream-K" in the original paper, except Stream-K++
+    schedules the SK region FIRST). HYBRID(b) additionally converts ``b-1``
+    full waves. When the tile count divides the grid evenly there is no
+    remainder pathology, so HYBRID(b) converts ``b-1`` full waves only.
+    """
+    if policy.kind == PolicyKind.DP:
+        return 0
+    if policy.kind == PolicyKind.ALL_SK:
+        return n_tiles_total
+    rem = n_tiles_total % g
+    base = rem if rem else 0
+    extra = (policy.sk_batches - 1) * g
+    return min(n_tiles_total, base + extra)
+
+
+def partition(
+    shape: GemmShape, cfg: TileConfig, g: int, policy: Policy
+) -> Partition:
+    """Build the full static schedule (Algorithm 1 lines 2-13, both regions)."""
+    if g < 1:
+        raise ValueError("grid size must be >= 1")
+    m_tiles = cdiv(shape.m, cfg.bm)
+    n_tiles = cdiv(shape.n, cfg.bn)
+    ipt = cdiv(shape.k, cfg.bk)
+    n_total = m_tiles * n_tiles
+
+    sk_tiles = sk_tile_count(n_total, g, policy)
+    sk_total = sk_tiles * ipt
+
+    # Algorithm 1 line 4: iters_per_wg = ceil(total_iters / g); workgroup x
+    # owns [x*ipw, min((x+1)*ipw, total)). Workgroups past the end own nothing.
+    ranges: List[WorkRange] = []
+    if sk_total:
+        ipw = cdiv(sk_total, g)
+        for x in range(g):
+            s = min(x * ipw, sk_total)
+            e = min(s + ipw, sk_total)
+            ranges.append(WorkRange(x, s, e))
+    else:
+        ranges = [WorkRange(x, 0, 0) for x in range(g)]
+
+    # Static contribution table: tile t spans flattened iterations
+    # [t*ipt, (t+1)*ipt); its contributors are the wgs whose range intersects.
+    contribs: List[TileContribution] = []
+    if sk_total:
+        ipw = cdiv(sk_total, g)
+        for t in range(sk_tiles):
+            t0, t1 = t * ipt, (t + 1) * ipt
+            first = t0 // ipw
+            last = (t1 - 1) // ipw
+            contribs.append(TileContribution(t, first, last))
+    return Partition(
+        shape=shape,
+        cfg=cfg,
+        g=g,
+        policy=policy,
+        m_tiles=m_tiles,
+        n_tiles=n_tiles,
+        iters_per_tile=ipt,
+        sk_tiles=sk_tiles,
+        sk_ranges=tuple(ranges),
+        contributions=tuple(contribs),
+    )
+
+
+def validate_partition(p: Partition) -> None:
+    """Invariants the hypothesis tests drive; raises AssertionError on breach.
+
+    1. SK ranges tile [0, sk_total_iters) exactly (disjoint, complete, sorted).
+    2. Load balance: every non-empty range has ceil(sk_total/g) iters except
+       possibly the last non-empty one.
+    3. Every SK tile's contributor span is contiguous & within [0, g).
+    4. Tile regions partition the tile index space: sk + dp == total.
+    """
+    total = p.sk_total_iters
+    cursor = 0
+    ipw = cdiv(total, p.g) if total else 0
+    for r in p.sk_ranges:
+        assert r.start == min(cursor, total), (r, cursor)
+        assert r.end >= r.start
+        assert r.size <= ipw
+        cursor = r.end if r.size else cursor
+    assert cursor == total, (cursor, total)
+    for c in p.contributions:
+        assert 0 <= c.first_wg <= c.last_wg < p.g
+        # every contributor in the span genuinely intersects the tile
+        t0, t1 = c.tile * p.iters_per_tile, (c.tile + 1) * p.iters_per_tile
+        for wg in range(c.first_wg, c.last_wg + 1):
+            r = p.sk_ranges[wg]
+            assert max(r.start, t0) < min(r.end, t1), (c, r)
+    assert 0 <= p.sk_tiles <= p.n_tiles_total
+    assert p.sk_tiles + p.dp_tiles == p.n_tiles_total
+
+
+@dataclass(frozen=True)
+class PartitionStats:
+    """O(g) aggregate view of a partition — everything the cost model needs
+    without materialising per-tile contribution lists (the full
+    ``partition`` is O(tiles) and exists for the kernels; hypothesis tests
+    assert these aggregates agree with it)."""
+
+    m_tiles: int
+    n_tiles: int
+    iters_per_tile: int
+    n_tiles_total: int
+    sk_tiles: int
+    sk_total_iters: int
+    dp_tiles: int
+    dp_waves: int
+    n_split_tiles: int
+    extra_contributors: int  # sum over tiles of (num_contributors - 1)
+
+
+def partition_stats(
+    shape: GemmShape, cfg: TileConfig, g: int, policy: Policy
+) -> PartitionStats:
+    m_tiles = cdiv(shape.m, cfg.bm)
+    n_tiles = cdiv(shape.n, cfg.bn)
+    ipt = cdiv(shape.k, cfg.bk)
+    n_total = m_tiles * n_tiles
+    sk_tiles = sk_tile_count(n_total, g, policy)
+    sk_total = sk_tiles * ipt
+    dp_tiles = n_total - sk_tiles
+    dp_waves = cdiv(dp_tiles, g)
+
+    n_split = extra = 0
+    if sk_total:
+        ipw = cdiv(sk_total, g)
+        n_ranges = cdiv(sk_total, ipw)
+        split_tiles = set()
+        for j in range(1, n_ranges):
+            b = j * ipw  # interior boundary between wg j-1 and j
+            if b % ipt:
+                split_tiles.add(b // ipt)
+                extra += 1
+        n_split = len(split_tiles)
+    return PartitionStats(
+        m_tiles=m_tiles,
+        n_tiles=n_tiles,
+        iters_per_tile=ipt,
+        n_tiles_total=n_total,
+        sk_tiles=sk_tiles,
+        sk_total_iters=sk_total,
+        dp_tiles=dp_tiles,
+        dp_waves=dp_waves,
+        n_split_tiles=n_split,
+        extra_contributors=extra,
+    )
+
+
+def iter_to_tile(it: int, iters_per_tile: int) -> Tuple[int, int]:
+    """Algorithm 1 lines 9-12: flattened iteration -> (tile index, local k-iter)."""
+    return it // iters_per_tile, it % iters_per_tile
+
+
+def wave_quantization_efficiency(n_tiles: int, lanes: int) -> float:
+    """Utilization of a pure data-parallel schedule: tiles / (waves * lanes).
+
+    This is the inefficiency Stream-K attacks — e.g. 9 tiles on 8 lanes run
+    in 2 waves at 56% utilization.
+    """
+    if n_tiles == 0:
+        return 1.0
+    waves = cdiv(n_tiles, lanes)
+    return n_tiles / (waves * lanes)

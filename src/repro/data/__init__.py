@@ -1,0 +1,3 @@
+from repro.data.pipeline import PipelineState, SyntheticLMData, input_specs
+
+__all__ = ["PipelineState", "SyntheticLMData", "input_specs"]

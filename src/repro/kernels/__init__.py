@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes:
+
+  * ``streamk``  -- the Stream-K++ work-centric GEMM (all seven policies),
+  * ``dp``       -- the conventional data-parallel tiled GEMM baseline,
+  * ``splitk``   -- the split-K baseline Stream-K generalises.
+
+Each subpackage ships the raw ``pl.pallas_call`` kernel, an ``ops.py`` jit'd
+wrapper (padding, partition plumbing, fix-up composition) and a ``ref.py``
+pure-jnp oracle the tests assert against.
+"""

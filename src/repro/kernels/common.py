@@ -1,0 +1,52 @@
+"""Shared helpers for the Pallas GEMM kernels."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.workpart import cdiv
+
+
+def pad_to(x, mults):
+    """Zero-pad each dim of ``x`` up to a multiple of ``mults``. Zero padding
+    is exact for GEMM (contributes 0 to every dot product)."""
+    pads = []
+    needs = False
+    for dim, mult in zip(x.shape, mults):
+        target = cdiv(dim, mult) * mult
+        pads.append((0, target - dim))
+        needs = needs or target != dim
+    return jnp.pad(x, pads) if needs else x
+
+
+def unpad(x, shape):
+    """Slice back to an original (unpadded) shape."""
+    if tuple(x.shape) == tuple(shape):
+        return x
+    slices = tuple(slice(0, d) for d in shape)
+    return x[slices]
+
+
+import jax
+
+
+EPILOGUES = ("none", "relu", "silu", "gelu", "square")
+
+
+def apply_epilogue(acc, epilogue: str):
+    """Activation epilogue applied to the f32 accumulator before the final
+    cast/store — the Composable-Kernel-style fusion the paper's library is
+    built from (CK composes GEMM + epilogue functors; ours compose the same
+    way on the fix-up/flush path, so the activation costs zero extra HBM
+    round-trips)."""
+    if epilogue == "none":
+        return acc
+    if epilogue == "relu":
+        return jax.numpy.maximum(acc, 0.0)
+    if epilogue == "silu":
+        return jax.nn.silu(acc)
+    if epilogue == "gelu":
+        return jax.nn.gelu(acc)
+    if epilogue == "square":  # squared-ReLU (nemotron-4 MLP)
+        return jax.numpy.square(jax.numpy.maximum(acc, 0.0))
+    raise ValueError(f"unknown epilogue {epilogue!r}")

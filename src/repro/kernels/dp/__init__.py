@@ -1,0 +1,4 @@
+from repro.kernels.dp import ops, ref
+from repro.kernels.dp.dp_gemm import dp_gemm_region
+
+__all__ = ["ops", "ref", "dp_gemm_region"]

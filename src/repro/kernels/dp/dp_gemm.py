@@ -1,0 +1,120 @@
+"""Conventional data-parallel tiled GEMM (the paper's comparison baseline),
+as a Pallas TPU kernel.
+
+Grid ``(n_region_tiles, iters_per_tile)``: the first dimension walks output
+tiles (optionally starting at ``tile_offset`` — that is how the Stream-K++
+HYBRID policies run their data-parallel region over tiles the Stream-K sweep
+did not claim), the second streams the K dimension. The f32 accumulator
+lives in VMEM scratch and is copied into the output block on the last
+k-step, so the C dtype can be narrower than the accumulator.
+
+With ``tile_offset > 0`` the kernel runs with ``input_output_aliases`` so the
+tiles it does not visit keep the values already present in the aliased C
+buffer (the fixed-up Stream-K tiles).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.policies import TileConfig
+from repro.core.workpart import cdiv
+from repro.kernels.common import apply_epilogue
+
+
+def _dp_kernel(a_ref, b_ref, c_ref, acc_ref, *, ipt: int, epilogue: str = "none"):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == ipt - 1)
+    def _flush():
+        c_ref[...] = apply_epilogue(acc_ref[...], epilogue).astype(c_ref.dtype)
+
+
+def _dp_kernel_aliased(
+    a_ref, b_ref, c_in_ref, c_ref, acc_ref, *, ipt: int, epilogue: str = "none"
+):
+    # identical, but carries the aliased C input so unvisited tiles survive.
+    _dp_kernel(a_ref, b_ref, c_ref, acc_ref, ipt=ipt, epilogue=epilogue)
+
+
+def dp_gemm_region(
+    a,
+    b,
+    cfg: TileConfig,
+    *,
+    tile_offset: int = 0,
+    c_init=None,
+    out_dtype=None,
+    interpret: bool = False,
+    epilogue: str = "none",
+):
+    """Tiled GEMM over output tiles [tile_offset, m_tiles*n_tiles).
+
+    a: (Mp, Kp), b: (Kp, Np) — already padded to tile multiples.
+    ``c_init``: existing C buffer whose tiles < tile_offset must be kept
+    (required iff tile_offset > 0).
+    """
+    mp, kp = a.shape
+    kp2, np_ = b.shape
+    assert kp == kp2, (a.shape, b.shape)
+    m_tiles, n_tiles = mp // cfg.bm, np_ // cfg.bn
+    ipt = kp // cfg.bk
+    n_total = m_tiles * n_tiles
+    n_region = n_total - tile_offset
+    assert n_region > 0, "empty DP region"
+    out_dtype = out_dtype or a.dtype
+
+    def tm(i):
+        return (i + tile_offset) // n_tiles
+
+    def tn(i):
+        return (i + tile_offset) % n_tiles
+
+    a_spec = pl.BlockSpec((cfg.bm, cfg.bk), lambda i, k: (tm(i), k))
+    b_spec = pl.BlockSpec((cfg.bk, cfg.bn), lambda i, k: (k, tn(i)))
+    c_spec = pl.BlockSpec((cfg.bm, cfg.bn), lambda i, k: (tm(i), tn(i)))
+    scratch = [pltpu.VMEM((cfg.bm, cfg.bn), jnp.float32)]
+    params = pltpu.CompilerParams(
+        dimension_semantics=(pltpu.PARALLEL, pltpu.ARBITRARY)
+    )
+    out_shape = jax.ShapeDtypeStruct((mp, np_), out_dtype)
+
+    if tile_offset == 0:
+        kernel = functools.partial(_dp_kernel, ipt=ipt, epilogue=epilogue)
+        return pl.pallas_call(
+            kernel,
+            grid=(n_region, ipt),
+            in_specs=[a_spec, b_spec],
+            out_specs=c_spec,
+            out_shape=out_shape,
+            scratch_shapes=scratch,
+            interpret=interpret,
+            compiler_params=params,
+            name=f"dp_gemm_{cfg.name}",
+        )(a, b)
+
+    assert c_init is not None, "tile_offset > 0 requires c_init"
+    kernel = functools.partial(_dp_kernel_aliased, ipt=ipt, epilogue=epilogue)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_region, ipt),
+        in_specs=[a_spec, b_spec, c_spec],
+        out_specs=c_spec,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        input_output_aliases={2: 0},
+        interpret=interpret,
+        compiler_params=params,
+        name=f"dp_gemm_region_{cfg.name}",
+    )(a, b, c_init.astype(out_dtype))

@@ -1,0 +1,32 @@
+"""jit'd wrapper for the data-parallel tiled GEMM baseline."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core.policies import TileConfig
+from repro.kernels.common import pad_to, unpad
+from repro.kernels.dp.dp_gemm import dp_gemm_region
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret", "out_dtype"))
+def gemm(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    cfg: TileConfig = TileConfig(128, 128, 128),
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """``a @ b`` with the conventional output-tile decomposition."""
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"bad gemm operands {a.shape} @ {b.shape}")
+    m, _ = a.shape
+    _, n = b.shape
+    out_dtype = out_dtype or a.dtype
+    ap = pad_to(a, (cfg.bm, cfg.bk))
+    bp = pad_to(b, (cfg.bk, cfg.bn))
+    cp = dp_gemm_region(ap, bp, cfg, out_dtype=out_dtype, interpret=interpret)
+    return unpad(cp, (m, n))

@@ -1,0 +1,4 @@
+from repro.kernels.splitk import ops, ref
+from repro.kernels.splitk.splitk_gemm import splitk_partials
+
+__all__ = ["ops", "ref", "splitk_partials"]

@@ -1,0 +1,38 @@
+"""jit'd wrapper for the split-K baseline."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policies import TileConfig
+from repro.core.workpart import cdiv
+from repro.kernels.common import pad_to, unpad
+from repro.kernels.splitk.splitk_gemm import splitk_partials
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "s", "interpret", "out_dtype"))
+def gemm(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    cfg: TileConfig = TileConfig(128, 128, 128),
+    s: int = 2,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """``a @ b`` with a fixed split-K factor ``s``."""
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"bad gemm operands {a.shape} @ {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+    out_dtype = out_dtype or a.dtype
+    # pad K so that the k-iteration count divides s
+    k_unit = cfg.bk * s
+    ap = pad_to(a, (cfg.bm, k_unit))
+    bp = pad_to(b, (k_unit, cfg.bn))
+    parts = splitk_partials(ap, bp, cfg, s, interpret=interpret)
+    cp = jnp.sum(parts, axis=0).astype(out_dtype)
+    return unpad(cp, (m, n))

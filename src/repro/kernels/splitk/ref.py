@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the split-K baseline."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gemm_ref(a, b, out_dtype=None):
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)

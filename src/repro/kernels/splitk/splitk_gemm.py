@@ -1,0 +1,74 @@
+"""Split-K GEMM Pallas kernel — the pre-Stream-K strategy (§2 of the paper):
+the K dimension is split by a *fixed* factor ``s`` and each split's partial
+C is reduced afterwards. Stream-K generalises this (the split adapts to the
+work instead of being a fixed hyper-parameter); it is implemented here as a
+baseline the benchmarks compare against.
+
+Grid ``(m_tiles * n_tiles, s, k_per_split)``: each (tile, split) pair
+accumulates its K-range into ``partials[s]``; the wrapper reduces over
+``s`` (a tiny XLA reduction, exactly the "separate partial result
+accumulation step" the paper describes split-K needing).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.policies import TileConfig
+
+
+def _splitk_kernel(a_ref, b_ref, p_ref, acc_ref, *, kps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == kps - 1)
+    def _flush():
+        p_ref[0] = acc_ref[...]
+
+
+def splitk_partials(a, b, cfg: TileConfig, s: int, *, interpret: bool = False):
+    """Returns partials (s, Mp, Np) f32; caller reduces over axis 0.
+
+    a, b already padded; K must split into s * k_per_split * bk.
+    """
+    mp, kp = a.shape
+    _, np_ = b.shape
+    m_tiles, n_tiles = mp // cfg.bm, np_ // cfg.bn
+    ipt = kp // cfg.bk
+    assert ipt % s == 0, "split factor must divide k-iterations"
+    kps = ipt // s
+
+    def tm(i):
+        return i // n_tiles
+
+    def tn(i):
+        return i % n_tiles
+
+    return pl.pallas_call(
+        functools.partial(_splitk_kernel, kps=kps),
+        grid=(m_tiles * n_tiles, s, kps),
+        in_specs=[
+            pl.BlockSpec((cfg.bm, cfg.bk), lambda i, sp, k: (tm(i), sp * kps + k)),
+            pl.BlockSpec((cfg.bk, cfg.bn), lambda i, sp, k: (sp * kps + k, tn(i))),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, cfg.bm, cfg.bn), lambda i, sp, k: (sp, tm(i), tn(i))
+        ),
+        out_shape=jax.ShapeDtypeStruct((s, mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((cfg.bm, cfg.bn), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL, pltpu.ARBITRARY)
+        ),
+        name=f"splitk_gemm_{cfg.name}_s{s}",
+    )(a, b)

@@ -1,0 +1,4 @@
+from repro.kernels.streamk import ops, ref
+from repro.kernels.streamk.streamk_gemm import streamk_fixup, streamk_phase1
+
+__all__ = ["ops", "ref", "streamk_fixup", "streamk_phase1"]

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the Stream-K++ GEMM.
+
+The result of any scheduling policy must equal a plain f32-accumulated
+matmul — scheduling is performance-only, never semantics. The tests sweep
+every policy x shape x dtype against this.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gemm_ref(a, b, out_dtype=None):
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def streamk_partition_ref(a, b, part):
+    """Emulates Algorithm 1 in pure numpy-style jnp: computes each
+    workgroup's partial contributions independently and reduces them — the
+    oracle for the *partials workspace* itself (not just the final C).
+
+    Returns (partials[sk_tiles, max_contrib+1, bm, bn], c_sk[sk_tiles, bm, bn]).
+    """
+    import numpy as np
+
+    cfg = part.cfg
+    ipt = part.iters_per_tile
+    mc = part.max_contributors
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    partials = np.zeros((part.sk_tiles, mc + 1, cfg.bm, cfg.bn), np.float32)
+    for r in part.sk_ranges:
+        for it in range(r.start, r.end):
+            tile, local_k = it // ipt, it % ipt
+            tm, tn = part.tile_mn(tile)
+            first_wg = (tile * ipt) // (max(1, -(-part.sk_total_iters // part.g)))
+            slot = min(max(r.wg - first_wg, 0), mc - 1)
+            a_blk = a[tm * cfg.bm : (tm + 1) * cfg.bm, local_k * cfg.bk : (local_k + 1) * cfg.bk]
+            b_blk = b[local_k * cfg.bk : (local_k + 1) * cfg.bk, tn * cfg.bn : (tn + 1) * cfg.bn]
+            partials[tile, slot] += a_blk @ b_blk
+    c_sk = partials.sum(axis=1)
+    return jnp.asarray(partials), jnp.asarray(c_sk)

@@ -1,0 +1,451 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent without
+hardware.
+
+For every (architecture x input-shape x mesh) cell this lowers + compiles
+the real step function (train_step for train shapes, prefill/serve steps for
+inference shapes) against ShapeDtypeStruct stand-ins — no allocation — and
+records:
+
+  * ``memory_analysis``  (per-device bytes: does it fit a 16 GiB v5e?),
+  * ``cost_analysis``    (HLO FLOPs + bytes for the roofline),
+  * collective-traffic accounting parsed from the per-device HLO,
+  * the Stream-K++ dispatch log (which policy every GEMM selected).
+
+Artifacts land in ``artifacts/dryrun/<arch>__<shape>__<mesh>[__variant].json``
+and are consumed by ``benchmarks/roofline.py`` and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  python -m repro.launch.dryrun --arch granite-8b --shape decode_32k --multi-pod
+  python -m repro.launch.dryrun --all            # every cell, both meshes
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
+
+
+def rules_for_cell(cfg, shape, mesh) -> Dict[str, Any]:
+    """Cell-specific sharding-rule overrides (decode caches are the
+    interesting case: shard kv-heads over 'model' when divisible, else the
+    kv sequence dim; long_500k's batch=1 lets kv_seq absorb the batch axes)."""
+    rules: Dict[str, Any] = {}
+    model_n = mesh.shape["model"]
+    if shape.kind == "train":
+        # Megatron-style sequence parallelism for the residual stream: the
+        # per-layer remat saves shard over 'model', cutting the dominant
+        # activation-memory term by the TP degree.
+        rules["seq"] = "model"
+    if shape.kind == "decode":
+        if cfg.n_kv_heads and cfg.n_kv_heads % model_n == 0:
+            rules["kv_heads"] = "model"
+            rules["kv_seq"] = ("pod", "data")
+        else:
+            rules["kv_heads"] = None
+            rules["kv_seq"] = ("pod", "data", "model")
+    return rules
+
+
+def _input_axes(cfg, shape) -> Dict[str, tuple]:
+    if shape.kind == "train":
+        axes = {
+            "tokens": ("batch", None),
+            "labels": ("batch", None),
+            "loss_mask": ("batch", None),
+        }
+    elif shape.kind == "prefill":
+        axes = {"tokens": ("batch", None)}
+    else:
+        axes = {"tokens": ("batch", None), "cur_pos": ("batch",)}
+    if cfg.family == "vlm" and shape.kind != "decode":
+        axes["patch_embeds"] = ("batch", None, None)
+    if cfg.family == "encdec" and shape.kind != "decode":
+        axes["frames"] = ("batch", "frames", None)
+    return axes
+
+
+def _applied_divisor(plan, aspec, dim_index=0) -> int:
+    spec = plan.spec_for(aspec)
+    part = spec[dim_index] if dim_index < len(spec) else None
+    if part is None:
+        return 1
+    axes = (part,) if isinstance(part, str) else part
+    d = 1
+    for a in axes:
+        d *= plan.mesh.shape[a]
+    return d
+
+
+def _bf16_shadow_bytes(hlo_text: str, min_bytes: int = 1 << 26) -> int:
+    """Bytes of f32 buffers that are dtype-promoted copies of bf16 buffers
+    (same dims, both present) — the XLA:CPU bf16-emulation artifact."""
+    import re as _re
+    import math as _math
+
+    f32 = set()
+    bf16 = set()
+    for m in _re.finditer(r"\b(f32|bf16)\[([0-9,]+)\]", hlo_text):
+        dims = tuple(int(x) for x in m.group(2).split(","))
+        (f32 if m.group(1) == "f32" else bf16).add(dims)
+    total = 0
+    for dims in f32 & bf16:
+        sz = 4 * _math.prod(dims)
+        if sz >= min_bytes:
+            total += sz
+    return total
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    variant: str = "baseline",
+    extra_rules: Optional[Dict[str, Any]] = None,
+    mesh_shape: Optional[tuple] = None,
+    microbatches: int = 1,
+    config_overrides: Optional[Dict[str, Any]] = None,
+    optimizer_name: str = "adamw",
+) -> Dict[str, Any]:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import get_config
+    from repro.core.gemm import gemm_context
+    from repro.core.selector import default_selector
+    from repro.data.pipeline import input_specs
+    from repro.dist.hlo import parse_collectives
+    from repro.dist.hlo_cost import analyze as hlo_analyze
+    from repro.dist.sharding import ArraySpec, ShardingPlan, abstract_tree, use_plan
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import SHAPES_BY_NAME, applicable_shapes, build_model
+    from repro.optim import AdamW, constant, make_optimizer
+    from repro.train import make_train_step
+
+    import dataclasses
+
+    cfg = get_config(arch)
+    if config_overrides:
+        cfg = dataclasses.replace(cfg, **config_overrides)
+    shape = SHAPES_BY_NAME[shape_name]
+    if shape not in applicable_shapes(cfg):
+        return {
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": "multi_pod" if multi_pod else "single_pod",
+            "variant": variant,
+            "status": "skipped",
+            "reason": "shape not applicable (see DESIGN.md §Arch-applicability)",
+        }
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod, shape=mesh_shape)
+    rules = rules_for_cell(cfg, shape, mesh)
+    if extra_rules:
+        rules.update(extra_rules)
+    plan = ShardingPlan(mesh, rules)
+    model = build_model(cfg)
+
+    specs = model.param_specs()
+    params_abs = abstract_tree(specs)
+    param_sh = plan.tree_shardings(specs)
+    repl = NamedSharding(mesh, P())
+
+    # gemm dispatch divisors: what one shard's MXU sees
+    ins = input_specs(cfg, shape)
+    in_axes = _input_axes(cfg, shape)
+    tok_spec = ArraySpec(
+        tuple(ins["tokens"].shape), "int32", in_axes["tokens"]
+    )
+    div = {
+        "batch": _applied_divisor(plan, tok_spec, 0),
+        "model": mesh.shape["model"],
+    }
+
+    input_sh = {
+        k: NamedSharding(
+            mesh,
+            plan.spec_for(ArraySpec(tuple(v.shape), str(v.dtype), in_axes[k])),
+        )
+        for k, v in ins.items()
+    }
+
+    selector = default_selector()
+    with gemm_context(selector=selector) as ctx, use_plan(plan):
+        if shape.kind == "train":
+            optimizer = make_optimizer(optimizer_name, constant(1e-4))
+            step_fn = make_train_step(model, optimizer, div=div, microbatches=microbatches)
+            opt_abs = jax.eval_shape(optimizer.init, params_abs)
+            state_abs = {
+                "params": params_abs,
+                "opt": opt_abs,
+                "step": jax.ShapeDtypeStruct((), jnp.int32),
+            }
+            # optimizer-state shardings: subtrees mirroring the param tree
+            # (mu/nu/master/vel) inherit the param shardings; factored
+            # moments (Adafactor) and counters are replicated (they are
+            # O(m+n) — negligible)
+            state_sh_opt = {}
+            for key, sub in opt_abs.items():
+                if jax.tree.structure(sub) == jax.tree.structure(params_abs):
+                    state_sh_opt[key] = param_sh
+                else:
+                    state_sh_opt[key] = jax.tree.map(lambda _: repl, sub)
+            state_sh = {
+                "params": param_sh,
+                "opt": state_sh_opt,
+                "step": repl,
+            }
+            out_struct = jax.eval_shape(step_fn, state_abs, ins)
+            out_sh = (
+                state_sh,
+                jax.tree.map(lambda _: repl, out_struct[1]),
+            )
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(state_sh, input_sh),
+                out_shardings=out_sh,
+                donate_argnums=(0,),
+            ).lower(state_abs, ins)
+        else:
+            cache_specs = model.cache_specs(shape.global_batch, shape.seq_len)
+            cache_sh = plan.tree_shardings(cache_specs)
+            logits_sh = NamedSharding(
+                mesh,
+                plan.spec_for(
+                    ArraySpec(
+                        (shape.global_batch, 1, cfg.vocab_size),
+                        "float32",
+                        ("batch", None, "vocab"),
+                    )
+                ),
+            )
+            if shape.kind == "prefill":
+                if cfg.family == "encdec":
+
+                    def prefill_fn(params, inputs):
+                        return model.prefill(
+                            params,
+                            inputs["frames"],
+                            inputs["tokens"],
+                            max_seq=shape.seq_len,
+                            div=div,
+                        )
+
+                else:
+
+                    def prefill_fn(params, inputs):
+                        kw = {}
+                        if "patch_embeds" in inputs:
+                            kw["patch_embeds"] = inputs["patch_embeds"]
+                        return model.prefill(
+                            params,
+                            inputs["tokens"],
+                            max_seq=shape.seq_len,
+                            div=div,
+                            **kw,
+                        )
+
+                lowered = jax.jit(
+                    prefill_fn,
+                    in_shardings=(param_sh, input_sh),
+                    out_shardings=(logits_sh, cache_sh),
+                ).lower(params_abs, ins)
+            else:  # decode
+                cache_abs = abstract_tree(cache_specs)
+
+                def decode_fn(params, cache, inputs):
+                    return model.decode_step(
+                        params, cache, inputs["tokens"], inputs["cur_pos"], div=div
+                    )
+
+                lowered = jax.jit(
+                    decode_fn,
+                    in_shardings=(param_sh, cache_sh, input_sh),
+                    out_shardings=(logits_sh, cache_sh),
+                    donate_argnums=(1,),
+                ).lower(params_abs, cache_abs, ins)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    shadow = _bf16_shadow_bytes(hlo)
+    loop_cost = hlo_analyze(hlo)  # loop-aware: multiplies while bodies
+
+    # dispatch log summary: unique local GEMMs and their selections
+    dispatch = {}
+    for e in ctx.log:
+        key = f"{e.tag}:{e.local_mnk}"
+        if key not in dispatch:
+            dispatch[key] = {
+                "local_mnk": list(e.local_mnk),
+                "policy": e.selection.policy.name,
+                "cfg": e.selection.cfg.name,
+                "source": e.selection.source,
+            }
+
+    def _mem(name):
+        v = getattr(mem, name, None)
+        return int(v) if v is not None else None
+
+    artifact = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi_pod" if multi_pod else "single_pod",
+        "variant": variant,
+        "status": "ok",
+        "n_devices": mesh.devices.size,
+        "mesh_shape": {k: int(v) for k, v in mesh.shape.items()},
+        "timings_s": {"lower": round(t_lower, 1), "compile": round(t_compile, 1)},
+        "memory": {
+            "argument_size": _mem("argument_size_in_bytes"),
+            "output_size": _mem("output_size_in_bytes"),
+            "temp_size": _mem("temp_size_in_bytes"),
+            # XLA:CPU emulates bf16 by materialising f32 copies of large
+            # bf16 buffers; a TPU backend would not allocate these. We
+            # report the raw number AND the shadow-adjusted estimate.
+            "cpu_bf16_shadow_size": shadow,
+            "temp_size_tpu_estimate": max(0, (_mem("temp_size_in_bytes") or 0) - shadow),
+            "generated_code_size": _mem("generated_code_size_in_bytes"),
+            "alias_size": _mem("alias_size_in_bytes"),
+        },
+        "cost": {k: float(v) for k, v in (cost or {}).items() if isinstance(v, (int, float))},
+        # loop-aware re-analysis (XLA cost_analysis counts while bodies once)
+        "loop_cost": {
+            "flops": loop_cost.flops,
+            "bytes": loop_cost.bytes,
+            "collective_bytes": loop_cost.coll_bytes,
+            "collective_counts": loop_cost.coll_counts,
+        },
+        "collectives": coll.summary(),
+        "collective_bytes": coll.total_bytes,
+        "hlo_bytes": len(hlo),
+        "dispatch": dispatch,
+        "params": {
+            "total": cfg.param_count(),
+            "active": cfg.active_param_count(),
+        },
+        "config": {
+            "rules": {k: list(v) if isinstance(v, tuple) else v for k, v in rules.items()},
+            "div": div,
+            "mesh_shape_override": list(mesh_shape) if mesh_shape else None,
+            "microbatches": microbatches,
+            "overrides": config_overrides or {},
+        },
+    }
+    return artifact
+
+
+def run_one(args) -> int:
+    art = lower_cell(
+        args.arch, args.shape, args.multi_pod, args.variant,
+        extra_rules=json.loads(args.rules) if args.rules else None,
+        mesh_shape=tuple(int(x) for x in args.mesh_shape.split(",")) if args.mesh_shape else None,
+        microbatches=args.microbatches,
+        config_overrides=json.loads(args.overrides) if args.overrides else None,
+        optimizer_name=args.optimizer,
+    )
+    os.makedirs(args.out_dir, exist_ok=True)
+    name = f"{args.arch}__{args.shape}__{art['mesh']}"
+    if args.variant != "baseline":
+        name += f"__{args.variant}"
+    path = os.path.join(args.out_dir, name + ".json")
+    with open(path, "w") as f:
+        json.dump(art, f, indent=1)
+    if art["status"] == "ok":
+        print(f"[dryrun] OK {name}: compile {art['timings_s']['compile']}s")
+        mem = art["memory"]
+        print(f"  memory_analysis: args={mem['argument_size']} temp={mem['temp_size']} out={mem['output_size']}")
+        print(f"  cost_analysis: flops={art['cost'].get('flops')} collective_bytes={art['collective_bytes']:.3e}")
+    else:
+        print(f"[dryrun] SKIP {name}: {art.get('reason')}")
+    return 0
+
+
+def run_all(args) -> int:
+    """Every (arch x shape x mesh) cell, each in a fresh subprocess (clean
+    XLA state, bounded memory); resumable — completed artifacts are skipped."""
+    from repro.configs import list_archs
+    from repro.models import ALL_SHAPES
+
+    failures = []
+    cells = []
+    for arch in list_archs():
+        for shape in ALL_SHAPES:
+            for mp in (False, True):
+                cells.append((arch, shape.name, mp))
+    print(f"[dryrun] {len(cells)} cells")
+    for arch, shape, mp in cells:
+        mesh_name = "multi_pod" if mp else "single_pod"
+        name = f"{arch}__{shape}__{mesh_name}"
+        path = os.path.join(args.out_dir, name + ".json")
+        if os.path.exists(path) and not args.force:
+            with open(path) as f:
+                if json.load(f).get("status") in ("ok", "skipped"):
+                    print(f"[dryrun] cached {name}")
+                    continue
+        cmd = [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", arch, "--shape", shape, "--out-dir", args.out_dir,
+        ]
+        if mp:
+            cmd.append("--multi-pod")
+        t0 = time.time()
+        r = subprocess.run(cmd, capture_output=True, text=True, timeout=args.cell_timeout)
+        dt = time.time() - t0
+        if r.returncode != 0:
+            failures.append(name)
+            with open(path + ".err", "w") as f:
+                f.write(r.stdout + "\n" + r.stderr)
+            print(f"[dryrun] FAIL {name} ({dt:.0f}s) — see {path}.err")
+        else:
+            print(r.stdout.strip())
+    print(f"[dryrun] done; {len(failures)} failures")
+    if failures:
+        print("failures:", failures)
+    return 1 if failures else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--rules", help="JSON sharding-rule overrides (perf iterations)")
+    ap.add_argument("--mesh-shape", help="e.g. 32,8 (data,model) or 2,32,8")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--overrides", help="JSON ModelConfig field overrides")
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--cell-timeout", type=int, default=3600)
+    ap.add_argument("--out-dir", default=os.path.normpath(ARTIFACT_DIR))
+    args = ap.parse_args()
+    if args.all:
+        return run_all(args)
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape required (or --all)")
+    try:
+        return run_one(args)
+    except Exception:
+        traceback.print_exc()
+        return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

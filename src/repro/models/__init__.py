@@ -1,0 +1,38 @@
+"""Model substrate: configs, shared layers, and the family model classes."""
+
+from repro.models.config import (
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    SHAPES_BY_NAME,
+    TRAIN_4K,
+    ModelConfig,
+    ShapeConfig,
+    applicable_shapes,
+)
+
+
+def build_model(cfg: ModelConfig):
+    """Factory: ModelConfig -> model object (LM or EncDec)."""
+    if cfg.family == "encdec":
+        from repro.models.encdec import EncDec
+
+        return EncDec(cfg)
+    from repro.models.lm import LM
+
+    return LM(cfg)
+
+
+__all__ = [
+    "ModelConfig",
+    "ShapeConfig",
+    "ALL_SHAPES",
+    "SHAPES_BY_NAME",
+    "TRAIN_4K",
+    "PREFILL_32K",
+    "DECODE_32K",
+    "LONG_500K",
+    "applicable_shapes",
+    "build_model",
+]

@@ -1,0 +1,284 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv frontend is a STUB per the assignment: ``input_specs()`` feeds
+precomputed frame embeddings (B, enc_frames, d_model) — what the two strided
+convs would produce — so the transformer backbone is what's exercised.
+Positional encoding is sinusoidal-absolute (matching Whisper's encoder; we
+use it for the decoder too instead of learned embeddings — noted hardware/
+scope adaptation in DESIGN.md).
+
+Decode caches: per-decoder-layer self-attention KV (positional scatter) plus
+the cross-attention K/V computed once from the encoder output at prefill.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gemm import gemm
+from repro.dist.sharding import ArraySpec, constrain
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.lm import _stack_specs
+
+Params = Dict[str, Any]
+
+
+def sinusoid(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freqs = jnp.exp(
+        -math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / half
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class EncDec:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.family == "encdec"
+        self.cfg = cfg
+
+    # -- specs ----------------------------------------------------------------
+    def param_specs(self) -> Params:
+        cfg = self.cfg
+        d, v = cfg.d_model, cfg.vocab_size
+        enc_layer = {
+            "norm1": L.norm_spec(cfg),
+            "attn": L.attn_specs(cfg),
+            "norm2": L.norm_spec(cfg),
+            "mlp": L.mlp_specs(cfg),
+        }
+        dec_layer = {
+            "norm1": L.norm_spec(cfg),
+            "self_attn": L.attn_specs(cfg),
+            "norm2": L.norm_spec(cfg),
+            "cross_attn": L.attn_specs(cfg),
+            "norm3": L.norm_spec(cfg),
+            "mlp": L.mlp_specs(cfg),
+        }
+        return {
+            "embed": ArraySpec((v, d), cfg.dtype, ("vocab", "embed")),
+            "enc_layers": _stack_specs(enc_layer, cfg.n_enc_layers),
+            "enc_final_norm": L.norm_spec(cfg),
+            "dec_layers": _stack_specs(dec_layer, cfg.n_layers),
+            "final_norm": L.norm_spec(cfg),
+        }
+
+    # -- encoder ----------------------------------------------------------------
+    def encode(self, params: Params, frames: jax.Array, *, div=None) -> jax.Array:
+        cfg = self.cfg
+        div = div or {}
+        b, f, d = frames.shape
+        x = frames.astype(cfg.dtype) + sinusoid(jnp.arange(f), d).astype(cfg.dtype)
+
+        def body(x, p):
+            h = L.norm_apply(p["norm1"], x, cfg)
+            a, _ = L.attn_apply(
+                p["attn"], h, cfg, div=div, mask_kind="bidir", use_rope=False
+            )
+            x = constrain(x + a, "batch", "seq", None)
+            h = L.norm_apply(p["norm2"], x, cfg)
+            x = constrain(x + L.mlp_apply(p["mlp"], h, cfg, div=div), "batch", "seq", None)
+            return x, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return L.norm_apply(params["enc_final_norm"], x, cfg)
+
+    # -- decoder ---------------------------------------------------------------
+    def _dec_stack(
+        self,
+        params,
+        x,
+        enc_out,
+        *,
+        div,
+        positions,
+        caches=None,
+        cur_pos=None,
+        want_cache=False,
+    ):
+        cfg = self.cfg
+
+        def body(carry, xs):
+            x = carry
+            p, c = xs if caches is not None else (xs, None)
+            new_c: Dict[str, Any] = {}
+            h = L.norm_apply(p["norm1"], x, cfg)
+            a, kv = L.attn_apply(
+                p["self_attn"],
+                h,
+                cfg,
+                div=div,
+                positions=positions,
+                use_rope=False,
+                cache=c.get("attn") if c else None,
+                cur_pos=cur_pos,
+            )
+            x = constrain(x + a, "batch", "seq", None)
+            if kv is not None and want_cache:
+                new_c["attn"] = kv
+            h = L.norm_apply(p["norm2"], x, cfg)
+            if c is not None and "cross" in c:
+                ck, cv = c["cross"]["k"], c["cross"]["v"]
+            else:
+                db, dtp = div.get("batch", 1), div.get("model", 1)
+                ck = gemm(
+                    enc_out, p["cross_attn"]["wk"], divisors=(db, dtp, 1), tag="xattn.k"
+                ).reshape(enc_out.shape[0], enc_out.shape[1], cfg.n_kv_heads, cfg.d_head)
+                cv = gemm(
+                    enc_out, p["cross_attn"]["wv"], divisors=(db, dtp, 1), tag="xattn.v"
+                ).reshape(enc_out.shape[0], enc_out.shape[1], cfg.n_kv_heads, cfg.d_head)
+                if want_cache:
+                    new_c["cross"] = {"k": ck, "v": cv}
+            a, _ = L.attn_apply(
+                p["cross_attn"],
+                h,
+                cfg,
+                div=div,
+                use_rope=False,
+                kv_override=(ck, cv),
+            )
+            x = constrain(x + a, "batch", "seq", None)
+            h = L.norm_apply(p["norm3"], x, cfg)
+            x = constrain(x + L.mlp_apply(p["mlp"], h, cfg, div=div), "batch", "seq", None)
+            return x, new_c
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        xs = params["dec_layers"] if caches is None else (params["dec_layers"], caches)
+        x, new_caches = jax.lax.scan(body, x, xs)
+        return x, new_caches
+
+    def _head(self, params, x, div):
+        # Whisper ties the output head to the token embedding.
+        w = params["embed"].T.astype(self.cfg.dtype)
+        return gemm(
+            x,
+            w,
+            divisors=(div.get("batch", 1), div.get("model", 1), 1),
+            tag="lm_head",
+            out_dtype=self.cfg.dtype,
+        )
+
+    # -- public ----------------------------------------------------------------
+    def forward(
+        self,
+        params: Params,
+        frames: jax.Array,  # (B, F, D) stubbed frontend output
+        dec_tokens: jax.Array,  # (B, S)
+        *,
+        div: Optional[Dict[str, int]] = None,
+    ) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        div = div or {}
+        enc_out = self.encode(params, frames, div=div)
+        b, s = dec_tokens.shape
+        x = jnp.take(params["embed"], dec_tokens, axis=0).astype(cfg.dtype)
+        x = x + sinusoid(jnp.arange(s), cfg.d_model).astype(cfg.dtype)
+        x, _ = self._dec_stack(params, x, enc_out, div=div, positions=jnp.arange(s))
+        x = L.norm_apply(params["final_norm"], x, cfg)
+        return self._head(params, x, div), jnp.zeros((), jnp.float32)
+
+    def loss_fn(self, params, batch, *, div=None):
+        logits, aux = self.forward(
+            params, batch["frames"], batch["tokens"], div=div
+        )
+        labels = batch["labels"]
+        mask = batch.get("loss_mask")
+        if mask is None:
+            mask = jnp.ones(labels.shape, jnp.float32)
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        loss = jnp.sum(nll) / denom
+        return loss, {"nll": loss, "ntokens": jnp.sum(mask)}
+
+    # -- serving -----------------------------------------------------------------
+    def cache_specs(self, batch: int, max_seq: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        n, kv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+        f = cfg.enc_frames
+        kv_axes = ("stack", "batch", "kv_seq", "kv_heads", None)
+        return {
+            "attn": {
+                "k": ArraySpec((n, batch, max_seq, kv, dh), cfg.dtype, kv_axes),
+                "v": ArraySpec((n, batch, max_seq, kv, dh), cfg.dtype, kv_axes),
+            },
+            "cross": {
+                "k": ArraySpec((n, batch, f, kv, dh), cfg.dtype, kv_axes),
+                "v": ArraySpec((n, batch, f, kv, dh), cfg.dtype, kv_axes),
+            },
+        }
+
+    def init_cache(self, batch: int, max_seq: int):
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.cache_specs(batch, max_seq),
+            is_leaf=lambda x: isinstance(x, ArraySpec),
+        )
+
+    def prefill(
+        self,
+        params: Params,
+        frames: jax.Array,
+        dec_tokens: jax.Array,
+        *,
+        max_seq: Optional[int] = None,
+        div: Optional[Dict[str, int]] = None,
+    ):
+        cfg = self.cfg
+        div = div or {}
+        b, s = dec_tokens.shape
+        max_seq = max_seq or s
+        enc_out = self.encode(params, frames, div=div)
+        x = jnp.take(params["embed"], dec_tokens, axis=0).astype(cfg.dtype)
+        x = x + sinusoid(jnp.arange(s), cfg.d_model).astype(cfg.dtype)
+        x, fresh = self._dec_stack(
+            params, x, enc_out, div=div, positions=jnp.arange(s), want_cache=True
+        )
+        x = L.norm_apply(params["final_norm"], x, cfg)
+        logits = self._head(params, x[:, -1:], div)
+        cache = self.init_cache(b, max_seq)
+        for key in ("k", "v"):
+            cache["attn"][key] = jax.lax.dynamic_update_slice(
+                cache["attn"][key], fresh["attn"][key].astype(cfg.dtype), (0,) * 5
+            )
+            cache["cross"][key] = fresh["cross"][key].astype(cfg.dtype)
+        return logits, cache
+
+    def decode_step(
+        self,
+        params: Params,
+        cache,
+        tokens: jax.Array,  # (B, 1)
+        cur_pos: jax.Array,  # (B,)
+        *,
+        div: Optional[Dict[str, int]] = None,
+    ):
+        cfg = self.cfg
+        div = div or {}
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+        x = x + sinusoid(cur_pos[:, None], cfg.d_model).astype(cfg.dtype)
+        x, new_caches = self._dec_stack(
+            params,
+            x,
+            None,
+            div=div,
+            positions=cur_pos[:, None],
+            caches=cache,
+            cur_pos=cur_pos,
+            want_cache=True,
+        )
+        x = L.norm_apply(params["final_norm"], x, cfg)
+        logits = self._head(params, x, div)
+        # cross K/V is static during decode — carry it through unchanged
+        new_caches["cross"] = cache["cross"]
+        return logits, new_caches

@@ -1,0 +1,604 @@
+"""Unified decoder-only LM covering the dense / MoE / SSM / hybrid / VLM
+families of the assigned architecture pool.
+
+Layers are *scanned* with stacked parameters (one traced body, small HLO —
+essential for 512-device dry-run compiles) and optionally rematerialised.
+Heterogeneous stacks (gemma3's 5:1 local:global attention, zamba2's periodic
+shared attention block) are expressed as *scanned per-layer flag arrays*
+driving masks/selects inside one uniform body, never Python branching —
+the whole stack is a single ``lax.scan``.
+
+Caches:
+  * attention: stacked (L, B, S_max, KV, dh) k/v tensors, positional scatter
+    on decode;
+  * SSM: stacked (L, B, nh, dh, ds) state + conv tail — O(1) decode, which is
+    what makes ``long_500k`` applicable to the ssm/hybrid archs;
+  * hybrid: both (attention slots only live at flagged layers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gemm import gemm
+from repro.dist.sharding import ArraySpec, constrain
+from repro.models import layers as L
+from repro.models import ssd
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def _stack_specs(spec: Dict[str, Any], n: int) -> Dict[str, Any]:
+    """Add a leading stacked-layer axis to every ArraySpec in a subtree."""
+    return jax.tree.map(
+        lambda s: ArraySpec((n, *s.shape), s.dtype, ("stack", *s.axes), init=s.init),
+        spec,
+        is_leaf=lambda x: isinstance(x, ArraySpec),
+    )
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.family in ("dense", "moe", "ssm", "hybrid", "vlm")
+        self.cfg = cfg
+
+    # -- layer metadata ------------------------------------------------------
+    def layer_flags(self) -> Dict[str, jnp.ndarray]:
+        """Per-layer scanned flags: ``is_global`` (gemma3 local:global),
+        ``use_attn`` (zamba2 shared block period)."""
+        cfg = self.cfg
+        n = cfg.n_layers
+        if cfg.global_every:
+            # every Nth layer is global (pattern ...LLLLLG), rest local
+            is_global = jnp.array(
+                [(i + 1) % cfg.global_every == 0 for i in range(n)], jnp.bool_
+            )
+        else:
+            is_global = jnp.ones((n,), jnp.bool_)
+        if cfg.attn_every:
+            use_attn = jnp.array(
+                [(i % cfg.attn_every) == (cfg.attn_every - 1) for i in range(n)],
+                jnp.bool_,
+            )
+        else:
+            use_attn = jnp.zeros((n,), jnp.bool_)
+        return {"is_global": is_global, "use_attn": use_attn}
+
+    # -- parameter specs -------------------------------------------------------
+    def param_specs(self) -> Params:
+        cfg = self.cfg
+        d, v = cfg.d_model, cfg.vocab_size
+        layer: Dict[str, Any] = {"norm1": L.norm_spec(cfg)}
+        if cfg.family in ("dense", "vlm", "moe"):
+            layer["attn"] = L.attn_specs(cfg)
+            layer["norm2"] = L.norm_spec(cfg)
+            layer["moe" if cfg.family == "moe" else "mlp"] = (
+                L.moe_specs(cfg) if cfg.family == "moe" else L.mlp_specs(cfg)
+            )
+        elif cfg.family == "ssm":
+            layer["ssm"] = ssd.ssd_specs(cfg)
+        elif cfg.family == "hybrid":
+            layer["ssm"] = ssd.ssd_specs(cfg)
+
+        specs: Params = {
+            "embed": ArraySpec((v, d), cfg.dtype, ("vocab", "embed")),
+            "layers": _stack_specs(layer, cfg.n_layers),
+            "final_norm": L.norm_spec(cfg),
+        }
+        if cfg.family == "hybrid" and cfg.attn_every:
+            specs["shared_attn"] = {
+                "norm1": L.norm_spec(cfg),
+                "attn": L.attn_specs(cfg),
+                "norm2": L.norm_spec(cfg),
+                "mlp": L.mlp_specs(cfg),
+            }
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = ArraySpec((d, v), cfg.dtype, ("embed", "vocab"))
+        return specs
+
+    # -- embedding / head -----------------------------------------------------
+    def _embed(self, params, tokens, patch_embeds=None):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+        if cfg.family == "vlm" and patch_embeds is not None:
+            # stubbed anyres frontend: precomputed patch embeddings are
+            # prepended; text occupies the remaining positions.
+            p = patch_embeds.astype(cfg.dtype)
+            x = jnp.concatenate([p, x[:, : x.shape[1] - p.shape[1]]], axis=1)
+        # pin the residual stream: batch over the DP axes, d_model replicated
+        return constrain(x, "batch", "seq", None)
+
+    def _head(self, params, x, div):
+        cfg = self.cfg
+        w = (
+            params["embed"].T.astype(cfg.dtype)
+            if cfg.tie_embeddings
+            else params["lm_head"]
+        )
+        return gemm(
+            x,
+            w,
+            divisors=(div.get("batch", 1), div.get("model", 1), 1),
+            tag="lm_head",
+            out_dtype=cfg.dtype,
+        )
+
+    # -- one scanned decoder layer ----------------------------------------------
+    def _layer_body(
+        self,
+        p: Params,
+        x,
+        *,
+        flags,
+        div,
+        shared_attn: Optional[Params],
+        positions,
+        cache=None,
+        cur_pos=None,
+        want_cache: bool = False,
+    ):
+        """Returns (x, new_cache_entry, aux)."""
+        cfg = self.cfg
+        new_cache: Dict[str, Any] = {}
+
+        if cfg.family in ("dense", "vlm", "moe"):
+            # gemma3-style locality: one mask path; global layers get an
+            # effectively infinite window via the scanned flag.
+            if cfg.window:
+                window = jnp.where(flags["is_global"], jnp.int32(2**30), cfg.window)
+                mask_kind = "window"
+            else:
+                window = 0
+                mask_kind = "causal"
+            h = L.norm_apply(p["norm1"], x, cfg)
+            attn_out, kv = L.attn_apply(
+                p["attn"],
+                h,
+                cfg,
+                div=div,
+                mask_kind=mask_kind,
+                window=window,
+                positions=positions,
+                cache=cache.get("attn") if cache else None,
+                cur_pos=cur_pos,
+            )
+            x = constrain(x + attn_out, "batch", "seq", None)
+            if kv is not None and want_cache:
+                new_cache["attn"] = kv
+            h = L.norm_apply(p["norm2"], x, cfg)
+            if cfg.family == "moe":
+                mlp_out, aux = L.moe_apply(p["moe"], h, cfg, div=div)
+            else:
+                mlp_out, aux = L.mlp_apply(p["mlp"], h, cfg, div=div), 0.0
+            x = constrain(x + mlp_out, "batch", "seq", None)
+            return x, new_cache, aux
+
+        # ssm / hybrid families
+        h = L.norm_apply(p["norm1"], x, cfg)
+        ssm_out, ssm_state = ssd.ssd_apply(
+            p["ssm"], h, cfg, div=div, state=cache.get("ssm") if cache else None
+        )
+        x = constrain(x + ssm_out, "batch", "seq", None)
+        if want_cache:
+            new_cache["ssm"] = ssm_state
+
+        if cfg.family == "hybrid" and shared_attn is not None:
+            # shared (weight-tied) transformer block, active at flagged
+            # layers; computed unconditionally and gated by select so the
+            # scan body stays uniform.
+            g = flags["use_attn"].astype(jnp.float32)
+            h = L.norm_apply(shared_attn["norm1"], x, cfg)
+            attn_out, kv = L.attn_apply(
+                shared_attn["attn"],
+                h,
+                cfg,
+                div=div,
+                positions=positions,
+                cache=cache.get("attn") if cache else None,
+                cur_pos=cur_pos,
+            )
+            x = x + (attn_out.astype(jnp.float32) * g).astype(x.dtype)
+            if kv is not None and cache is not None and want_cache:
+                # only flagged layers persist their KV
+                new_cache["attn"] = jax.tree.map(
+                    lambda new, old: jnp.where(flags["use_attn"], new, old),
+                    kv,
+                    cache["attn"],
+                )
+            elif kv is not None and want_cache:
+                new_cache["attn"] = kv
+            h = L.norm_apply(shared_attn["norm2"], x, cfg)
+            mlp_out = L.mlp_apply(shared_attn["mlp"], h, cfg, div=div)
+            x = x + (mlp_out.astype(jnp.float32) * g).astype(x.dtype)
+        return x, new_cache, 0.0
+
+    # -- full stacks ------------------------------------------------------------
+    def _scan_layers(
+        self,
+        params,
+        x,
+        *,
+        div,
+        positions,
+        caches=None,
+        cur_pos=None,
+        want_cache=False,
+    ):
+        """caches: stacked per-layer cache pytree or None. Returns
+        (x, new_caches, aux_sum)."""
+        cfg = self.cfg
+        flags = self.layer_flags()
+        shared = params.get("shared_attn")
+
+        def body(carry, xs):
+            x, aux = carry
+            if caches is None:
+                p, fl = xs
+                c = None
+            else:
+                p, fl, c = xs
+            x, new_c, aux_i = self._layer_body(
+                p,
+                x,
+                flags=fl,
+                div=div,
+                shared_attn=shared,
+                positions=positions,
+                cache=c,
+                cur_pos=cur_pos,
+                want_cache=want_cache,
+            )
+            return (x, aux + aux_i), new_c
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+
+        xs = (params["layers"], flags) if caches is None else (
+            params["layers"],
+            flags,
+            caches,
+        )
+        (x, aux), new_caches = jax.lax.scan(body, (x, 0.0), xs)
+        return x, new_caches, aux
+
+    # -- public API ----------------------------------------------------------
+    def forward(
+        self,
+        params: Params,
+        tokens: jax.Array,  # (B, S)
+        *,
+        div: Optional[Dict[str, int]] = None,
+        patch_embeds: Optional[jax.Array] = None,
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Teacher-forced logits (B, S, V) + aux loss."""
+        div = div or {}
+        x = self._embed(params, tokens, patch_embeds)
+        positions = jnp.arange(x.shape[1])
+        x, _, aux = self._scan_layers(params, x, div=div, positions=positions)
+        x = L.norm_apply(params["final_norm"], x, self.cfg)
+        return self._head(params, x, div), aux
+
+    def loss_fn(
+        self,
+        params: Params,
+        batch: Dict[str, jax.Array],
+        *,
+        div: Optional[Dict[str, int]] = None,
+    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        logits, aux = self.forward(
+            params,
+            batch["tokens"],
+            div=div,
+            patch_embeds=batch.get("patch_embeds"),
+        )
+        labels = batch["labels"]
+        mask = batch.get("loss_mask")
+        if mask is None:
+            mask = jnp.ones(labels.shape, jnp.float32)
+        if cfg.family == "vlm" and "patch_embeds" in batch:
+            # no LM loss on image-patch positions
+            npatch = batch["patch_embeds"].shape[1]
+            mask = mask.at[:, :npatch].set(0.0)
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        loss = jnp.sum(nll) / denom + aux
+        # z-loss for logit drift stability at scale
+        zloss = 1e-4 * jnp.sum(jnp.square(logz) * mask) / denom
+        metrics = {
+            "nll": jnp.sum(nll) / denom,
+            "aux": jnp.asarray(aux, jnp.float32),
+            "zloss": zloss,
+            "ntokens": jnp.sum(mask),
+        }
+        return loss + zloss, metrics
+
+    # -- serving -----------------------------------------------------------------
+    def cache_specs(self, batch: int, max_seq: int) -> Dict[str, Any]:
+        """ArraySpec pytree for the decode cache (stacked over layers)."""
+        cfg = self.cfg
+        if cfg.window_cache and cfg.global_every and cfg.family in ("dense", "vlm"):
+            return self.cache_specs_windowed(batch, max_seq)
+        n, kv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+        out: Dict[str, Any] = {}
+        if cfg.family in ("dense", "vlm", "moe", "hybrid"):
+            kv_dt = "int8" if cfg.kv_cache_dtype == "int8" else cfg.dtype
+            kv_axes = ("stack", "batch", "kv_seq", "kv_heads", None)
+            out["attn"] = {
+                "k": ArraySpec((n, batch, max_seq, kv, dh), kv_dt, kv_axes),
+                "v": ArraySpec((n, batch, max_seq, kv, dh), kv_dt, kv_axes),
+            }
+            if cfg.kv_cache_dtype == "int8":
+                sc_axes = ("stack", "batch", "kv_seq", "kv_heads")
+                out["attn"]["k_scale"] = ArraySpec(
+                    (n, batch, max_seq, kv), "float32", sc_axes
+                )
+                out["attn"]["v_scale"] = ArraySpec(
+                    (n, batch, max_seq, kv), "float32", sc_axes
+                )
+        if cfg.family in ("ssm", "hybrid"):
+            nh, hd, ds = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+            conv_dim = cfg.d_inner + 2 * ds
+            out["ssm"] = {
+                "h": ArraySpec(
+                    (n, batch, nh, hd, ds),
+                    "float32",
+                    ("stack", "batch", "ssm_inner", None, None),
+                ),
+                "conv": ArraySpec(
+                    (n, batch, cfg.ssm_conv_width - 1, conv_dim),
+                    cfg.dtype,
+                    ("stack", "batch", None, "ssm_inner"),
+                ),
+            }
+        return out
+
+    # -- windowed-cache decode (gemma3-style local:global stacks) -----------
+    def _layer_split(self):
+        """Static index split for global_every stacks: block-local indices
+        (n_blocks, g-1), global indices (n_blocks,), tail-local indices."""
+        import numpy as np
+
+        cfg = self.cfg
+        g = cfg.global_every
+        n_blocks = cfg.n_layers // g
+        local_block, global_idx = [], []
+        for b_ in range(n_blocks):
+            base = b_ * g
+            local_block.extend(range(base, base + g - 1))
+            global_idx.append(base + g - 1)
+        tail = list(range(n_blocks * g, cfg.n_layers))
+        return (
+            np.asarray(local_block, dtype=np.int64),
+            np.asarray(global_idx, dtype=np.int64),
+            np.asarray(tail, dtype=np.int64),
+            n_blocks,
+        )
+
+    def cache_specs_windowed(self, batch: int, max_seq: int) -> Dict[str, Any]:
+        """Ring caches for local layers (window slots), full caches only for
+        the 1-in-global_every global layers: capacity and decode read
+        traffic drop ~global_every-fold for long contexts."""
+        cfg = self.cfg
+        kv, dh, w = cfg.n_kv_heads, cfg.d_head, cfg.window
+        local_block, global_idx, tail, n_blocks = self._layer_split()
+        n_local = len(local_block) + len(tail)
+        ring_axes = ("stack", "batch", None, "kv_heads", None)
+        full_axes = ("stack", "batch", "kv_seq", "kv_heads", None)
+        return {
+            "local": {
+                "k": ArraySpec((n_local, batch, w, kv, dh), cfg.dtype, ring_axes),
+                "v": ArraySpec((n_local, batch, w, kv, dh), cfg.dtype, ring_axes),
+            },
+            "global": {
+                "k": ArraySpec(
+                    (len(global_idx), batch, max_seq, kv, dh), cfg.dtype, full_axes
+                ),
+                "v": ArraySpec(
+                    (len(global_idx), batch, max_seq, kv, dh), cfg.dtype, full_axes
+                ),
+            },
+        }
+
+    def windowed_cache_from_uniform(self, cache, prompt_len: int):
+        """Convert a uniform prefill cache (L, B, S, kv, dh) into the
+        windowed layout: local layers keep the last ``window`` positions in
+        ring order (position p -> slot p %% W), global layers keep their full
+        stripes — makes prefill-then-windowed-decode a drop-in serving path."""
+        import numpy as np
+
+        cfg = self.cfg
+        w = cfg.window
+        local_block, global_idx, tail, n_blocks = self._layer_split()
+        local_idx = np.concatenate([local_block, tail])
+        s_max = cache["attn"]["k"].shape[2]
+
+        def to_ring(full):  # (n_local, B, S, kv, dh) -> (n_local, B, W, kv, dh)
+            # slot j holds the most recent position p <= prompt_len-1 with
+            # p % w == j (positions the ring would contain after a decode
+            # chain of the same length)
+            slots = jnp.arange(w)
+            last = prompt_len - 1
+            p = last - jnp.mod(last - slots, w)  # may be negative when cold
+            p_safe = jnp.clip(p, 0, s_max - 1)
+            ring = jnp.take(full, p_safe, axis=2)
+            mask = (p >= 0)[None, None, :, None, None]
+            return jnp.where(mask, ring, jnp.zeros_like(ring))
+
+        out_local = {
+            key: to_ring(cache["attn"][key][local_idx]) for key in ("k", "v")
+        }
+        out_global = {key: cache["attn"][key][global_idx] for key in ("k", "v")}
+        return {"local": out_local, "global": out_global}
+
+    def decode_step_windowed(self, params, cache, tokens, cur_pos, *, div=None):
+        """One decode step with ring caches on local layers. Requires
+        ``cfg.window_cache`` and ``cfg.global_every > 0``; numerically
+        identical to the uniform-cache path (window masking == ring)."""
+        cfg = self.cfg
+        div = div or {}
+        g = cfg.global_every
+        local_block, global_idx, tail, n_blocks = self._layer_split()
+
+        take = lambda tree, idx: jax.tree.map(lambda a: a[idx], tree)
+        p_block_local = jax.tree.map(
+            lambda a: a[local_block].reshape(n_blocks, g - 1, *a.shape[1:]),
+            params["layers"],
+        )
+        p_global = take(params["layers"], global_idx)
+        p_tail = take(params["layers"], tail) if len(tail) else None
+
+        n_block_local = len(local_block)
+        c_block_local = jax.tree.map(
+            lambda a: a[:n_block_local].reshape(n_blocks, g - 1, *a.shape[1:]),
+            cache["local"],
+        )
+        c_tail = jax.tree.map(lambda a: a[n_block_local:], cache["local"])
+
+        x = self._embed(params, tokens)
+
+        def local_layer(x, p, c):
+            h = L.norm_apply(p["norm1"], x, cfg)
+            a, new_c = L.attn_apply_ring(
+                p["attn"], h, cfg, div=div, cache=c, cur_pos=cur_pos
+            )
+            x = x + a
+            h = L.norm_apply(p["norm2"], x, cfg)
+            return x + L.mlp_apply(p["mlp"], h, cfg, div=div), new_c
+
+        def local_scan(x, p_stack, c_stack):
+            def body(x, pc):
+                p, c = pc
+                return local_layer(x, p, c)
+
+            return jax.lax.scan(body, x, (p_stack, c_stack))
+
+        def block_body(x, xs):
+            p_loc, p_glob, c_loc, c_glob = xs
+            x, new_c_loc = local_scan(x, p_loc, c_loc)
+            h = L.norm_apply(p_glob["norm1"], x, cfg)
+            a, new_c_glob = L.attn_apply(
+                p_glob["attn"],
+                h,
+                cfg,
+                div=div,
+                positions=cur_pos[:, None],
+                cache=c_glob,
+                cur_pos=cur_pos,
+            )
+            x = x + a
+            h = L.norm_apply(p_glob["norm2"], x, cfg)
+            x = x + L.mlp_apply(p_glob["mlp"], h, cfg, div=div)
+            return x, (new_c_loc, new_c_glob)
+
+        x, (nc_loc, nc_glob) = jax.lax.scan(
+            block_body, x, (p_block_local, p_global, c_block_local, cache["global"])
+        )
+        if p_tail is not None and len(tail):
+            x, nc_tail = local_scan(x, p_tail, c_tail)
+        else:
+            nc_tail = c_tail
+        x = L.norm_apply(params["final_norm"], x, cfg)
+        logits = self._head(params, x, div)
+        new_cache = {
+            "local": jax.tree.map(
+                lambda bl, tl: jnp.concatenate(
+                    [bl.reshape(n_block_local, *bl.shape[2:]), tl], axis=0
+                ),
+                nc_loc,
+                nc_tail,
+            ),
+            "global": nc_glob,
+        }
+        return logits, new_cache
+
+    def init_cache(self, batch: int, max_seq: int):
+        from repro.dist.sharding import materialize_tree
+
+        specs = self.cache_specs(batch, max_seq)
+        zeros = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            specs,
+            is_leaf=lambda x: isinstance(x, ArraySpec),
+        )
+        return zeros
+
+    def prefill(
+        self,
+        params: Params,
+        tokens: jax.Array,  # (B, S)
+        *,
+        max_seq: Optional[int] = None,
+        div: Optional[Dict[str, int]] = None,
+        patch_embeds: Optional[jax.Array] = None,
+    ):
+        """Run the prompt, build the decode cache. Returns (last_logits, cache)."""
+        cfg = self.cfg
+        div = div or {}
+        b, s = tokens.shape
+        max_seq = max_seq or s
+        x = self._embed(params, tokens, patch_embeds)
+        positions = jnp.arange(s)
+        x, prefill_caches, _ = self._scan_layers(
+            params, x, div=div, positions=positions, want_cache=True
+        )
+        x = L.norm_apply(params["final_norm"], x, cfg)
+        logits = self._head(params, x[:, -1:], div)
+
+        cache = self.init_cache(b, max_seq)
+        if "attn" in cache and prefill_caches and "attn" in prefill_caches:
+            for key in ("k", "v"):
+                fresh = prefill_caches["attn"][key]  # (L, B, S, kv, dh)
+                if cfg.kv_cache_dtype == "int8":
+                    from repro.models.layers import kv_quantize
+
+                    q8, sc = kv_quantize(fresh)
+                    cache["attn"][key] = jax.lax.dynamic_update_slice(
+                        cache["attn"][key], q8, (0, 0, 0, 0, 0)
+                    )
+                    cache["attn"][f"{key}_scale"] = jax.lax.dynamic_update_slice(
+                        cache["attn"][f"{key}_scale"], sc, (0, 0, 0, 0)
+                    )
+                else:
+                    cache["attn"][key] = jax.lax.dynamic_update_slice(
+                        cache["attn"][key], fresh.astype(cfg.dtype), (0, 0, 0, 0, 0)
+                    )
+        if "ssm" in cache and prefill_caches and "ssm" in prefill_caches:
+            cache["ssm"] = prefill_caches["ssm"]
+        return logits, cache
+
+    def decode_step(
+        self,
+        params: Params,
+        cache,
+        tokens: jax.Array,  # (B, 1)
+        cur_pos: jax.Array,  # (B,)
+        *,
+        div: Optional[Dict[str, int]] = None,
+    ):
+        """One decode step. Returns (logits (B, 1, V), new_cache)."""
+        cfg = self.cfg
+        div = div or {}
+        if cfg.window_cache and cfg.global_every and cfg.family in ("dense", "vlm"):
+            return self.decode_step_windowed(params, cache, tokens, cur_pos, div=div)
+        x = self._embed(params, tokens)
+        positions = cur_pos[:, None]  # (B, 1) absolute positions for RoPE
+        x, new_caches, _ = self._scan_layers(
+            params,
+            x,
+            div=div,
+            positions=positions,
+            caches=cache,
+            cur_pos=cur_pos,
+            want_cache=True,
+        )
+        x = L.norm_apply(params["final_norm"], x, cfg)
+        return self._head(params, x, div), new_caches

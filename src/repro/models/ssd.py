@@ -1,0 +1,225 @@
+"""Mamba2 / SSD (state-space duality) block — arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm (quadratic intra-chunk
+"attention" + linear inter-chunk state recurrence via ``lax.scan``); decode
+carries the (heads, d_head, d_state) SSM state per layer and costs O(1) per
+token — the property that makes the ``long_500k`` shape tractable for the
+SSM/hybrid architectures.
+
+Projections route through ``repro.core.gemm`` like every other matmul in the
+framework (the Stream-K++ dispatch layer applies to SSMs too — see DESIGN.md
+§Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gemm import gemm
+from repro.dist.sharding import ArraySpec
+from repro.models.config import ModelConfig
+
+Params = Dict[str, jax.Array]
+
+
+def ssd_specs(cfg: ModelConfig) -> Dict[str, ArraySpec]:
+    d = cfg.d_model
+    din = cfg.d_inner
+    ds = cfg.ssm_state
+    nh = cfg.ssm_heads
+    conv_dim = din + 2 * ds
+    dt = cfg.dtype
+    return {
+        # fused input projection: [z (din), x (din), B (ds), C (ds), dt (nh)]
+        "w_in": ArraySpec((d, 2 * din + 2 * ds + nh), dt, ("embed", "ssm_inner")),
+        "conv_w": ArraySpec((cfg.ssm_conv_width, conv_dim), dt, (None, "ssm_inner")),
+        "conv_b": ArraySpec((conv_dim,), dt, ("ssm_inner",), init="zeros"),
+        "a_log": ArraySpec((nh,), "float32", (None,), init="zeros"),
+        "d_skip": ArraySpec((nh,), "float32", (None,), init="ones"),
+        "dt_bias": ArraySpec((nh,), "float32", (None,), init="zeros"),
+        "w_out": ArraySpec((din, d), dt, ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    din, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din : 2 * din + 2 * ds]
+    dt = zxbcdt[..., 2 * din + 2 * ds :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over seq via shifted adds (width is tiny)."""
+    width = w.shape[0]
+    out = xbc * w[width - 1]
+    for i in range(1, width):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, : xbc.shape[1]]
+        out = out + shifted * w[width - 1 - i]
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _ssd_chunked(
+    x: jax.Array,  # (B, S, nh, dh)
+    dt: jax.Array,  # (B, S, nh) softplus'd
+    a: jax.Array,  # (nh,) negative
+    b_in: jax.Array,  # (B, S, ds)
+    c_in: jax.Array,  # (B, S, ds)
+    chunk: int,
+    h0: Optional[jax.Array] = None,  # (B, nh, dh, ds) initial state
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD: returns (y (B,S,nh,dh), final_state (B,nh,dh,ds))."""
+    bsz, s, nh, dh = x.shape
+    ds = b_in.shape[-1]
+    nc = s // chunk
+    assert nc * chunk == s, "seq must divide chunk"
+
+    xc = x.reshape(bsz, nc, chunk, nh, dh).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, chunk, nh)
+    bc = b_in.reshape(bsz, nc, chunk, ds).astype(jnp.float32)
+    cc = c_in.reshape(bsz, nc, chunk, ds).astype(jnp.float32)
+
+    da = dtc * a[None, None, None, :]  # (B,nc,Q,nh) decay increments (<=0)
+    da_cs = jnp.cumsum(da, axis=2)  # inclusive cumulative decay in-chunk
+
+    # --- intra-chunk (quadratic within the chunk) ---------------------------
+    # L[i,j] = exp(da_cs[i] - da_cs[j]) for i >= j else 0
+    li = da_cs[:, :, :, None, :]  # (B,nc,Q,1,nh) at i
+    lj = da_cs[:, :, None, :, :]  # (B,nc,1,Q,nh) at j
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    lmat = jnp.where(mask[None, None, :, :, None], jnp.exp(li - lj), 0.0)
+    scores = jnp.einsum("bnis,bnjs->bnij", cc, bc)  # (B,nc,Q,Q)
+    xdt = xc * dtc[..., None]  # (B,nc,Q,nh,dh)
+    y_intra = jnp.einsum("bnij,bnijh,bnjhd->bnihd", scores, lmat, xdt)
+
+    # --- chunk states ---------------------------------------------------------
+    # state contribution of chunk n: sum_j exp(da_cs[last] - da_cs[j]) dt_j B_j x_j
+    decay_to_end = jnp.exp(da_cs[:, :, -1:, :] - da_cs)  # (B,nc,Q,nh)
+    states = jnp.einsum(
+        "bnjs,bnjh,bnjhd->bnhds", bc, decay_to_end * dtc, xc
+    )  # (B,nc,nh,dh,ds)
+
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])  # (B,nc,nh) total chunk decay
+
+    # --- inter-chunk recurrence (linear scan over chunks) --------------------
+    def step(h, inp):
+        st, dec = inp  # (B,nh,dh,ds), (B,nh)
+        h_out = h  # state BEFORE this chunk
+        h = h * dec[:, :, None, None] + st
+        return h, h_out
+
+    h_init = (
+        h0.astype(jnp.float32)
+        if h0 is not None
+        else jnp.zeros((bsz, nh, dh, ds), jnp.float32)
+    )
+    h_final, h_starts = jax.lax.scan(
+        step,
+        h_init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_starts = jnp.moveaxis(h_starts, 0, 1)  # (B,nc,nh,dh,ds)
+
+    # --- inter-chunk output: y_i += exp(da_cs[i]) * C_i . h_start --------------
+    y_inter = jnp.einsum(
+        "bnis,bnhds,bnih->bnihd",
+        cc,
+        h_starts,
+        jnp.exp(da_cs),
+    )
+    y = (y_intra + y_inter).reshape(bsz, s, nh, dh)
+    return y, h_final
+
+
+def ssd_apply(
+    p: Params,
+    x: jax.Array,  # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    div: Dict[str, int],
+    state: Optional[Dict[str, jax.Array]] = None,  # decode carry
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Mamba2 block. ``state=None`` -> chunked training/prefill path (returns
+    final state for cache handoff); otherwise single-token decode."""
+    bsz, s, d = x.shape
+    din, ds, nh, dh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    db, dtp = div.get("batch", 1), div.get("model", 1)
+
+    zxbcdt = gemm(x, p["w_in"], divisors=(db, dtp, 1), tag="ssm.in")
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    a = -jnp.exp(p["a_log"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+
+    if state is None or s > 1:
+        # training / prefill: causal depthwise conv + chunked SSD
+        xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+        xs = xbc[..., :din].reshape(bsz, s, nh, dh)
+        b_in = xbc[..., din : din + ds]
+        c_in = xbc[..., din + ds :]
+        h0 = state["h"] if state is not None else None
+        pad = (-s) % cfg.ssm_chunk
+        if pad:
+            xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dtp_ = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            b_p = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+            c_p = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+        else:
+            dtp_, b_p, c_p = dt, b_in, c_in
+        y, h_final = _ssd_chunked(xs, dtp_, a, b_p, c_p, cfg.ssm_chunk, h0)
+        y = y[:, :s]
+        y = y + xs[:, :s] * p["d_skip"][None, None, :, None]
+        conv_state = xbc_raw_tail(zxbcdt, cfg, s)
+        new_state = {"h": h_final, "conv": conv_state}
+    else:
+        # decode: O(1) recurrent update
+        conv_state = state["conv"]  # (B, width-1, conv_dim)
+        xbc_raw = zxbcdt[:, 0, din : 2 * din + 2 * ds]
+        window = jnp.concatenate([conv_state, xbc_raw[:, None]], axis=1)
+        w = p["conv_w"]
+        conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+        xbc_t = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+        xs = xbc_t[:, :din].reshape(bsz, nh, dh).astype(jnp.float32)
+        b_t = xbc_t[:, din : din + ds].astype(jnp.float32)
+        c_t = xbc_t[:, din + ds :].astype(jnp.float32)
+        dt_t = dt[:, 0]  # (B, nh)
+        h = state["h"]
+        decay = jnp.exp(dt_t * a[None, :])  # (B, nh)
+        h = h * decay[:, :, None, None] + jnp.einsum(
+            "bh,bs,bhd->bhds", dt_t, b_t, xs
+        )
+        y = jnp.einsum("bs,bhds->bhd", c_t, h)
+        y = y + xs * p["d_skip"][None, :, None]
+        y = y[:, None]  # (B,1,nh,dh)
+        new_state = {
+            "h": h,
+            "conv": jnp.concatenate([conv_state[:, 1:], xbc_raw[:, None]], axis=1),
+        }
+
+    y = y.reshape(bsz, s, din).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = gemm(y, p["w_out"], divisors=(db, 1, dtp), tag="ssm.out")
+    return out, new_state
+
+
+def xbc_raw_tail(zxbcdt: jax.Array, cfg: ModelConfig, s: int) -> jax.Array:
+    """Last (conv_width-1) pre-conv inputs — the decode conv cache."""
+    din, ds = cfg.d_inner, cfg.ssm_state
+    width = cfg.ssm_conv_width
+    xbc_raw = zxbcdt[..., din : 2 * din + 2 * ds]
+    tail = xbc_raw[:, max(0, s - (width - 1)) :]
+    if s < width - 1:
+        tail = jnp.pad(tail, ((0, 0), (width - 1 - s, 0), (0, 0)))
+    return tail
+
+
+def ssd_init_state(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    nh, dh, ds = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * ds
+    return {
+        "h": jnp.zeros((batch, nh, dh, ds), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), cfg.dtype),
+    }

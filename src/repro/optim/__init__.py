@@ -1,0 +1,13 @@
+from repro.optim.optimizers import AdamW, Adafactor, SGD, clip_by_global_norm, make_optimizer
+from repro.optim.schedules import constant, warmup_cosine, warmup_linear
+
+__all__ = [
+    "AdamW",
+    "Adafactor",
+    "SGD",
+    "clip_by_global_norm",
+    "make_optimizer",
+    "constant",
+    "warmup_cosine",
+    "warmup_linear",
+]

@@ -1,0 +1,171 @@
+"""Optimizers (pure JAX; no optax).
+
+All optimizers keep f32 master weights when params are low-precision
+(mixed-precision training at scale), and their states are plain pytrees
+mirroring the param tree — so the FSDP shardings derived for params apply
+1:1 to optimizer state (ZeRO-style optimizer-state sharding falls out for
+free from GSPMD).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.trees import tree_global_norm
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = tree_global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+@dataclass(frozen=True)
+class AdamW:
+    schedule: Schedule
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+
+    def init(self, params) -> Dict[str, Any]:
+        # copy=True: with f32 params astype would alias the same buffer and
+        # break train-step donation (same buffer donated twice)
+        f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+        return {
+            "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "master": jax.tree.map(f32, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state, params):
+        grads, gnorm = clip_by_global_norm(grads, self.max_grad_norm)
+        count = state["count"] + 1
+        lr = self.schedule(count)
+        b1c = 1 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1 - self.b2 ** count.astype(jnp.float32)
+
+        mu = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g, state["mu"], grads)
+        nu = jax.tree.map(
+            lambda v, g: self.b2 * v + (1 - self.b2) * jnp.square(g), state["nu"], grads
+        )
+
+        def step(master, m, v):
+            upd = (m / b1c) / (jnp.sqrt(v / b2c) + self.eps)
+            upd = upd + self.weight_decay * master
+            return master - lr * upd
+
+        master = jax.tree.map(step, state["master"], mu, nu)
+        new_params = jax.tree.map(lambda mp, p: mp.astype(p.dtype), master, params)
+        new_state = {"mu": mu, "nu": nu, "master": master, "count": count}
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+@dataclass(frozen=True)
+class SGD:
+    schedule: Schedule
+    momentum: float = 0.9
+    max_grad_norm: float = 1.0
+
+    def init(self, params):
+        return {
+            "vel": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "master": jax.tree.map(lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state, params):
+        grads, gnorm = clip_by_global_norm(grads, self.max_grad_norm)
+        count = state["count"] + 1
+        lr = self.schedule(count)
+        vel = jax.tree.map(lambda v, g: self.momentum * v + g, state["vel"], grads)
+        master = jax.tree.map(lambda mp, v: mp - lr * v, state["master"], vel)
+        new_params = jax.tree.map(lambda mp, p: mp.astype(p.dtype), master, params)
+        return new_params, {"vel": vel, "master": master, "count": count}, {
+            "grad_norm": gnorm,
+            "lr": lr,
+        }
+
+
+@dataclass(frozen=True)
+class Adafactor:
+    """Factored second moments (Shazeer & Stern) — the memory-lean choice at
+    scale: O(m+n) state per (m, n) matrix instead of O(mn)."""
+
+    schedule: Schedule
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    max_grad_norm: float = 1.0
+
+    def init(self, params):
+        def factored(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "v": jax.tree.map(factored, params),
+            "master": jax.tree.map(lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state, params):
+        grads, gnorm = clip_by_global_norm(grads, self.max_grad_norm)
+        count = state["count"] + 1
+        lr = self.schedule(count)
+        decay = 1.0 - count.astype(jnp.float32) ** -0.8
+
+        def upd(g, v, master):
+            g2 = jnp.square(g) + self.eps
+            if g.ndim >= 2:
+                vr = decay * v["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+                vc = decay * v["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), self.eps)
+                vhat = vr[..., None] * vc[..., None, :] / denom[..., None]
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                vhat = decay * v["v"] + (1 - decay) * g2
+                new_v = {"v": vhat}
+            u = g / jnp.sqrt(vhat + self.eps)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + self.eps)
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            return master - lr * u, new_v
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["master"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        new_m, new_v = [], []
+        for g, v, m in zip(flat_g, flat_v, flat_m):
+            nm, nv = upd(g, v, m)
+            new_m.append(nm)
+            new_v.append(nv)
+        master = jax.tree.unflatten(treedef, new_m)
+        vstate = jax.tree.unflatten(treedef, new_v)
+        new_params = jax.tree.map(lambda mp, p: mp.astype(p.dtype), master, params)
+        return new_params, {"v": vstate, "master": master, "count": count}, {
+            "grad_norm": gnorm,
+            "lr": lr,
+        }
+
+
+def make_optimizer(name: str, schedule: Schedule, **kw):
+    name = name.lower()
+    if name == "adamw":
+        return AdamW(schedule, **kw)
+    if name == "sgd":
+        return SGD(schedule, **kw)
+    if name == "adafactor":
+        return Adafactor(schedule, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,35 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int, min_ratio: float = 0.1):
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        frac = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        frac = jnp.clip(frac, 0.0, 1.0)
+        cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return schedule
+
+
+def warmup_linear(peak_lr: float, warmup_steps: int, total_steps: int):
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        frac = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        lin = peak_lr * jnp.clip(1.0 - frac, 0.0, 1.0)
+        return jnp.where(step < warmup_steps, warm, lin)
+
+    return schedule
+
+
+def constant(lr: float):
+    def schedule(step):
+        return jnp.full((), lr, jnp.float32)
+
+    return schedule

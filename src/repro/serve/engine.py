@@ -1,0 +1,154 @@
+"""Batched serving engine with slot-based continuous batching.
+
+The engine holds a fixed pool of ``n_slots`` sequences sharing one stacked
+KV cache (the shape the decode_32k / long_500k dry-run cells lower). New
+requests are admitted into free slots between decode steps — continuous
+batching — so the decode GEMMs stay at a steady M = n_slots, exactly the
+skinny-M regime where the paper's Stream-K++ policies matter most (the
+dispatch log in ``repro.core.gemm`` records every selection the engine
+triggers).
+
+Decode is greedy or temperature sampling; finished sequences (EOS or length)
+free their slot. Per-slot position counters make the shared cache correct
+for requests of different lengths.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.logging import get_logger
+
+log = get_logger("serve")
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (P,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class ServeConfig:
+    n_slots: int = 8
+    max_seq: int = 512
+    eos: int = 0
+    seed: int = 0
+
+
+class ServeEngine:
+    def __init__(self, model, params, cfg: ServeConfig, *, div=None):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.div = div or {}
+        self.cache = model.init_cache(cfg.n_slots, cfg.max_seq)
+        self.pos = np.zeros((cfg.n_slots,), np.int32)  # next write position
+        self.slot_req: List[Optional[Request]] = [None] * cfg.n_slots
+        self.rng = np.random.default_rng(cfg.seed)
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model.decode_step(p, c, t, pos, div=self.div),
+            donate_argnums=(1,),
+        )
+        self._queue: List[Request] = []
+        self._uid = 0
+
+    # -- request admission -------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int = 32, temperature: float = 0.0) -> int:
+        self._uid += 1
+        self._queue.append(
+            Request(self._uid, np.asarray(prompt, np.int32), max_new_tokens, temperature)
+        )
+        return self._uid
+
+    def _admit(self):
+        for slot in range(self.cfg.n_slots):
+            if self.slot_req[slot] is not None or not self._queue:
+                continue
+            req = self._queue.pop(0)
+            self._prefill_slot(slot, req)
+
+    def _prefill_slot(self, slot: int, req: Request):
+        """Prefill one slot. Single-sequence prefill then scatter its cache
+        into the shared pool at the slot index."""
+        prompt = jnp.asarray(req.prompt)[None, :]
+        logits, cache1 = self.model.prefill(
+            self.params, prompt, max_seq=self.cfg.max_seq, div=self.div
+        )
+
+        def place(pool, fresh):
+            return jax.lax.dynamic_update_index_in_dim(pool, fresh[:, 0], slot, 1)
+
+        self.cache = jax.tree.map(place, self.cache, cache1)
+        self.pos[slot] = len(req.prompt)
+        self.slot_req[slot] = req
+        tok = self._sample(np.asarray(logits)[0, -1], req.temperature)
+        req.out_tokens.append(int(tok))
+        # the prefill-sampled token can already terminate the request
+        if tok == self.cfg.eos or len(req.out_tokens) >= req.max_new_tokens:
+            req.done = True
+            self.slot_req[slot] = None
+            self.pos[slot] = 0
+
+    def _sample(self, logits: np.ndarray, temperature: float) -> int:
+        if temperature <= 0.0:
+            return int(np.argmax(logits))
+        p = np.exp((logits - logits.max()) / temperature)
+        p /= p.sum()
+        return int(self.rng.choice(len(p), p=p))
+
+    # -- decode loop ---------------------------------------------------------
+    def step(self):
+        """One decode step for every active slot."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return False
+        tokens = np.zeros((self.cfg.n_slots, 1), np.int32)
+        for i in active:
+            tokens[i, 0] = self.slot_req[i].out_tokens[-1]
+        cur_pos = jnp.asarray(self.pos)
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens), cur_pos
+        )
+        logits_np = np.asarray(logits)[:, 0]
+        for i in active:
+            req = self.slot_req[i]
+            self.pos[i] += 1
+            tok = self._sample(logits_np[i], req.temperature)
+            req.out_tokens.append(tok)
+            length_done = len(req.out_tokens) >= req.max_new_tokens
+            eos_done = tok == self.cfg.eos
+            full = self.pos[i] + 1 >= self.cfg.max_seq
+            if length_done or eos_done or full:
+                req.done = True
+                self.slot_req[i] = None
+                self.pos[i] = 0
+        return True
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        """Drain queue + slots; returns finished requests."""
+        finished: List[Request] = []
+        seen: Dict[int, Request] = {}
+        for _ in range(max_steps):
+            for r in list(self._queue):
+                seen[r.uid] = r
+            for r in self.slot_req:
+                if r is not None:
+                    seen[r.uid] = r
+            if not self.step():
+                break
+        for r in seen.values():
+            if r.done:
+                finished.append(r)
+        return finished

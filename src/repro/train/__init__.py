@@ -1,0 +1,15 @@
+from repro.train.trainer import (
+    Trainer,
+    TrainerConfig,
+    StragglerMonitor,
+    init_train_state,
+    make_train_step,
+)
+
+__all__ = [
+    "Trainer",
+    "TrainerConfig",
+    "StragglerMonitor",
+    "init_train_state",
+    "make_train_step",
+]

@@ -1,0 +1,20 @@
+from repro.utils.trees import (
+    tree_bytes,
+    tree_count,
+    tree_global_norm,
+    tree_map_with_path_names,
+    tree_zeros_like,
+)
+from repro.utils.logging import get_logger
+from repro.utils.timing import Timer, EWMA
+
+__all__ = [
+    "tree_bytes",
+    "tree_count",
+    "tree_global_norm",
+    "tree_map_with_path_names",
+    "tree_zeros_like",
+    "get_logger",
+    "Timer",
+    "EWMA",
+]

@@ -1,0 +1,58 @@
+"""Pytree helpers used across the framework (no flax/optax dependency)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_count(tree) -> int:
+    """Total number of scalar elements in a pytree of arrays/ShapeDtypeStructs."""
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays/ShapeDtypeStructs."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        total += int(x.size) * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), tree)
+
+
+def tree_global_norm(tree):
+    """Global L2 norm across every leaf (computed in f32)."""
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    return jnp.sqrt(sq)
+
+
+def _path_name(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:  # pragma: no cover - defensive
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_map_with_path_names(fn, tree):
+    """`jax.tree.map` where ``fn(name, leaf)`` receives a '/'-joined path name."""
+    return jax.tree_util.tree_map_with_path(lambda p, x: fn(_path_name(p), x), tree)
+
+
+def tree_paths(tree):
+    """List of '/'-joined path names for every leaf, in tree order."""
+    names = []
+    jax.tree_util.tree_map_with_path(lambda p, x: names.append(_path_name(p)), tree)
+    return names

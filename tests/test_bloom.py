@@ -1,0 +1,154 @@
+"""Bloom filter / Open-sieve tests: the paper's core selection mechanism.
+
+The load-bearing property is the Bloom contract: NO false negatives — the
+paper's "100% true negative rate". Hypothesis drives it with arbitrary
+problem-size sets.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bloom import BloomFilter, encode_mnk, murmur3_32, optimal_params
+from repro.core.opensieve import OpenSieve
+from repro.core.policies import ALL_POLICIES, DP, ALL_SK
+
+
+def test_murmur3_reference_vectors():
+    # canonical MurmurHash3_x86_32 vectors
+    assert murmur3_32(b"") == 0x0
+    assert murmur3_32(b"", 1) == 0x514E28B7
+    assert murmur3_32(b"", 0xFFFFFFFF) == 0x81F16F39
+    assert murmur3_32(b"\xff\xff\xff\xff") == 0x76293B50
+    assert murmur3_32(b"!Ce\x87") == 0xF55B516B
+    assert murmur3_32(b"Hello, world!", 1234) == 0xFAF6CDB3
+    assert (
+        murmur3_32(b"The quick brown fox jumps over the lazy dog", 0x9747B28C)
+        == 0x2FA826CD
+    )
+
+
+sizes_strategy = st.lists(
+    st.tuples(
+        st.integers(min_value=1, max_value=2**20),
+        st.integers(min_value=1, max_value=2**20),
+        st.integers(min_value=1, max_value=2**20),
+    ),
+    min_size=1,
+    max_size=200,
+    unique=True,
+)
+
+
+@settings(max_examples=50, deadline=None)
+@given(sizes_strategy, st.integers(min_value=0, max_value=10))
+def test_no_false_negatives(sizes, seed):
+    bf = BloomFilter.for_capacity(1000, 0.01, seed=seed)
+    for m, n, k in sizes:
+        bf.add_mnk(m, n, k)
+    for m, n, k in sizes:
+        assert bf.query_mnk(m, n, k), "Bloom contract broken: false negative"
+
+
+def test_false_positive_rate_within_bound():
+    bf = BloomFilter.for_capacity(10_000, 0.01, seed=1)
+    rng = np.random.default_rng(0)
+    inserted = {(int(m), int(n), int(k)) for m, n, k in rng.integers(1, 2**30, (10_000, 3))}
+    for m, n, k in inserted:
+        bf.add_mnk(m, n, k)
+    probes = 20_000
+    fp = 0
+    for m, n, k in rng.integers(2**30, 2**31, (probes, 3)):
+        if bf.query_mnk(int(m), int(n), int(k)):
+            fp += 1
+    assert fp / probes < 0.05  # 5x headroom over the design point
+
+
+def test_serialization_roundtrip():
+    bf = BloomFilter.for_capacity(100, 0.01, seed=7)
+    for i in range(50):
+        bf.add_mnk(i, 2 * i + 1, 3 * i + 2)
+    bf2 = BloomFilter.from_bytes(bf.to_bytes())
+    assert np.array_equal(bf.bits, bf2.bits)
+    assert (bf2.n_bits, bf2.n_hashes, bf2.seed, bf2.n_items) == (
+        bf.n_bits,
+        bf.n_hashes,
+        bf.seed,
+        bf.n_items,
+    )
+    for i in range(50):
+        assert bf2.query_mnk(i, 2 * i + 1, 3 * i + 2)
+
+
+def test_merge():
+    a = BloomFilter.for_capacity(100, 0.01, seed=3)
+    b = BloomFilter.for_capacity(100, 0.01, seed=3)
+    a.add_mnk(1, 2, 3)
+    b.add_mnk(4, 5, 6)
+    c = a.merge(b)
+    assert c.query_mnk(1, 2, 3) and c.query_mnk(4, 5, 6)
+    with pytest.raises(ValueError):
+        a.merge(BloomFilter.for_capacity(100, 0.01, seed=4))
+
+
+def test_optimal_params_monotone():
+    b1, k1 = optimal_params(1000, 0.01)
+    b2, k2 = optimal_params(1000, 0.001)
+    assert b2 > b1 and k2 >= k1
+
+
+@settings(max_examples=20, deadline=None)
+@given(sizes_strategy)
+def test_jax_bloom_bit_exact(sizes):
+    """The vectorised jnp murmur/bloom query matches the Python one."""
+    import jax.numpy as jnp
+
+    from repro.core.jax_bloom import bloom_query, mnk_to_words, murmur3_32_words
+
+    bf = BloomFilter.for_capacity(500, 0.02, seed=5)
+    for m, n, k in sizes[: len(sizes) // 2 or 1]:
+        bf.add_mnk(m, n, k)
+    ms = jnp.asarray([s[0] for s in sizes])
+    ns = jnp.asarray([s[1] for s in sizes])
+    ks = jnp.asarray([s[2] for s in sizes])
+    # murmur parity on the canonical key encoding
+    words = mnk_to_words(ms, ns, ks)
+    got_h = np.asarray(murmur3_32_words(words, np.uint32(bf.seed)))
+    want_h = np.array(
+        [murmur3_32(encode_mnk(*s), bf.seed) for s in sizes], dtype=np.uint32
+    )
+    np.testing.assert_array_equal(got_h, want_h)
+    # full query parity
+    got = np.asarray(bloom_query(bf.bits, bf.n_bits, bf.n_hashes, bf.seed, ms, ns, ks))
+    want = np.array([bf.query_mnk(*s) for s in sizes])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_opensieve_build_query_tn():
+    sieve = OpenSieve(ALL_POLICIES, capacity=1000)
+    winners = {}
+    rng = np.random.default_rng(0)
+    pols = list(ALL_POLICIES)
+    for i in range(200):
+        size = tuple(int(x) for x in rng.integers(1, 8192, 3))
+        winners[size] = pols[i % len(pols)]
+    sieve.build_from_winners(winners)
+    assert sieve.validate_true_negative_rate(winners) == 1.0
+    # every winner policy must be among the candidates for its size
+    for size, pol in winners.items():
+        cands = sieve.candidates(size)
+        assert pol in cands
+    assert sieve.stats.elimination_rate > 0.5  # most policies pruned
+
+
+def test_opensieve_serialization_and_header():
+    sieve = OpenSieve(ALL_POLICIES, capacity=100)
+    sieve.insert_winner((64, 64, 64), DP)
+    sieve.insert_winner((128, 256, 8192), ALL_SK)
+    blob = sieve.to_bytes()
+    sieve2 = OpenSieve.from_bytes(blob)
+    assert DP in sieve2.candidates((64, 64, 64))
+    assert ALL_SK in sieve2.candidates((128, 256, 8192))
+    hdr = sieve.encode_cpp_header()
+    assert "#pragma once" in hdr and "opensieve" in hdr
+    assert "dp_bits[]" in hdr and "all_sk_n_hashes" in hdr

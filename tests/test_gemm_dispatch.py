@@ -1,0 +1,84 @@
+"""GEMM dispatch API: correctness, selection logging, backend routing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.gemm import current_log, gemm, gemm_context
+from repro.core.policies import ALL_SK, DP, TileConfig
+from repro.core.selector import KernelSelector, default_selector
+from repro.core.tuner import Tuner
+
+
+def test_gemm_matches_dot():
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.normal(size=(3, 7, 32)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(32, 16)), jnp.float32)
+    with gemm_context(selector=default_selector()):
+        got = gemm(x, w)
+    want = jnp.dot(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_dispatch_logs_local_shape():
+    x = jnp.ones((4, 8, 32), jnp.float32)
+    w = jnp.ones((32, 64), jnp.float32)
+    with gemm_context(selector=default_selector()) as ctx:
+        gemm(x, w, divisors=(4, 2, 1), tag="t")
+    [e] = ctx.log
+    assert e.global_mnk == (32, 64, 32)
+    assert e.local_mnk == (8, 32, 32)
+    assert e.tag == "t"
+
+
+def test_forced_policy_bypasses_selector():
+    x = jnp.ones((2, 32), jnp.float32)
+    w = jnp.ones((32, 8), jnp.float32)
+    with gemm_context(selector=default_selector()) as ctx:
+        gemm(x, w, policy=ALL_SK, cfg=TileConfig(8, 128, 128))
+    assert ctx.log[0].selection.source == "forced"
+    assert ctx.log[0].selection.policy == ALL_SK
+
+
+def test_pallas_interpret_backend():
+    r = np.random.default_rng(1)
+    x = jnp.asarray(r.normal(size=(16, 64)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(64, 128)), jnp.float32)
+    with gemm_context(selector=default_selector(), backend="pallas_interpret"):
+        got = gemm(x, w, policy=ALL_SK, cfg=TileConfig(8, 128, 128))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(jnp.dot(x, w)), rtol=1e-4, atol=1e-4)
+
+
+def test_pallas_backend_uses_tuned_selection():
+    sizes = [(16, 128, 64)]
+    db = Tuner().tune(sizes)
+    sel = KernelSelector(sieve=db.build_sieve(), db=db)
+    r = np.random.default_rng(2)
+    x = jnp.asarray(r.normal(size=(16, 64)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(64, 128)), jnp.float32)
+    with gemm_context(selector=sel, backend="xla") as ctx:
+        got = gemm(x, w)
+    assert ctx.log[0].selection.source == "tuned"
+    np.testing.assert_allclose(np.asarray(got), np.asarray(jnp.dot(x, w)), rtol=1e-5)
+
+
+def test_contraction_mismatch_raises():
+    with pytest.raises(ValueError):
+        gemm(jnp.ones((4, 8)), jnp.ones((9, 2)))
+
+
+def test_gemm_under_jit_traces_once():
+    sel = default_selector()
+
+    @jax.jit
+    def f(x, w):
+        with gemm_context(selector=sel):
+            return gemm(x, w)
+
+    x = jnp.ones((4, 32))
+    w = jnp.ones((32, 8))
+    f(x, w)
+    lookups = sel.stats.lookups
+    f(x * 2, w)  # cached trace: no new selection
+    assert sel.stats.lookups == lookups

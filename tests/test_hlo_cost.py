@@ -1,0 +1,145 @@
+"""Loop-aware HLO cost analysis unit tests (synthetic HLO text)."""
+
+import pytest
+
+from repro.dist.hlo import parse_collectives
+from repro.dist.hlo_cost import HloCostModel, analyze
+
+SYNTHETIC = """
+HloModule test
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %dot.1 = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%dot.1), replica_groups={}, to_apply=%sum
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]) tuple(%ip, %ar)
+}
+
+%cond (pc: (s32[], f32[8,16])) -> pred[] {
+  %pc = (s32[], f32[8,16]) parameter(0)
+  %ic = s32[] get-tuple-element(%pc), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(%ic, %n), direction=LT
+}
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (arg: f32[8,16]) -> f32[8,16] {
+  %arg = f32[8,16]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,16]) tuple(%zero, %arg)
+  %loop = (s32[], f32[8,16]) while(%init), condition=%cond, body=%body
+  %out = f32[8,16]{1,0} get-tuple-element(%loop), index=1
+  %big = f32[128,256]{1,0} constant({...})
+  %ag = f32[128,256]{1,0} all-gather(%out), dimensions={0}
+  ROOT %copy = f32[8,16]{1,0} copy(%out)
+}
+"""
+
+
+def test_trip_count_multiplies_flops():
+    c = analyze(SYNTHETIC)
+    # dot: 2 * (8*16) * 16 = 4096 flops, x12 trips
+    assert c.flops == pytest.approx(4096 * 12)
+
+
+def test_collectives_with_loop_multiplier():
+    c = analyze(SYNTHETIC)
+    # all-reduce in loop: 8*16*4 bytes * 2 (multiplier) * 12 trips
+    # all-gather outside: 128*256*4 bytes * 1
+    want = 8 * 16 * 4 * 2 * 12 + 128 * 256 * 4
+    assert c.coll_bytes == pytest.approx(want)
+    assert c.coll_counts["all-reduce"] == 12
+    assert c.coll_counts["all-gather"] == 1
+
+
+def test_symbol_table_resolves_operand_shapes():
+    m = HloCostModel(SYNTHETIC)
+    tab = m._symtab("body")
+    assert tab["x"] == ("f32", (8, 16))
+    assert tab["w"] == ("f32", (16, 16))
+
+
+def test_plain_parser_counts_without_loops():
+    stats = parse_collectives(SYNTHETIC)
+    # the single-pass parser sees each op once (loop-unaware by design)
+    assert stats.per_op["all-reduce"][0] == 1
+    assert stats.per_op["all-gather"][0] == 1
+
+
+NESTED = """
+HloModule nested
+
+%inner_body (p: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %p = (s32[], f32[4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[4]{0} get-tuple-element(%p), index=1
+  %w2 = f32[4,4]{1,0} constant({...})
+  %dot.9 = f32[4]{0} dot(%x, %w2), lhs_contracting_dims={0}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[4]) tuple(%ip, %dot.9)
+}
+
+%inner_cond (pc: (s32[], f32[4])) -> pred[] {
+  %pc = (s32[], f32[4]) parameter(0)
+  %ic = s32[] get-tuple-element(%pc), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%ic, %n), direction=LT
+}
+
+%outer_body (q: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %q = (s32[], f32[4]) parameter(0)
+  %j = s32[] get-tuple-element(%q), index=0
+  %y = f32[4]{0} get-tuple-element(%q), index=1
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[4]) tuple(%zero, %y)
+  %loop2 = (s32[], f32[4]) while(%init), condition=%inner_cond, body=%inner_body
+  %y2 = f32[4]{0} get-tuple-element(%loop2), index=1
+  %one = s32[] constant(1)
+  %jp = s32[] add(%j, %one)
+  ROOT %t = (s32[], f32[4]) tuple(%jp, %y2)
+}
+
+%outer_cond (qc: (s32[], f32[4])) -> pred[] {
+  %qc = (s32[], f32[4]) parameter(0)
+  %jc = s32[] get-tuple-element(%qc), index=0
+  %n = s32[] constant(3)
+  ROOT %lt = pred[] compare(%jc, %n), direction=LT
+}
+
+ENTRY %main (arg: f32[4]) -> f32[4] {
+  %arg = f32[4]{0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[4]) tuple(%zero, %arg)
+  %loop = (s32[], f32[4]) while(%init), condition=%outer_cond, body=%outer_body
+  ROOT %out = f32[4]{0} get-tuple-element(%loop), index=1
+}
+"""
+
+
+def test_nested_loops_multiply():
+    c = analyze(NESTED)
+    # inner dot: 2*4*4 = 32 flops; x5 inner x3 outer = 480
+    assert c.flops == pytest.approx(32 * 5 * 3)
+
+
+def test_bf16_shadow_detection():
+    from repro.launch.dryrun import _bf16_shadow_bytes
+
+    txt = """
+  %a = bf16[8192,8192]{1,0} parameter(0)
+  %b = f32[8192,8192]{1,0} convert(%a)
+  %c = f32[17,3]{1,0} convert(%x)
+"""
+    # 8192*8192*4 = 256 MiB > threshold; the (17,3) is below threshold
+    assert _bf16_shadow_bytes(txt) == 8192 * 8192 * 4

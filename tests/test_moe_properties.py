@@ -1,0 +1,96 @@
+"""Property tests on the MoE capacity-dispatch invariants (hypothesis)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import tiny
+from repro.dist.sharding import materialize_tree
+from repro.models import build_model
+from repro.models.layers import moe_apply
+
+
+def _moe_params(cfg, seed=0):
+    model = build_model(cfg)
+    params = materialize_tree(model.param_specs(), jax.random.PRNGKey(seed))
+    return jax.tree.map(lambda a: a[0], params["layers"])["moe"]
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=4),  # batch
+    st.sampled_from([8, 16, 32]),  # seq
+    st.integers(min_value=0, max_value=3),  # seed
+)
+def test_moe_output_finite_and_bounded(b, s, seed):
+    cfg = tiny("olmoe-1b-7b")
+    p = _moe_params(cfg, 0)
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(b, s, cfg.d_model)) * 0.5, jnp.float32)
+    out, aux = moe_apply(p, x, cfg, div={})
+    assert out.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert float(aux) >= 0.0
+    # combine is a convex-ish mixture of expert outputs: magnitude bounded
+    # by the largest expert response on these inputs (loose sanity bound)
+    assert float(jnp.max(jnp.abs(out))) < 1e3
+
+
+def test_moe_generous_capacity_matches_token_order_permutation():
+    """With drop-free capacity, permuting the batch rows permutes outputs
+    identically (routing is per-token)."""
+    cfg = dataclasses.replace(tiny("olmoe-1b-7b"), capacity_factor=8.0)
+    p = _moe_params(cfg)
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.normal(size=(4, 8, cfg.d_model)) * 0.5, jnp.float32)
+    out1, _ = moe_apply(p, x, cfg, div={})
+    perm = jnp.asarray([2, 0, 3, 1])
+    out2, _ = moe_apply(p, x[perm], cfg, div={})
+    np.testing.assert_allclose(
+        np.asarray(out2), np.asarray(out1[perm]), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_moe_capacity_actually_drops():
+    """With capacity << demand, outputs differ from the drop-free run (the
+    GShard semantics are real, not vestigial)."""
+    base = tiny("olmoe-1b-7b")
+    p = _moe_params(base)
+    r = np.random.default_rng(1)
+    x = jnp.asarray(r.normal(size=(2, 64, base.d_model)) * 0.5, jnp.float32)
+    lo = dataclasses.replace(base, capacity_factor=0.10)
+    hi = dataclasses.replace(base, capacity_factor=8.0)
+    out_lo, _ = moe_apply(p, x, lo, div={})
+    out_hi, _ = moe_apply(p, x, hi, div={})
+    assert float(jnp.max(jnp.abs(out_lo - out_hi))) > 1e-3
+
+
+def test_moe_zero_gate_token_passthrough_is_zero():
+    """A dropped token's MoE output is exactly zero (residual passthrough
+    happens at the layer level)."""
+    # enough tokens that the min(t,16) decode floor doesn't mask the tiny
+    # capacity factor: demand 512*2/8 = 128/expert >> cap floor 16
+    cfg = dataclasses.replace(tiny("olmoe-1b-7b"), capacity_factor=0.01)
+    p = _moe_params(cfg)
+    r = np.random.default_rng(2)
+    x = jnp.asarray(r.normal(size=(2, 256, cfg.d_model)) * 0.5, jnp.float32)
+    out, _ = moe_apply(p, x, cfg, div={})
+    # most tokens dropped -> many exact-zero rows
+    zero_rows = int(jnp.sum(jnp.all(out == 0.0, axis=-1)))
+    assert zero_rows > 0
+
+
+@pytest.mark.parametrize("impl", ["global", "hinted"])
+def test_moe_impls_agree_dropfree(impl):
+    cfg = dataclasses.replace(tiny("olmoe-1b-7b"), capacity_factor=8.0)
+    p = _moe_params(cfg)
+    r = np.random.default_rng(3)
+    x = jnp.asarray(r.normal(size=(2, 16, cfg.d_model)) * 0.5, jnp.float32)
+    ref, _ = moe_apply(p, x, cfg, div={})
+    cfg2 = dataclasses.replace(cfg, moe_impl=impl)
+    got, _ = moe_apply(p, x, cfg2, div={})
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-4, atol=1e-5)

@@ -1,0 +1,147 @@
+"""Training-loop tests: convergence, microbatch equivalence, bitwise
+checkpoint resume, straggler monitor, gradient compression."""
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.data import SyntheticLMData
+from repro.dist.compression import ErrorFeedback, compress_decompress, quantize_int8
+from repro.dist.sharding import materialize_tree
+from repro.models import build_model
+from repro.optim import make_optimizer, warmup_cosine, constant
+from repro.train import (
+    StragglerMonitor,
+    Trainer,
+    TrainerConfig,
+    init_train_state,
+    make_train_step,
+)
+
+
+def _setup(arch="granite-8b", seed=0):
+    cfg = tiny(arch)
+    model = build_model(cfg)
+    params = materialize_tree(model.param_specs(), jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+def test_loss_decreases():
+    cfg, model, params = _setup()
+    opt = make_optimizer("adamw", warmup_cosine(3e-3, 5, 40))
+    data = SyntheticLMData(cfg, batch=8, seq_len=64, seed=1)
+    t = Trainer(model, opt, data, TrainerConfig(total_steps=25, log_every=100))
+    t.fit(init_train_state(model, opt, params))
+    assert t.history[-1] < t.history[0] * 0.9
+
+
+def test_microbatch_equivalence():
+    """grad accumulation over 4 microbatches == single big batch (same data)."""
+    cfg, model, params = _setup()
+    opt = make_optimizer("sgd", constant(1e-2), momentum=0.0)
+    data = SyntheticLMData(cfg, batch=8, seq_len=32, seed=2)
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+
+    s1 = init_train_state(model, opt, params)
+    step1 = make_train_step(model, opt, microbatches=1)
+    out1, m1 = step1(s1, batch)
+
+    params2 = materialize_tree(model.param_specs(), jax.random.PRNGKey(0))
+    s2 = init_train_state(model, opt, params2)
+    step4 = make_train_step(model, opt, microbatches=4)
+    out4, m4 = step4(s2, batch)
+
+    # losses may differ (per-microbatch means) but params must be close:
+    # with sum-preserving masks each microbatch has identical token counts
+    for a, b in zip(jax.tree.leaves(out1["params"]), jax.tree.leaves(out4["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-5)
+
+
+def test_checkpoint_resume_bitwise(tmp_path):
+    cfg, model, _ = _setup()
+    opt = make_optimizer("adamw", warmup_cosine(1e-3, 2, 30))
+    fresh = lambda: materialize_tree(model.param_specs(), jax.random.PRNGKey(0))
+
+    d_ref = os.path.join(tmp_path, "ref")
+    data = SyntheticLMData(cfg, batch=4, seq_len=32, seed=3)
+    t_ref = Trainer(
+        model, opt, data,
+        TrainerConfig(total_steps=12, ckpt_dir=d_ref, ckpt_every=100, log_every=100),
+    )
+    t_ref.fit(init_train_state(model, opt, fresh()))
+
+    d = os.path.join(tmp_path, "crash")
+    crash = {"armed": True}
+
+    def boom(step):
+        if step == 7 and crash["armed"]:
+            crash["armed"] = False
+            raise RuntimeError("injected")
+
+    data2 = SyntheticLMData(cfg, batch=4, seq_len=32, seed=3)
+    t1 = Trainer(
+        model, opt, data2,
+        TrainerConfig(total_steps=12, ckpt_dir=d, ckpt_every=5, log_every=100, async_ckpt=False),
+        failure_injector=boom,
+    )
+    with pytest.raises(RuntimeError):
+        t1.fit(init_train_state(model, opt, fresh()))
+
+    data3 = SyntheticLMData(cfg, batch=4, seq_len=32, seed=3)
+    t2 = Trainer(
+        model, opt, data3,
+        TrainerConfig(total_steps=12, ckpt_dir=d, ckpt_every=5, log_every=100, async_ckpt=False),
+    )
+    t2.fit(init_train_state(model, opt, fresh()))
+    # the post-resume trajectory must be bitwise identical to uninterrupted
+    assert t2.history[-5:] == t_ref.history[-5:]
+
+
+def test_straggler_monitor():
+    m = StragglerMonitor(k=3.0)
+    for _ in range(20):
+        m.observe(0.1)
+    assert m.flagged == 0
+    assert m.observe(10.0) is True
+    assert m.flagged == 1
+
+
+def test_quantize_roundtrip_error_bounded():
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.normal(size=(256, 128)), jnp.float32)
+    q, s = quantize_int8(x)
+    xr = q.astype(jnp.float32) * s
+    max_err = float(jnp.max(jnp.abs(x - xr)))
+    assert max_err <= float(s) * 0.5 + 1e-9
+
+
+def test_error_feedback_reduces_bias():
+    """With error feedback, the accumulated applied updates converge to the
+    accumulated true gradient (residual stays bounded)."""
+    r = np.random.default_rng(1)
+    g = jnp.asarray(r.normal(size=(64, 64)), jnp.float32) * 1e-3
+    res = jnp.zeros_like(g)
+    applied = jnp.zeros_like(g)
+    for _ in range(50):
+        ghat, res = compress_decompress(g + res)
+        applied += ghat
+    total_true = g * 50
+    rel = float(jnp.linalg.norm(applied - total_true) / jnp.linalg.norm(total_true))
+    assert rel < 0.05
+
+
+def test_grad_compression_training_still_converges():
+    cfg, model, params = _setup()
+    opt = make_optimizer("adamw", warmup_cosine(3e-3, 5, 40))
+    data = SyntheticLMData(cfg, batch=8, seq_len=64, seed=1)
+    t = Trainer(
+        model, opt, data,
+        TrainerConfig(total_steps=25, log_every=100, grad_compression=True),
+    )
+    t.fit(init_train_state(model, opt, params, grad_compression=True))
+    assert t.history[-1] < t.history[0] * 0.9

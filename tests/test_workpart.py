@@ -1,0 +1,131 @@
+"""Property tests for the Stream-K++ work partition (Algorithm 1 math)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.policies import (
+    ALL_POLICIES,
+    ALL_SK,
+    DP,
+    HYBRIDS,
+    Policy,
+    PolicyKind,
+    TileConfig,
+    policy_from_name,
+)
+from repro.core.workpart import (
+    GemmShape,
+    cdiv,
+    iter_to_tile,
+    partition,
+    validate_partition,
+    wave_quantization_efficiency,
+)
+
+CFGS = [TileConfig(128, 128, 128), TileConfig(8, 256, 1024), TileConfig(256, 512, 128)]
+
+dims_m = st.integers(min_value=1, max_value=8192)
+dims_n = st.integers(min_value=1, max_value=8192)
+dims_k = st.integers(min_value=1, max_value=65536)
+grids = st.integers(min_value=1, max_value=64)
+policies = st.sampled_from(ALL_POLICIES)
+cfgs = st.sampled_from(CFGS)
+
+
+@settings(max_examples=300, deadline=None)
+@given(dims_m, dims_n, dims_k, grids, policies, cfgs)
+def test_partition_invariants(m, n, k, g, policy, cfg):
+    p = partition(GemmShape(m, n, k), cfg, g, policy)
+    validate_partition(p)
+
+
+@settings(max_examples=200, deadline=None)
+@given(dims_m, dims_n, dims_k, grids, policies, cfgs)
+def test_every_iteration_covered_exactly_once(m, n, k, g, policy, cfg):
+    """The flattened SK iteration space is a disjoint exact cover, and the
+    SK+DP tile split covers all output tiles."""
+    p = partition(GemmShape(m, n, k), cfg, g, policy)
+    covered = 0
+    prev_end = 0
+    for r in p.sk_ranges:
+        assert r.start >= prev_end or r.size == 0
+        covered += r.size
+        prev_end = max(prev_end, r.end)
+    assert covered == p.sk_total_iters
+    assert p.sk_tiles + p.dp_tiles == p.m_tiles * p.n_tiles
+
+
+@settings(max_examples=200, deadline=None)
+@given(dims_m, dims_n, dims_k, grids, cfgs)
+def test_all_sk_balance(m, n, k, g, cfg):
+    """ALL_SK: no workgroup gets more than ceil(total/g) iterations and the
+    max-min spread is at most ceil (Algorithm 1 line 4)."""
+    p = partition(GemmShape(m, n, k), cfg, g, ALL_SK)
+    total = p.sk_total_iters
+    ipw = cdiv(total, g)
+    sizes = [r.size for r in p.sk_ranges]
+    assert max(sizes) <= ipw
+    assert sum(sizes) == total
+
+
+@settings(max_examples=200, deadline=None)
+@given(dims_m, dims_n, dims_k, grids, cfgs, st.integers(min_value=1, max_value=6))
+def test_hybrid_sk_region_is_prefix_and_bounded(m, n, k, g, cfg, b):
+    p = partition(GemmShape(m, n, k), cfg, g, Policy(PolicyKind.HYBRID, b))
+    t = p.m_tiles * p.n_tiles
+    rem = t % g
+    expected = min(t, (rem if rem else 0) + (b - 1) * g)
+    assert p.sk_tiles == expected
+    # contributions only reference SK-region tiles
+    for c in p.contributions:
+        assert c.tile < p.sk_tiles
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000), st.integers(min_value=1, max_value=512))
+def test_wave_quantization_bounds(tiles, lanes):
+    e = wave_quantization_efficiency(tiles, lanes)
+    assert 0.0 < e <= 1.0
+    if tiles % lanes == 0 and tiles:
+        assert e == 1.0
+
+
+def test_iter_to_tile_roundtrip():
+    ipt = 7
+    for it in range(100):
+        tile, local = iter_to_tile(it, ipt)
+        assert tile * ipt + local == it
+        assert 0 <= local < ipt
+
+
+def test_dp_policy_has_empty_sk_region():
+    p = partition(GemmShape(512, 512, 512), TileConfig(128, 128, 128), 8, DP)
+    assert p.sk_tiles == 0
+    assert p.sk_total_iters == 0
+    assert p.dp_tiles == 16
+
+
+def test_policy_names_roundtrip():
+    for pol in ALL_POLICIES:
+        assert policy_from_name(pol.name) == pol
+    with pytest.raises(ValueError):
+        policy_from_name("bogus")
+
+
+@settings(max_examples=200, deadline=None)
+@given(dims_m, dims_n, dims_k, grids, policies, cfgs)
+def test_partition_stats_agree_with_full_partition(m, n, k, g, policy, cfg):
+    """The O(g) aggregate view must agree with the full O(tiles) partition
+    on every statistic the cost model consumes."""
+    from repro.core.workpart import partition_stats
+
+    p = partition(GemmShape(m, n, k), cfg, g, policy)
+    st = partition_stats(GemmShape(m, n, k), cfg, g, policy)
+    assert st.sk_tiles == p.sk_tiles
+    assert st.sk_total_iters == p.sk_total_iters
+    assert st.dp_tiles == p.dp_tiles
+    assert st.dp_waves == p.dp_waves
+    assert st.n_split_tiles == p.n_split_tiles
+    assert st.extra_contributors == sum(
+        c.num_contributors - 1 for c in p.contributions
+    )
