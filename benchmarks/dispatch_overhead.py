@@ -1,0 +1,105 @@
+"""Dispatch-layer overhead: trace-time selection cost per unique op
+fingerprint.
+
+The GemmOp redesign adds fingerprint construction + op-keyed memoisation in
+front of the paper's DB -> sieve -> cost-model pipeline. Selection runs at
+*trace* time only, but trace time is what the dry-run/compile loop pays, so
+we track it: legacy 2-D ``select(m, n, k)`` vs. the full ``select_op``
+path (plain / grouped / epilogue-fused fingerprints), cold (first sight of
+a fingerprint) and cached (memoised repeat)."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import csv_row, tuned_db
+from repro.core.op import Epilogue, GemmOp
+from repro.core.selector import KernelSelector
+
+
+def _sizes(n: int = 500):
+    rng = np.random.default_rng(0)
+    return [tuple(int(x) for x in row) for row in rng.integers(64, 8192, (n, 3))]
+
+
+def _time_per(fn, items) -> float:
+    t0 = time.perf_counter()
+    for it in items:
+        fn(it)
+    return (time.perf_counter() - t0) / len(items) * 1e6
+
+
+def run() -> List[str]:
+    db = tuned_db()
+    sieve = db.build_sieve()
+    sizes = _sizes()
+    plain_ops = [GemmOp.plain(*s) for s in sizes]
+    grouped_ops = [GemmOp(m, n, k, g=8, kind="grouped") for m, n, k in sizes]
+    fused_ops = [
+        GemmOp.plain(m, n, k, epilogue=Epilogue(activation="gelu")) for m, n, k in sizes
+    ]
+
+    rows: List[str] = []
+
+    # legacy 2-D path, cold then cached
+    sel = KernelSelector(sieve=sieve, db=db)
+    rows.append(
+        csv_row(
+            "dispatch.mnk_cold", _time_per(lambda s: sel.select(*s), sizes),
+            "us/unique (M,N,K), DB+sieve+score",
+        )
+    )
+    rows.append(
+        csv_row(
+            "dispatch.mnk_cached", _time_per(lambda s: sel.select(*s), sizes),
+            "us/memoised repeat",
+        )
+    )
+
+    # GemmOp path over the same shapes (fingerprint build + op-keyed lookup)
+    sel2 = KernelSelector(sieve=sieve, db=db)
+    rows.append(
+        csv_row(
+            "dispatch.op_cold", _time_per(sel2.select_op, plain_ops),
+            "us/unique plain GemmOp",
+        )
+    )
+    rows.append(
+        csv_row(
+            "dispatch.op_cached", _time_per(sel2.select_op, plain_ops),
+            "us/memoised repeat",
+        )
+    )
+
+    # grouped + fused fingerprints miss the (M,N,K)-keyed DB -> sieve/score
+    sel3 = KernelSelector(sieve=sieve, db=db)
+    rows.append(
+        csv_row(
+            "dispatch.op_grouped_cold", _time_per(sel3.select_op, grouped_ops),
+            "us/unique grouped op (G=8)",
+        )
+    )
+    rows.append(
+        csv_row(
+            "dispatch.op_fused_cold", _time_per(sel3.select_op, fused_ops),
+            "us/unique epilogue-fused op",
+        )
+    )
+
+    # fingerprint construction alone (op build + key, no selection)
+    rows.append(
+        csv_row(
+            "dispatch.op_fingerprint",
+            _time_per(lambda s: GemmOp.plain(*s).key, sizes),
+            "us/GemmOp build + key",
+        )
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -13,6 +13,7 @@ def main() -> None:
         arch_dispatch,
         bloom_elimination,
         bloom_query,
+        dispatch_overhead,
         fig2_tolerance,
         fig3_gains,
         kernel_utilization,
@@ -29,6 +30,7 @@ def main() -> None:
         fig3_gains,
         bloom_elimination,
         bloom_query,
+        dispatch_overhead,
         kernel_utilization,
         arch_dispatch,
         production_suite,

@@ -1,6 +1,12 @@
 """The paper's contribution: Stream-K++ scheduling policies, work-centric
 GEMM partitioning, Bloom-filter policy selection (Open-sieve), the
-ckProfiler-analogue tuner, and the GEMM dispatch API."""
+ckProfiler-analogue tuner, and the GemmOp dispatch API.
+
+Dispatch surface: :func:`gemm` / :func:`gemm_grouped` / :func:`gemm_batched`
+build a :class:`GemmOp` fingerprint (local shape, group count, dtypes, fused
+:class:`Epilogue`), the :class:`KernelSelector` keys on it (tuned DB ->
+Bloom sieve -> cost model), and a pluggable backend registry
+(:func:`register_backend`) executes — see ``repro.core.gemm``."""
 
 from repro.core.policies import (
     ALL_POLICIES,
@@ -25,11 +31,21 @@ from repro.core.workpart import (
     wave_quantization_efficiency,
 )
 from repro.core.bloom import BloomFilter, encode_mnk, murmur3_32
+from repro.core.op import Epilogue, GemmOp, encode_key, encode_op
 from repro.core.opensieve import OpenSieve
 from repro.core.costmodel import Machine, V5E, gemm_tflops, gemm_time_s, best_config
 from repro.core.tuner import Tuner, TuningDatabase, TuningRecord
 from repro.core.selector import KernelSelector, Selection, default_selector
-from repro.core.gemm import gemm, gemm_context, current_log
+from repro.core.gemm import (
+    current_log,
+    gemm,
+    gemm_batched,
+    gemm_context,
+    gemm_grouped,
+    get_backend,
+    list_backends,
+    register_backend,
+)
 
 __all__ = [
     "ALL_POLICIES",
@@ -65,7 +81,16 @@ __all__ = [
     "KernelSelector",
     "Selection",
     "default_selector",
+    "Epilogue",
+    "GemmOp",
+    "encode_key",
+    "encode_op",
     "gemm",
+    "gemm_grouped",
+    "gemm_batched",
     "gemm_context",
     "current_log",
+    "register_backend",
+    "get_backend",
+    "list_backends",
 ]

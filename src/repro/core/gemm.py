@@ -1,18 +1,31 @@
 """Public GEMM dispatch API — the paper's technique as a first-class framework
 feature.
 
-Every projection in ``repro.models`` routes through :func:`gemm`. At trace
-time the dispatcher:
+Every matmul in ``repro.models`` (attention/MLP projections, grouped MoE
+expert GEMMs, batched cross-attention precomputes) routes through one of the
+entry points here. At trace time the dispatcher:
 
-  1. computes the *local* (per-shard) (M, N, K) the MXU will actually see —
-     callers pass the sharding divisors their GSPMD spec implies;
+  1. builds a :class:`repro.core.op.GemmOp` — the full problem fingerprint:
+     global dims, per-shard local dims (callers pass the sharding divisors
+     their GSPMD spec implies), group count, dtypes, and the fused
+     :class:`~repro.core.op.Epilogue`;
   2. asks the :class:`KernelSelector` (tuned DB -> Bloom filters -> cost
-     model) for a (policy, tile config);
-  3. executes via the chosen backend:
-       * ``xla``               — jnp.dot (CPU / dry-run lowering; selection
-                                 still exercised + logged),
-       * ``pallas``            — the Stream-K++ Pallas kernel (TPU),
-       * ``pallas_interpret``  — same kernel, interpret mode (CPU-validated).
+     model, keyed on the op fingerprint) for a (policy, tile config);
+  3. executes via the backend registered under the context's backend name.
+
+Backends are *pluggable*: :func:`register_backend` installs a new execution
+strategy without touching this module. Built-ins:
+
+  * ``xla``               — jnp einsum (CPU / dry-run lowering; selection
+                            still exercised + logged, epilogue fused by XLA),
+  * ``pallas``            — the Stream-K++ Pallas kernels (TPU; epilogue
+                            fused into the kernel flush / fix-up phase),
+  * ``pallas_interpret``  — same kernels, interpret mode (CPU-validated).
+
+Entry points: :func:`gemm` (2-D weight, the original per-call surface),
+:func:`gemm_grouped` (stacked ``(G, K, N)`` expert weights — each group is
+the same local problem, one selection covers the group), and
+:func:`gemm_batched` (independent per-batch operands of equal shape).
 
 Backend and selector are ambient (context-managed) so model code stays
 declarative. Every decision is appended to the active ``SelectionLog`` for
@@ -24,29 +37,125 @@ from __future__ import annotations
 import threading
 from contextlib import contextmanager
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.op import Epilogue, GemmOp, as_epilogue
 from repro.core.policies import Policy, TileConfig
 from repro.core.selector import KernelSelector, Selection, default_selector
 
 _state = threading.local()
 
 
+# ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+
+#: BackendFn(x, w, *, op, policy, cfg, bias, operand) -> out
+#:   x: (G, M, K), w: (G, K, N), bias: (G, N) | None, operand: (G, M, N) | None
+#:   returns (G, M, N) in op.out_dtype. G == 1 for plain 2-D dispatches.
+BackendFn = Callable[..., jax.Array]
+
+_BACKENDS: Dict[str, BackendFn] = {}
+
+
+def register_backend(name: str, fn: BackendFn, *, overwrite: bool = False) -> None:
+    """Register an execution backend under ``name`` (see BackendFn contract).
+
+    New backends plug in without touching the dispatcher: selection,
+    logging, and the public API are backend-agnostic."""
+    if name in _BACKENDS and not overwrite:
+        raise ValueError(f"backend {name!r} already registered")
+    _BACKENDS[name] = fn
+
+
+def list_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_BACKENDS))
+
+
+def get_backend(name: str) -> BackendFn:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown gemm backend {name!r}; registered backends: "
+            f"{list(list_backends())}"
+        ) from None
+
+
+def _xla_backend(x, w, *, op: GemmOp, policy, cfg, bias, operand):
+    acc = jnp.einsum("gmk,gkn->gmn", x, w, preferred_element_type=jnp.float32)
+    acc = op.epilogue.apply(
+        acc,
+        bias=None if bias is None else bias[:, None, :],
+        operand=operand,
+    )
+    return acc.astype(op.out_dtype)
+
+
+def _make_pallas_backend(interpret: bool) -> BackendFn:
+    def backend(x, w, *, op: GemmOp, policy, cfg, bias, operand):
+        from repro.kernels.streamk import ops as sk_ops
+
+        # One pallas_call per group: trace cost grows with G (tracked by
+        # benchmarks/dispatch_overhead.py). Folding G into the kernel grid
+        # (as dp_gemm does for output tiles) would lower once per op; the
+        # partition math is 2-D today, so that is a follow-up.
+        outs = []
+        for i in range(x.shape[0]):  # static group count
+            outs.append(
+                sk_ops.gemm(
+                    x[i],
+                    w[i],
+                    policy=policy,
+                    cfg=cfg,
+                    interpret=interpret,
+                    out_dtype=jnp.dtype(op.out_dtype),
+                    epilogue=op.epilogue,
+                    bias=None if bias is None else bias[i],
+                    operand=None if operand is None else operand[i],
+                )
+            )
+        return jnp.stack(outs)
+
+    return backend
+
+
+register_backend("xla", _xla_backend)
+register_backend("pallas", _make_pallas_backend(interpret=False))
+register_backend("pallas_interpret", _make_pallas_backend(interpret=True))
+
+
+# ---------------------------------------------------------------------------
+# Dispatch context + selection log
+# ---------------------------------------------------------------------------
+
+
 @dataclass
 class SelectionLogEntry:
-    global_mnk: Tuple[int, int, int]
-    local_mnk: Tuple[int, int, int]
+    op: GemmOp
     selection: Selection
     tag: str = ""
+
+    @property
+    def global_mnk(self) -> Tuple[int, int, int]:
+        return self.op.global_mnk
+
+    @property
+    def local_mnk(self) -> Tuple[int, int, int]:
+        return self.op.local
+
+    @property
+    def g(self) -> int:
+        return self.op.g
 
 
 @dataclass
 class GemmContext:
     selector: KernelSelector
-    backend: str = "xla"  # "xla" | "pallas" | "pallas_interpret"
+    backend: str = "xla"  # any name in list_backends()
     log: List[SelectionLogEntry] = field(default_factory=list)
 
 
@@ -65,6 +174,8 @@ def gemm_context(
     """Install a dispatch context for the duration of a trace/eval."""
     old = getattr(_state, "ctx", None)
     base = old or _ctx()
+    if backend is not None:
+        get_backend(backend)  # fail fast on unknown names
     _state.ctx = GemmContext(
         selector=selector if selector is not None else base.selector,
         backend=backend if backend is not None else base.backend,
@@ -79,6 +190,61 @@ def current_log() -> List[SelectionLogEntry]:
     return _ctx().log
 
 
+def current_selector() -> KernelSelector:
+    return _ctx().selector
+
+
+# ---------------------------------------------------------------------------
+# Core dispatch
+# ---------------------------------------------------------------------------
+
+
+def _dispatch(
+    x: jax.Array,  # (G, M, K)
+    w: jax.Array,  # (G, K, N)
+    op: GemmOp,
+    *,
+    tag: str,
+    policy: Optional[Policy],
+    cfg: Optional[TileConfig],
+    bias: Optional[jax.Array],
+    operand: Optional[jax.Array],
+) -> jax.Array:
+    ctx = _ctx()
+    if policy is None and cfg is None:
+        sel = ctx.selector.select_op(op)
+        policy, cfg = sel.policy, sel.cfg
+    elif policy is not None and cfg is not None:
+        sel = ctx.selector.record_forced(op, policy, cfg)
+    else:
+        # partial override: fill the missing half from selection, but log
+        # what actually runs (source "forced") — never the selector's own
+        # pick, which may pair a different policy with this cfg
+        sel = ctx.selector.select_partial(op, policy, cfg)
+        policy, cfg = sel.policy, sel.cfg
+    ctx.log.append(SelectionLogEntry(op, sel, tag))
+    backend = get_backend(ctx.backend)
+    return backend(x, w, op=op, policy=policy, cfg=cfg, bias=bias, operand=operand)
+
+
+def _check_epilogue(epilogue: Epilogue, bias, operand) -> None:
+    if epilogue.bias != (bias is not None):
+        raise ValueError(
+            f"epilogue {epilogue.name!r} expects bias={epilogue.bias} but "
+            f"bias operand is {'missing' if bias is None else 'present'}"
+        )
+    if (epilogue.binary != "none") != (operand is not None):
+        raise ValueError(
+            f"epilogue {epilogue.name!r} expects "
+            f"{'an' if epilogue.binary != 'none' else 'no'} binary operand"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+
 def gemm(
     x: jax.Array,
     w: jax.Array,
@@ -88,49 +254,184 @@ def gemm(
     tag: str = "",
     policy: Optional[Policy] = None,
     cfg: Optional[TileConfig] = None,
+    epilogue: Union[None, str, Epilogue] = None,
+    bias: Optional[jax.Array] = None,
+    operand: Optional[jax.Array] = None,
 ) -> jax.Array:
     """``x @ w`` with Stream-K++ kernel selection.
 
     x: (..., K); w: (K, N) -> (..., N). ``divisors`` are the GSPMD sharding
     factors (dm, dn, dk) so selection keys on the per-shard local shape.
+    ``epilogue`` fuses bias/activation/binary post-ops into the kernel
+    (``bias``: (N,), ``operand``: (..., N) matching the output).
     ``policy``/``cfg`` override selection (used by the tuner itself).
     """
     if x.shape[-1] != w.shape[0]:
         raise ValueError(f"gemm contraction mismatch: {x.shape} @ {w.shape}")
-    ctx = _ctx()
+    epilogue = _infer_epilogue(epilogue, bias, operand)
+    lead = x.shape[:-1]
     m_global = 1
-    for d in x.shape[:-1]:
+    for d in lead:
         m_global *= int(d)
     k_global, n_global = int(w.shape[0]), int(w.shape[1])
-    dm, dn, dk = divisors
-    local = (max(1, m_global // dm), max(1, n_global // dn), max(1, k_global // dk))
-
-    if policy is None or cfg is None:
-        sel = ctx.selector.select(*local)
-        policy = policy or sel.policy
-        cfg = cfg or sel.cfg
-    else:
-        sel = Selection(policy, cfg, "forced", 0, 0)
-    ctx.log.append(
-        SelectionLogEntry((m_global, n_global, k_global), local, sel, tag)
+    out_dtype = jnp.dtype(out_dtype or x.dtype)
+    op = GemmOp(
+        m_global,
+        n_global,
+        k_global,
+        in_dtype=_in_dtype_fingerprint(x, w),
+        out_dtype=str(out_dtype),
+        divisors=tuple(divisors),
+        epilogue=epilogue,
     )
-
-    out_dtype = out_dtype or x.dtype
-    if ctx.backend == "xla":
-        out = jnp.dot(x, w, preferred_element_type=jnp.float32)
-        return out.astype(out_dtype)
-
-    # Pallas path: flatten leading dims, run the kernel, restore shape.
-    from repro.kernels.streamk import ops as sk_ops
-
-    lead = x.shape[:-1]
-    x2 = x.reshape((m_global, k_global))
-    out2 = sk_ops.gemm(
-        x2,
-        w,
+    out = _dispatch(
+        x.reshape(1, m_global, k_global),
+        w[None],
+        op,
+        tag=tag,
         policy=policy,
         cfg=cfg,
-        interpret=(ctx.backend == "pallas_interpret"),
-        out_dtype=out_dtype,
+        bias=None if bias is None else bias.reshape(1, n_global),
+        operand=None if operand is None else operand.reshape(1, m_global, n_global),
     )
-    return out2.reshape((*lead, n_global))
+    return out.reshape(*lead, n_global)
+
+
+def _gemm_stacked(
+    kind: str,
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    divisors: Tuple[int, int, int],
+    g_divisor: int,
+    out_dtype,
+    tag: str,
+    policy: Optional[Policy],
+    cfg: Optional[TileConfig],
+    epilogue: Union[None, str, Epilogue],
+    bias: Optional[jax.Array],
+    operand: Optional[jax.Array],
+) -> jax.Array:
+    if x.ndim != 3 or w.ndim != 3:
+        raise ValueError(
+            f"gemm_{kind} expects x (G, M, K) and w (G, K, N); got "
+            f"{x.shape} @ {w.shape}"
+        )
+    if x.shape[0] != w.shape[0] or x.shape[2] != w.shape[1]:
+        raise ValueError(f"gemm_{kind} mismatch: {x.shape} @ {w.shape}")
+    epilogue = _infer_epilogue(epilogue, bias, operand)
+    g, m, k = (int(d) for d in x.shape)
+    n = int(w.shape[2])
+    out_dtype = jnp.dtype(out_dtype or x.dtype)
+    op = GemmOp(
+        m,
+        n,
+        k,
+        g=g,
+        kind=kind,
+        in_dtype=_in_dtype_fingerprint(x, w),
+        out_dtype=str(out_dtype),
+        divisors=tuple(divisors),
+        g_divisor=g_divisor,
+        epilogue=epilogue,
+    )
+    if bias is not None and bias.ndim == 1:
+        bias = jnp.broadcast_to(bias[None], (g, n))
+    return _dispatch(
+        x, w, op, tag=tag, policy=policy, cfg=cfg, bias=bias, operand=operand
+    )
+
+
+def gemm_grouped(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    divisors: Tuple[int, int, int] = (1, 1, 1),
+    g_divisor: int = 1,
+    out_dtype=None,
+    tag: str = "",
+    policy: Optional[Policy] = None,
+    cfg: Optional[TileConfig] = None,
+    epilogue: Union[None, str, Epilogue] = None,
+    bias: Optional[jax.Array] = None,
+    operand: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Grouped GEMM over stacked weights: x (G, M, K) @ w (G, K, N) ->
+    (G, M, N) — the MoE expert shape (G experts, M = expert capacity).
+
+    All groups share one local problem, so a single selection covers the
+    group; the op fingerprint still records ``G`` (and ``g_divisor``, the
+    expert-parallel sharding factor) so grouped shapes tune and prune
+    independently of the plain 2-D path. ``bias``: (G, N) or (N,);
+    ``operand``: (G, M, N).
+    """
+    return _gemm_stacked(
+        "grouped",
+        x,
+        w,
+        divisors=divisors,
+        g_divisor=g_divisor,
+        out_dtype=out_dtype,
+        tag=tag,
+        policy=policy,
+        cfg=cfg,
+        epilogue=epilogue,
+        bias=bias,
+        operand=operand,
+    )
+
+
+def gemm_batched(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    divisors: Tuple[int, int, int] = (1, 1, 1),
+    g_divisor: int = 1,
+    out_dtype=None,
+    tag: str = "",
+    policy: Optional[Policy] = None,
+    cfg: Optional[TileConfig] = None,
+    epilogue: Union[None, str, Epilogue] = None,
+    bias: Optional[jax.Array] = None,
+    operand: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Batched GEMM: x (B, M, K) @ w (B, K, N) -> (B, M, N), independent
+    per-batch operands of equal shape (one selection covers the batch)."""
+    return _gemm_stacked(
+        "batched",
+        x,
+        w,
+        divisors=divisors,
+        g_divisor=g_divisor,
+        out_dtype=out_dtype,
+        tag=tag,
+        policy=policy,
+        cfg=cfg,
+        epilogue=epilogue,
+        bias=bias,
+        operand=operand,
+    )
+
+
+def _in_dtype_fingerprint(x: jax.Array, w: jax.Array) -> str:
+    """Input-dtype component of the op key. Mixed activation/weight dtypes
+    (e.g. bf16 activations against int8 weights) select different kernels,
+    so they must not collide on one fingerprint."""
+    xd, wd = str(x.dtype), str(w.dtype)
+    return xd if xd == wd else f"{xd}*{wd}"
+
+
+def _infer_epilogue(
+    epilogue: Union[None, str, Epilogue], bias, operand
+) -> Epilogue:
+    """Normalise the epilogue argument and cross-check it against the
+    supplied operands (a bias without ``bias=True`` in the spec — or vice
+    versa — is a caller bug, not something to guess around)."""
+    if epilogue is None and (bias is not None or operand is not None):
+        raise ValueError(
+            "bias/operand supplied without an epilogue spec; pass "
+            "epilogue=Epilogue(bias=..., binary=...)"
+        )
+    spec = as_epilogue(epilogue)
+    _check_epilogue(spec, bias, operand)
+    return spec

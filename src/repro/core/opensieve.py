@@ -20,10 +20,21 @@ import struct
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
-from repro.core.bloom import BloomFilter, encode_mnk
+from repro.core.bloom import BloomFilter
+from repro.core.op import GemmOp, encode_key
 from repro.core.policies import ALL_POLICIES, Policy, policy_from_name
 
 MNK = Tuple[int, int, int]
+
+
+def _as_key_bytes(key) -> bytes:
+    """Canonical filter bytes for any key form: raw bytes, a GemmOp, a bare
+    (M, N, K), or an extended op-key tuple."""
+    if isinstance(key, bytes):
+        return key
+    if isinstance(key, GemmOp):
+        return key.encode()
+    return encode_key(tuple(key))
 
 
 @dataclass
@@ -59,28 +70,43 @@ class OpenSieve:
         self.stats = QueryStats()
 
     # -- build ----------------------------------------------------------------
-    def insert_winner(self, size: MNK, policy: Policy) -> None:
+    def insert_winner(self, key, policy: Policy) -> None:
+        """``key``: (M, N, K), an extended op key, a GemmOp, or raw bytes."""
         if policy.name not in self.filters:
             raise KeyError(f"policy {policy.name} not registered")
-        self.filters[policy.name].add(encode_mnk(*size))
+        self.filters[policy.name].add(_as_key_bytes(key))
 
-    def build_from_winners(self, winners: Mapping[MNK, Policy]) -> "OpenSieve":
-        for size, pol in winners.items():
-            self.insert_winner(size, pol)
+    def build_from_winners(self, winners: Mapping) -> "OpenSieve":
+        for key, pol in winners.items():
+            self.insert_winner(key, pol)
         return self
 
     # -- query ------------------------------------------------------------------
-    def candidates(self, size: MNK) -> List[Policy]:
-        """Policies whose filter answers "possibly present" for this size."""
-        key = encode_mnk(*size)
-        out = []
-        for p in self.policies:
-            if key in self.filters[p.name]:
-                out.append(p)
+    def _query(self, key) -> List[Policy]:
+        """Uncounted filter probe (key forms as in :meth:`insert_winner`)."""
+        kb = _as_key_bytes(key)
+        return [p for p in self.policies if kb in self.filters[p.name]]
+
+    def candidates_any(self, *keys) -> List[Policy]:
+        """First non-empty candidate set across alternative key encodings
+        for ONE dispatch (e.g. an op's exact fingerprint, then the
+        dtype-agnostic legacy (M, N, K)). Accounted as a single
+        consultation in ``QueryStats`` — the counters back the paper's
+        elimination-rate claim, so one dispatch must count once however
+        many key forms it probes."""
+        out: List[Policy] = []
+        for key in keys:
+            out = self._query(key)
+            if out:
+                break
         self.stats.queries += 1
         self.stats.candidate_evals += len(out)
         self.stats.pruned_evals += len(self.policies) - len(out)
         return out
+
+    def candidates(self, key) -> List[Policy]:
+        """Policies whose filter answers "possibly present" for this key."""
+        return self.candidates_any(key)
 
     def validate_true_negative_rate(self, winners: Mapping[MNK, Policy]) -> float:
         """Assert the Bloom contract on a winner map: the true winner is never
@@ -88,7 +114,7 @@ class OpenSieve:
         pairs (1.0 == every "absent" answer was correct; Bloom guarantees the
         converse direction, this checks our plumbing end-to-end)."""
         for size, pol in winners.items():
-            key = encode_mnk(*size)
+            key = _as_key_bytes(size)
             if key not in self.filters[pol.name]:
                 raise AssertionError(
                     f"false negative for {size}/{pol.name} — Bloom contract broken"
@@ -98,7 +124,7 @@ class OpenSieve:
         # this is 1.0 unless plumbing is broken; we still measure it honestly.
         negatives = genuine = 0
         for size in winners:
-            key = encode_mnk(*size)
+            key = _as_key_bytes(size)
             for p in self.policies:
                 if key not in self.filters[p.name]:
                     negatives += 1

@@ -1,6 +1,7 @@
 """Runtime kernel selection: Open-sieve query -> candidate policies -> pick.
 
-Dispatch path for a GEMM of local shape (M, N, K):
+Dispatch path for a :class:`repro.core.op.GemmOp` (selection keys on the op
+fingerprint — per-shard local shape, group count, dtypes, epilogue):
   1. Exact tuning-database hit -> return the tuned (policy, config).
   2. Otherwise query the Bloom filters. Policies answering "definitely
      absent" are pruned (the paper's headline: up to ~95.8% of evaluations
@@ -11,9 +12,17 @@ Dispatch path for a GEMM of local shape (M, N, K):
      Stream-K paper proposes — data-parallel — scored against ALL_SK for
      safety.
 
+Plain 2-D ops key as the legacy ``(M, N, K)`` tuple, so tuning databases and
+sieves built from bare problem sizes keep working; grouped / epilogue-fused
+ops key (and therefore tune and prune) independently.
+
 Selection happens at *trace time* (shapes are static under jit), so it costs
 nothing at runtime on device; the recorded ``SelectionLog`` is how tests and
-benchmarks introspect dispatch decisions.
+benchmarks introspect dispatch decisions. ``SelectorStats`` counts every
+dispatch exactly once (cold source, cache hit, or forced), and memoised
+repeats re-credit their evals/pruned, so ``elimination_rate`` is weighted by
+what the workload actually dispatched — not just by unique shapes. Fully
+forced overrides perform no selection work and leave the rate untouched.
 """
 
 from __future__ import annotations
@@ -22,6 +31,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import costmodel
+from repro.core.op import GemmOp, OpKey
 from repro.core.opensieve import OpenSieve
 from repro.core.policies import (
     ALL_POLICIES,
@@ -42,7 +52,7 @@ MNK = Tuple[int, int, int]
 class Selection:
     policy: Policy
     cfg: TileConfig
-    source: str  # "tuned" | "sieve" | "fallback"
+    source: str  # "tuned" | "sieve" | "fallback" | "forced"
     evals: int  # how many (policy) evaluations the scorer performed
     pruned: int  # how many the Bloom filters eliminated
 
@@ -53,6 +63,8 @@ class SelectorStats:
     tuned_hits: int = 0
     sieve_hits: int = 0
     fallbacks: int = 0
+    cache_hits: int = 0  # memoised repeats of an already-selected op
+    forced: int = 0  # caller-supplied (policy, cfg) overrides
     evals: int = 0
     pruned: int = 0
 
@@ -87,7 +99,7 @@ class KernelSelector:
         self.policies = tuple(policies)
         self.tile_configs = tuple(tile_configs)
         self.stats = SelectorStats()
-        self._cache: Dict[MNK, Selection] = {}
+        self._cache: Dict[OpKey, Selection] = {}
 
     # -- scoring -----------------------------------------------------------
     def _score(self, size: MNK, pols: Sequence[Policy]) -> Tuple[Policy, TileConfig, int]:
@@ -101,16 +113,34 @@ class KernelSelector:
                 best = (pol, cfg, tf)
         return best[0], best[1], evals
 
-    # -- public ------------------------------------------------------------
-    def select(self, m: int, n: int, k: int) -> Selection:
-        size = (int(m), int(n), int(k))
-        if size in self._cache:
-            return self._cache[size]
-        self.stats.lookups += 1
+    def _db_record(self, op: GemmOp):
+        """Exact op-key hit first; shape-only ops of any dtype then fall
+        back to the dtype-agnostic legacy (M, N, K) record (the paper's
+        databases carry no dtype — a bf16 model must still benefit from
+        artifacts tuned on bare sizes)."""
+        if self.db is None:
+            return None
+        rec = self.db.records.get(op.key)
+        if rec is None and op.mnk_compatible:
+            rec = self.db.records.get(op.local)
+        return rec
 
+    def _sieve_candidates(self, op: GemmOp):
+        if op.mnk_compatible and op.key != op.local:
+            return self.sieve.candidates_any(op.key, op.local)
+        return self.sieve.candidates(op.key)
+
+    def _lookup(self, op: GemmOp) -> Tuple[Selection, bool]:
+        """Memoised selection for an op; returns (selection, was_cached).
+        No stats bookkeeping — callers categorise exactly once."""
+        key = op.key
+        if key in self._cache:
+            return self._cache[key], True
+
+        size = op.local
         sel: Selection
-        if self.db is not None and size in self.db.records:
-            rec = self.db.records[size]
+        rec = self._db_record(op)
+        if rec is not None:
             sel = Selection(
                 policy=policy_from_name(rec.policy),
                 cfg=_cfg_from_name(rec.cfg),
@@ -118,27 +148,82 @@ class KernelSelector:
                 evals=0,
                 pruned=len(self.policies),
             )
-            self.stats.tuned_hits += 1
         elif self.sieve is not None:
-            cands = self.sieve.candidates(size)
+            cands = self._sieve_candidates(op)
             pruned = len(self.policies) - len(cands)
             if cands:
                 pol, cfg, evals = self._score(size, cands)
                 sel = Selection(pol, cfg, "sieve", evals, pruned)
-                self.stats.sieve_hits += 1
             else:
                 pol, cfg, evals = self._score(size, (DP, ALL_SK))
                 sel = Selection(pol, cfg, "fallback", evals, pruned)
-                self.stats.fallbacks += 1
         else:
             pol, cfg, evals = self._score(size, self.policies)
             sel = Selection(pol, cfg, "fallback", evals, 0)
-            self.stats.fallbacks += 1
+        self._cache[key] = sel
+        return sel, False
 
+    # -- public ------------------------------------------------------------
+    def select_op(self, op: GemmOp) -> Selection:
+        """Select (policy, tile config) for a full op fingerprint.
+
+        Every dispatch contributes its (memoised) evals/pruned to ``stats``,
+        so ``elimination_rate`` is workload-weighted — a hot op that was
+        pruned once keeps crediting that pruning on every repeat, matching
+        the paper's per-dispatch accounting. Exactly one category counter
+        (tuned/sieve/fallback/cache_hit) is bumped per lookup."""
+        self.stats.lookups += 1
+        sel, cached = self._lookup(op)
+        if cached:
+            self.stats.cache_hits += 1
+        elif sel.source == "tuned":
+            self.stats.tuned_hits += 1
+        elif sel.source == "sieve":
+            self.stats.sieve_hits += 1
+        else:
+            self.stats.fallbacks += 1
         self.stats.evals += sel.evals
         self.stats.pruned += sel.pruned
-        self._cache[size] = sel
         return sel
+
+    def select(self, m: int, n: int, k: int) -> Selection:
+        """Legacy 2-D entry point: select for a bare local (M, N, K)."""
+        return self.select_op(GemmOp.plain(m, n, k))
+
+    def select_partial(
+        self,
+        op: GemmOp,
+        policy: Optional[Policy] = None,
+        cfg: Optional[TileConfig] = None,
+    ) -> Selection:
+        """Fill the missing half of a caller override from normal selection.
+        Categorised as one ``forced`` lookup (never double-counted under a
+        second category); the underlying selection's evals/pruned still
+        count, since the selector really did that work."""
+        self.stats.lookups += 1
+        self.stats.forced += 1
+        base, _ = self._lookup(op)
+        sel = Selection(
+            policy if policy is not None else base.policy,
+            cfg if cfg is not None else base.cfg,
+            "forced",
+            base.evals,
+            base.pruned,
+        )
+        self.stats.evals += sel.evals
+        self.stats.pruned += sel.pruned
+        return sel
+
+    def record_forced(
+        self, op: GemmOp, policy: Policy, cfg: TileConfig
+    ) -> Selection:
+        """Account a fully caller-forced (policy, cfg) dispatch (tuner
+        sweeps, tests). It performs no evaluations and prunes nothing, so it
+        leaves ``elimination_rate`` untouched — but it is a real dispatch,
+        visible as one ``forced`` lookup."""
+        self.stats.lookups += 1
+        self.stats.forced += 1
+        return Selection(policy, cfg, "forced", 0, 0)
 
 
 def default_selector() -> KernelSelector:

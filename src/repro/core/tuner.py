@@ -15,6 +15,7 @@ from dataclasses import dataclass, field, asdict
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core import costmodel
+from repro.core.op import GemmOp, OpKey, key_from_str, key_to_str
 from repro.core.opensieve import OpenSieve
 from repro.core.policies import (
     ALL_POLICIES,
@@ -30,9 +31,21 @@ MNK = Tuple[int, int, int]
 MeasureFn = Callable[[GemmShape, Policy, TileConfig], float]
 
 
+def _as_key(entry) -> OpKey:
+    """Normalise a tuning target to its database key: a GemmOp keys on its
+    fingerprint, a bare 3-sequence on the legacy (M, N, K) tuple."""
+    if isinstance(entry, GemmOp):
+        return entry.key
+    return tuple(entry)
+
+
+def _key_local(key: OpKey) -> MNK:
+    return (key[0], key[1], key[2])
+
+
 @dataclass
 class TuningRecord:
-    size: MNK
+    size: OpKey  # legacy (M, N, K) or extended op-fingerprint key
     policy: str  # winner policy name
     cfg: str  # winner tile config name
     tflops: float
@@ -53,12 +66,12 @@ class TuningRecord:
 
 @dataclass
 class TuningDatabase:
-    records: Dict[MNK, TuningRecord] = field(default_factory=dict)
-    #: per-size best tflops for every policy (policy name -> tflops); kept so
+    records: Dict[OpKey, TuningRecord] = field(default_factory=dict)
+    #: per-key best tflops for every policy (policy name -> tflops); kept so
     #: the Fig-2 tolerance analysis does not need to re-measure.
-    per_policy: Dict[MNK, Dict[str, float]] = field(default_factory=dict)
+    per_policy: Dict[OpKey, Dict[str, float]] = field(default_factory=dict)
 
-    def winners(self) -> Dict[MNK, Policy]:
+    def winners(self) -> Dict[OpKey, Policy]:
         return {s: policy_from_name(r.policy) for s, r in self.records.items()}
 
     def build_sieve(self, capacity: int = 10_000, fp_rate: float = 0.01) -> OpenSieve:
@@ -68,9 +81,9 @@ class TuningDatabase:
     # -- persistence --------------------------------------------------------
     def save(self, path: str) -> None:
         payload = {
-            "records": {",".join(map(str, s)): asdict(r) for s, r in self.records.items()},
+            "records": {key_to_str(s): asdict(r) for s, r in self.records.items()},
             "per_policy": {
-                ",".join(map(str, s)): pp for s, pp in self.per_policy.items()
+                key_to_str(s): pp for s, pp in self.per_policy.items()
             },
         }
         with open(path, "w") as f:
@@ -82,12 +95,11 @@ class TuningDatabase:
             payload = json.load(f)
         db = cls()
         for key, rec in payload["records"].items():
-            size = tuple(int(x) for x in key.split(","))
+            size = key_from_str(key)
             rec["size"] = size
             db.records[size] = TuningRecord(**rec)
         for key, pp in payload.get("per_policy", {}).items():
-            size = tuple(int(x) for x in key.split(","))
-            db.per_policy[size] = pp
+            db.per_policy[key_from_str(key)] = pp
         return db
 
 
@@ -146,8 +158,12 @@ class Tuner:
         self.measure = measure_fn or measure_model(mach)
         self.mach = mach
 
-    def tune_size(self, size: MNK) -> Tuple[TuningRecord, Dict[str, float]]:
-        shape = GemmShape(*size)
+    def tune_size(self, size) -> Tuple[TuningRecord, Dict[str, float]]:
+        """Sweep one tuning target — a bare (M, N, K) or a full GemmOp
+        (grouped / fused ops tune per-group on their local shape and record
+        under their op-fingerprint key)."""
+        key = _as_key(size)
+        shape = GemmShape(*_key_local(key))
         per_policy: Dict[str, float] = {}
         per_policy_cfg: Dict[str, str] = {}
         for pol in self.policies:
@@ -174,7 +190,7 @@ class Tuner:
                 r_name, r_tf = name, tf
                 break
         rec = TuningRecord(
-            size=size,
+            size=key,
             policy=w_name,
             cfg=per_policy_cfg[w_name],
             tflops=w_tf,
@@ -184,12 +200,13 @@ class Tuner:
         )
         return rec, per_policy
 
-    def tune(self, sizes: Sequence[MNK], progress_every: int = 0) -> TuningDatabase:
+    def tune(self, sizes: Sequence, progress_every: int = 0) -> TuningDatabase:
+        """Tune a suite of targets (bare (M, N, K) sizes and/or GemmOps)."""
         db = TuningDatabase()
         for i, size in enumerate(sizes):
-            rec, per_policy = self.tune_size(tuple(size))
-            db.records[tuple(size)] = rec
-            db.per_policy[tuple(size)] = per_policy
+            rec, per_policy = self.tune_size(size)
+            db.records[rec.size] = rec
+            db.per_policy[rec.size] = per_policy
             if progress_every and (i + 1) % progress_every == 0:  # pragma: no cover
                 print(f"tuned {i + 1}/{len(sizes)}")
         return db

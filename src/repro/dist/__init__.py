@@ -1,0 +1,2 @@
+"""Distribution layer: logical-axis sharding plans, gradient compression,
+pipeline parallelism, and HLO collective/cost analysis."""

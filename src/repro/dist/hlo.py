@@ -1,0 +1,77 @@
+"""Single-pass HLO-text collective accounting (loop-unaware by design —
+``repro.dist.hlo_cost`` owns trip-count multiplication).
+
+Parses compiled HLO for collective ops and sums payload bytes from the
+instruction's result shape. Used by the dry-run to report per-cell
+collective traffic.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1,
+    "u8": 1,
+    "s16": 2,
+    "u16": 2,
+    "bf16": 2,
+    "f16": 2,
+    "s32": 4,
+    "u32": 4,
+    "f32": 4,
+    "s64": 8,
+    "u64": 8,
+    "f64": 8,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_INSTR = re.compile(
+    r"=\s*(\w+)\[([0-9,]*)\]\S*\s+(" + "|".join(COLLECTIVE_OPS) + r")\("
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveStats:
+    #: op name -> (count, total payload bytes)
+    per_op: Dict[str, Tuple[int, int]] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(b for _, b in self.per_op.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(c for c, _ in self.per_op.values())
+
+    def summary(self) -> Dict[str, Dict[str, int]]:
+        return {
+            op: {"count": c, "bytes": b} for op, (c, b) in sorted(self.per_op.items())
+        }
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for m in _INSTR.finditer(hlo_text):
+        dtype, dims, op = m.group(1), m.group(2), m.group(3)
+        c, b = stats.per_op.get(op, (0, 0))
+        stats.per_op[op] = (c + 1, b + _shape_bytes(dtype, dims))
+    return stats

@@ -3,8 +3,15 @@
 from __future__ import annotations
 
 import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.workpart import cdiv
+
+#: jax renamed TPUCompilerParams -> CompilerParams across 0.4/0.5; resolve
+#: whichever this install ships so the kernels run on both.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
 
 
 def pad_to(x, mults):
@@ -29,24 +36,19 @@ def unpad(x, shape):
 
 import jax
 
+from repro.core.op import Epilogue, as_epilogue
 
-EPILOGUES = ("none", "relu", "silu", "gelu", "square")
 
+def apply_epilogue(acc, epilogue, bias=None, operand=None):
+    """Epilogue applied to the f32 accumulator before the final cast/store —
+    the Composable-Kernel-style fusion the paper's library is built from (CK
+    composes GEMM + epilogue functors; ours compose the same way on the
+    fix-up/flush path, so the epilogue costs zero extra HBM round-trips).
 
-def apply_epilogue(acc, epilogue: str):
-    """Activation epilogue applied to the f32 accumulator before the final
-    cast/store — the Composable-Kernel-style fusion the paper's library is
-    built from (CK composes GEMM + epilogue functors; ours compose the same
-    way on the fix-up/flush path, so the activation costs zero extra HBM
-    round-trips)."""
-    if epilogue == "none":
-        return acc
-    if epilogue == "relu":
-        return jax.numpy.maximum(acc, 0.0)
-    if epilogue == "silu":
-        return jax.nn.silu(acc)
-    if epilogue == "gelu":
-        return jax.nn.gelu(acc)
-    if epilogue == "square":  # squared-ReLU (nemotron-4 MLP)
-        return jax.numpy.square(jax.numpy.maximum(acc, 0.0))
-    raise ValueError(f"unknown epilogue {epilogue!r}")
+    ``epilogue`` is an :class:`repro.core.op.Epilogue` (legacy bare
+    activation strings still accepted). ``bias``/``operand`` are the already
+    block-sliced extra inputs for bias-add and binary (swiglu-mul /
+    residual-add) epilogues.
+    """
+    spec: Epilogue = as_epilogue(epilogue)
+    return spec.apply(acc, bias=bias, operand=operand)

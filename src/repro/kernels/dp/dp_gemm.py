@@ -8,6 +8,10 @@ did not claim), the second streams the K dimension. The f32 accumulator
 lives in VMEM scratch and is copied into the output block on the last
 k-step, so the C dtype can be narrower than the accumulator.
 
+Epilogue operands (bias column vector, binary operand matrix for
+swiglu-mul / residual-add) stream in as extra blocked inputs and are applied
+to the accumulator in the flush — fused, never a separate HBM pass.
+
 With ``tile_offset > 0`` the kernel runs with ``input_output_aliases`` so the
 tiles it does not visit keep the values already present in the aliased C
 buffer (the fixed-up Stream-K tiles).
@@ -24,10 +28,27 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.policies import TileConfig
 from repro.core.workpart import cdiv
-from repro.kernels.common import apply_epilogue
+from repro.kernels.common import CompilerParams, apply_epilogue
 
 
-def _dp_kernel(a_ref, b_ref, c_ref, acc_ref, *, ipt: int, epilogue: str = "none"):
+def _dp_kernel(
+    a_ref,
+    b_ref,
+    *rest,
+    ipt: int,
+    epilogue="none",
+    has_bias: bool = False,
+    has_operand: bool = False,
+):
+    """rest = [bias_ref?, operand_ref?, c_in_ref?] + (c_ref, acc_ref).
+
+    ``c_in_ref`` (the aliased C input under ``tile_offset > 0``) is never
+    read — aliasing alone preserves unvisited tiles."""
+    c_ref, acc_ref = rest[-2], rest[-1]
+    extras = list(rest[:-2])
+    bias_ref = extras.pop(0) if has_bias else None
+    operand_ref = extras.pop(0) if has_operand else None
+
     k = pl.program_id(1)
 
     @pl.when(k == 0)
@@ -38,14 +59,13 @@ def _dp_kernel(a_ref, b_ref, c_ref, acc_ref, *, ipt: int, epilogue: str = "none"
 
     @pl.when(k == ipt - 1)
     def _flush():
-        c_ref[...] = apply_epilogue(acc_ref[...], epilogue).astype(c_ref.dtype)
-
-
-def _dp_kernel_aliased(
-    a_ref, b_ref, c_in_ref, c_ref, acc_ref, *, ipt: int, epilogue: str = "none"
-):
-    # identical, but carries the aliased C input so unvisited tiles survive.
-    _dp_kernel(a_ref, b_ref, c_ref, acc_ref, ipt=ipt, epilogue=epilogue)
+        out = apply_epilogue(
+            acc_ref[...],
+            epilogue,
+            bias=None if bias_ref is None else bias_ref[...],
+            operand=None if operand_ref is None else operand_ref[...],
+        )
+        c_ref[...] = out.astype(c_ref.dtype)
 
 
 def dp_gemm_region(
@@ -57,11 +77,14 @@ def dp_gemm_region(
     c_init=None,
     out_dtype=None,
     interpret: bool = False,
-    epilogue: str = "none",
+    epilogue="none",
+    bias=None,
+    operand=None,
 ):
     """Tiled GEMM over output tiles [tile_offset, m_tiles*n_tiles).
 
-    a: (Mp, Kp), b: (Kp, Np) — already padded to tile multiples.
+    a: (Mp, Kp), b: (Kp, Np) — already padded to tile multiples; so are the
+    optional epilogue operands ``bias`` (1, Np) and ``operand`` (Mp, Np).
     ``c_init``: existing C buffer whose tiles < tile_offset must be kept
     (required iff tile_offset > 0).
     """
@@ -85,36 +108,52 @@ def dp_gemm_region(
     b_spec = pl.BlockSpec((cfg.bk, cfg.bn), lambda i, k: (k, tn(i)))
     c_spec = pl.BlockSpec((cfg.bm, cfg.bn), lambda i, k: (tm(i), tn(i)))
     scratch = [pltpu.VMEM((cfg.bm, cfg.bn), jnp.float32)]
-    params = pltpu.CompilerParams(
+    params = CompilerParams(
         dimension_semantics=(pltpu.PARALLEL, pltpu.ARBITRARY)
     )
     out_shape = jax.ShapeDtypeStruct((mp, np_), out_dtype)
 
+    operands = [a, b]
+    in_specs = [a_spec, b_spec]
+    if bias is not None:
+        operands.append(bias)
+        in_specs.append(pl.BlockSpec((1, cfg.bn), lambda i, k: (0, tn(i))))
+    if operand is not None:
+        operands.append(operand)
+        in_specs.append(c_spec)
+    kernel = functools.partial(
+        _dp_kernel,
+        ipt=ipt,
+        epilogue=epilogue,
+        has_bias=bias is not None,
+        has_operand=operand is not None,
+    )
+
     if tile_offset == 0:
-        kernel = functools.partial(_dp_kernel, ipt=ipt, epilogue=epilogue)
         return pl.pallas_call(
             kernel,
             grid=(n_region, ipt),
-            in_specs=[a_spec, b_spec],
+            in_specs=in_specs,
             out_specs=c_spec,
             out_shape=out_shape,
             scratch_shapes=scratch,
             interpret=interpret,
             compiler_params=params,
             name=f"dp_gemm_{cfg.name}",
-        )(a, b)
+        )(*operands)
 
     assert c_init is not None, "tile_offset > 0 requires c_init"
-    kernel = functools.partial(_dp_kernel_aliased, ipt=ipt, epilogue=epilogue)
+    operands.append(c_init.astype(out_dtype))
+    in_specs.append(c_spec)
     return pl.pallas_call(
         kernel,
         grid=(n_region, ipt),
-        in_specs=[a_spec, b_spec, c_spec],
+        in_specs=in_specs,
         out_specs=c_spec,
         out_shape=out_shape,
         scratch_shapes=scratch,
-        input_output_aliases={2: 0},
+        input_output_aliases={len(operands) - 1: 0},
         interpret=interpret,
         compiler_params=params,
         name=f"dp_gemm_region_{cfg.name}",
-    )(a, b, c_init.astype(out_dtype))
+    )(*operands)

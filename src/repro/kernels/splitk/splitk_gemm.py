@@ -20,6 +20,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.policies import TileConfig
+from repro.kernels.common import CompilerParams
 
 
 def _splitk_kernel(a_ref, b_ref, p_ref, acc_ref, *, kps: int):
@@ -67,7 +68,7 @@ def splitk_partials(a, b, cfg: TileConfig, s: int, *, interpret: bool = False):
         out_shape=jax.ShapeDtypeStruct((s, mp, np_), jnp.float32),
         scratch_shapes=[pltpu.VMEM((cfg.bm, cfg.bn), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL, pltpu.ARBITRARY)
         ),
         name=f"splitk_gemm_{cfg.name}_s{s}",

@@ -57,13 +57,17 @@ def gemm(
     g: int = 8,
     interpret: bool = False,
     out_dtype=None,
-    epilogue: str = "none",
+    epilogue="none",
+    bias: jax.Array = None,
+    operand: jax.Array = None,
 ) -> jax.Array:
     """``a @ b`` under a Stream-K++ scheduling policy, with an optional fused
-    activation epilogue (Composable-Kernel style: applied post-accumulation
-    in the fix-up / DP flush — zero extra HBM passes).
+    epilogue (Composable-Kernel style: applied post-accumulation in the
+    fix-up / DP flush — zero extra HBM passes).
 
-    a: (M, K), b: (K, N) -> (M, N). Accumulation is always f32.
+    a: (M, K), b: (K, N) -> (M, N). Accumulation is always f32. ``epilogue``
+    is an :class:`repro.core.op.Epilogue` or legacy activation string;
+    ``bias`` (N,) and ``operand`` (M, N) feed its bias-add / binary stages.
     """
     if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
         raise ValueError(f"bad gemm operands {a.shape} @ {b.shape}")
@@ -73,17 +77,20 @@ def gemm(
 
     ap = pad_to(a, (cfg.bm, cfg.bk))
     bp = pad_to(b, (cfg.bk, cfg.bn))
+    biasp = None if bias is None else pad_to(bias.reshape(1, n), (1, cfg.bn))
+    operandp = None if operand is None else pad_to(operand, (cfg.bm, cfg.bn))
     part = partition(GemmShape(m, n, k), cfg, g, policy)
+    epi = dict(epilogue=epilogue, bias=biasp, operand=operandp)
 
     if part.sk_tiles == 0:
         cp = dp_gemm_region(
-            ap, bp, cfg, out_dtype=out_dtype, interpret=interpret, epilogue=epilogue
+            ap, bp, cfg, out_dtype=out_dtype, interpret=interpret, **epi
         )
         return unpad(cp, (m, n))
 
     partials = streamk_phase1(ap, bp, part, interpret=interpret)
     sk_c = streamk_fixup(
-        partials, part, out_dtype, interpret=interpret, epilogue=epilogue
+        partials, part, out_dtype, interpret=interpret, **epi
     )
     c_sk = _scatter_sk_tiles(sk_c, part, out_dtype, interpret)
 
@@ -98,6 +105,6 @@ def gemm(
         c_init=c_sk,
         out_dtype=out_dtype,
         interpret=interpret,
-        epilogue=epilogue,
+        **epi,
     )
     return unpad(cp, (m, n))

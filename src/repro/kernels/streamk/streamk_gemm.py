@@ -46,7 +46,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.workpart import Partition, cdiv
-from repro.kernels.common import apply_epilogue
+from repro.kernels.common import CompilerParams, apply_epilogue
 
 
 def _range_math(part: Partition):
@@ -151,7 +151,7 @@ def streamk_phase1(a, b, part: Partition, *, interpret: bool = False):
         ),
         out_shape=out_shape,
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=(pltpu.PARALLEL, pltpu.ARBITRARY),
         ),
         name=f"streamk_p1_{cfg.name}_g{part.g}",
@@ -163,7 +163,19 @@ def streamk_phase1(a, b, part: Partition, *, interpret: bool = False):
 # --------------------------------------------------------------------------
 
 
-def _fixup_kernel(partials_ref, c_ref, *, part: Partition, epilogue: str = "none"):
+def _fixup_kernel(
+    partials_ref,
+    *rest,
+    part: Partition,
+    epilogue="none",
+    has_bias: bool = False,
+    has_operand: bool = False,
+):
+    """rest = [bias_ref?, operand_ref?] + (c_ref,)."""
+    c_ref = rest[-1]
+    extras = list(rest[:-1])
+    bias_ref = extras.pop(0) if has_bias else None
+    operand_ref = extras.pop(0) if has_operand else None
     ipt, total, ipw, mc = _range_math(part)
     t = pl.program_id(0)
     first_wg = (t * ipt) // ipw
@@ -177,33 +189,59 @@ def _fixup_kernel(partials_ref, c_ref, *, part: Partition, epilogue: str = "none
     acc = jnp.sum(
         jnp.where(mask, partials_ref[0], 0.0), axis=0, dtype=jnp.float32
     )
-    c_ref[0] = apply_epilogue(acc, epilogue).astype(c_ref.dtype)
+    out = apply_epilogue(
+        acc,
+        epilogue,
+        bias=None if bias_ref is None else bias_ref[...],
+        operand=None if operand_ref is None else operand_ref[...],
+    )
+    c_ref[0] = out.astype(c_ref.dtype)
 
 
 def streamk_fixup(
     partials, part: Partition, out_dtype, *, interpret: bool = False,
-    epilogue: str = "none",
+    epilogue="none", bias=None, operand=None,
 ):
     """Reduce contributor slots per SK tile -> C tiles, shaped
-    (sk_tiles, bm, bn). The activation epilogue fuses here (after the full
-    accumulation) so it costs no extra HBM pass."""
+    (sk_tiles, bm, bn). The epilogue (activation, bias-add, swiglu-mul /
+    residual operand) fuses here — after the full accumulation — so it costs
+    no extra HBM pass. ``bias`` (1, Np) / ``operand`` (Mp, Np) are padded
+    full-size arrays; their blocks are gathered per SK tile in row-major
+    tile order (matching ``_scatter_sk_tiles``)."""
     cfg = part.cfg
-    kernel = functools.partial(_fixup_kernel, part=part, epilogue=epilogue)
+    nt = part.n_tiles
+    kernel = functools.partial(
+        _fixup_kernel,
+        part=part,
+        epilogue=epilogue,
+        has_bias=bias is not None,
+        has_operand=operand is not None,
+    )
+    operands = [partials]
+    in_specs = [
+        pl.BlockSpec(
+            (1, partials.shape[1], cfg.bm, cfg.bn), lambda t: (t, 0, 0, 0)
+        )
+    ]
+    if bias is not None:
+        operands.append(bias)
+        in_specs.append(pl.BlockSpec((1, cfg.bn), lambda t: (0, t % nt)))
+    if operand is not None:
+        operands.append(operand)
+        in_specs.append(
+            pl.BlockSpec((cfg.bm, cfg.bn), lambda t: (t // nt, t % nt))
+        )
     return pl.pallas_call(
         kernel,
         grid=(part.sk_tiles,),
-        in_specs=[
-            pl.BlockSpec(
-                (1, partials.shape[1], cfg.bm, cfg.bn), lambda t: (t, 0, 0, 0)
-            )
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, cfg.bm, cfg.bn), lambda t: (t, 0, 0)),
         out_shape=jax.ShapeDtypeStruct(
             (part.sk_tiles, cfg.bm, cfg.bn), out_dtype
         ),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=(pltpu.PARALLEL,),
         ),
         name=f"streamk_fixup_{cfg.name}",
-    )(partials)
+    )(*operands)

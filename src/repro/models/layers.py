@@ -19,7 +19,8 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.gemm import gemm
+from repro.core.gemm import gemm, gemm_grouped
+from repro.core.op import Epilogue
 from repro.dist.sharding import ArraySpec, constrain, constrain_uneven
 from repro.models.config import ModelConfig
 
@@ -428,16 +429,24 @@ def mlp_specs(cfg: ModelConfig) -> Dict[str, ArraySpec]:
 
 
 def mlp_apply(p: Params, x: jax.Array, cfg: ModelConfig, *, div: Dict[str, int]):
+    """Activations ride the GEMM epilogue (applied to the f32 accumulator in
+    the kernel flush / fix-up phase) instead of running as separate XLA ops;
+    swiglu fuses the gate-multiply into the up-projection's epilogue."""
     db, dtp = div.get("batch", 1), div.get("model", 1)
-    h = gemm(x, p["w_in"], divisors=(db, dtp, 1), tag="mlp.in")
     if cfg.mlp_act == "swiglu":
         g = gemm(x, p["w_gate"], divisors=(db, dtp, 1), tag="mlp.gate")
-        h = jax.nn.silu(g.astype(jnp.float32)) * h.astype(jnp.float32)
+        h = gemm(
+            x,
+            p["w_in"],
+            divisors=(db, dtp, 1),
+            tag="mlp.in",
+            epilogue=Epilogue(binary="mul_silu"),
+            operand=g,
+        )
     elif cfg.mlp_act == "squared_relu":  # nemotron-4
-        h = jnp.square(jax.nn.relu(h.astype(jnp.float32)))
+        h = gemm(x, p["w_in"], divisors=(db, dtp, 1), tag="mlp.in", epilogue="square")
     else:
-        h = jax.nn.gelu(h.astype(jnp.float32))
-    h = h.astype(x.dtype)
+        h = gemm(x, p["w_in"], divisors=(db, dtp, 1), tag="mlp.in", epilogue="gelu")
     return gemm(h, p["w_out"], divisors=(db, 1, dtp), tag="mlp.out")
 
 
@@ -520,13 +529,26 @@ def moe_apply(
         # (iteration-2 refutation: ('experts',None,'embed') blew memory up)
         expert_in = constrain(expert_in, "experts", None, None)
 
-    h = jnp.einsum("ecd,edf->ecf", expert_in, p["w_in"])
+    # grouped expert GEMMs: one GemmOp with G = E covers the whole stack —
+    # exactly the skinny-M (M = capacity) grouped shapes where Stream-K's
+    # work-centric decomposition matters most; activations fuse into the
+    # kernel epilogue instead of running as separate XLA ops
+    dg = div.get("model", 1)
     if cfg.mlp_act == "swiglu":
-        g = jnp.einsum("ecd,edf->ecf", expert_in, p["w_gate"])
-        h = (jax.nn.silu(g.astype(jnp.float32)) * h.astype(jnp.float32)).astype(x.dtype)
+        g = gemm_grouped(expert_in, p["w_gate"], g_divisor=dg, tag="moe.gate")
+        h = gemm_grouped(
+            expert_in,
+            p["w_in"],
+            g_divisor=dg,
+            tag="moe.in",
+            epilogue=Epilogue(binary="mul_silu"),
+            operand=g,
+        )
     else:
-        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
-    out_e = jnp.einsum("ecf,efd->ecd", h, p["w_out"])  # (E, cap, D)
+        h = gemm_grouped(
+            expert_in, p["w_in"], g_divisor=dg, tag="moe.in", epilogue="gelu"
+        )
+    out_e = gemm_grouped(h, p["w_out"], g_divisor=dg, tag="moe.out")  # (E, cap, D)
     if hinted:
         out_e = constrain(out_e, "experts", None, None)
 
@@ -598,15 +620,25 @@ def moe_apply_sharded(
     )
     expert_in = constrain(buf[:, :, :cap], "batch", "experts", None, None)
 
-    h = jnp.einsum("gecd,edf->gecf", expert_in, p["w_in"])
+    # fold the shard-group dim into M: each expert contracts (G*cap, d) in
+    # one grouped GemmOp (G = E), keeping the expert GEMMs on the Stream-K++
+    # dispatch layer under the shard-local formulation too
+    e_in = expert_in.transpose(1, 0, 2, 3).reshape(e, groups * cap, d)
+    dg = div.get("model", 1)
     if cfg.mlp_act == "swiglu":
-        g_ = jnp.einsum("gecd,edf->gecf", expert_in, p["w_gate"])
-        h = (jax.nn.silu(g_.astype(jnp.float32)) * h.astype(jnp.float32)).astype(
-            x.dtype
+        g_ = gemm_grouped(e_in, p["w_gate"], g_divisor=dg, tag="moe.gate")
+        h = gemm_grouped(
+            e_in,
+            p["w_in"],
+            g_divisor=dg,
+            tag="moe.in",
+            epilogue=Epilogue(binary="mul_silu"),
+            operand=g_,
         )
     else:
-        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
-    out_e = jnp.einsum("gecf,efd->gecd", h, p["w_out"])
+        h = gemm_grouped(e_in, p["w_in"], g_divisor=dg, tag="moe.in", epilogue="gelu")
+    out = gemm_grouped(h, p["w_out"], g_divisor=dg, tag="moe.out")  # (E, G*cap, D)
+    out_e = out.reshape(e, groups, cap, d).transpose(1, 0, 2, 3)
     out_e = constrain(out_e, "batch", "experts", None, None)
 
     gathered = out_e[gidx, e_flat, jnp.minimum(slot, cap - 1)]  # (G, kTl, D)
@@ -685,15 +717,20 @@ def moe_apply_shard_map(
         buf = buf.at[e_clamped, slot_masked].set(xf[tok], mode="drop")
         expert_in = buf[:, :cap]
 
-        h = jnp.einsum("ecd,edf->ecf", expert_in, w_in)
+        # shapes here are already shard-local (shard_map body), so the
+        # grouped dispatch runs with unit divisors; G = e_loc experts
         if cfg.mlp_act == "swiglu":
-            g_ = jnp.einsum("ecd,edf->ecf", expert_in, w_gate)
-            h = (
-                jax.nn.silu(g_.astype(jnp.float32)) * h.astype(jnp.float32)
-            ).astype(x.dtype)
+            g_ = gemm_grouped(expert_in, w_gate, tag="moe.gate")
+            h = gemm_grouped(
+                expert_in,
+                w_in,
+                tag="moe.in",
+                epilogue=Epilogue(binary="mul_silu"),
+                operand=g_,
+            )
         else:
-            h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
-        out_e = jnp.einsum("ecf,efd->ecd", h, w_out)  # (e_loc, cap, D)
+            h = gemm_grouped(expert_in, w_in, tag="moe.in", epilogue="gelu")
+        out_e = gemm_grouped(h, w_out, tag="moe.out")  # (e_loc, cap, D)
 
         # combine: local assignments only, then sum partial outputs
         gathered = out_e[e_clamped, jnp.minimum(slot_masked, cap - 1)]

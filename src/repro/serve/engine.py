@@ -23,6 +23,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from contextlib import contextmanager
+
+from repro.core.gemm import current_log, current_selector, gemm_context
+from repro.core.selector import KernelSelector
 from repro.utils.logging import get_logger
 
 log = get_logger("serve")
@@ -47,11 +51,29 @@ class ServeConfig:
 
 
 class ServeEngine:
-    def __init__(self, model, params, cfg: ServeConfig, *, div=None):
+    def __init__(
+        self,
+        model,
+        params,
+        cfg: ServeConfig,
+        *,
+        div=None,
+        selector: Optional[KernelSelector] = None,
+        backend: Optional[str] = None,
+    ):
         self.model = model
         self.params = params
         self.cfg = cfg
         self.div = div or {}
+        # Dispatch threading: when the caller hands the engine a selector
+        # and/or backend, every prefill/decode trace runs under that
+        # dedicated context; otherwise traces use the ambient context (so
+        # wrapping the engine in ``gemm_context`` keeps working). Either
+        # way the selections the engine triggers mirror into
+        # ``selection_log`` for serving-side introspection.
+        self.selector = selector
+        self.backend = backend
+        self.selection_log: List = []
         self.cache = model.init_cache(cfg.n_slots, cfg.max_seq)
         self.pos = np.zeros((cfg.n_slots,), np.int32)  # next write position
         self.slot_req: List[Optional[Request]] = [None] * cfg.n_slots
@@ -62,6 +84,39 @@ class ServeEngine:
         )
         self._queue: List[Request] = []
         self._uid = 0
+
+    @contextmanager
+    def _dispatch_ctx(self):
+        if self.selector is not None or self.backend is not None:
+            with gemm_context(selector=self.selector, backend=self.backend) as ctx:
+                # backend-only construction inherits the ambient selector;
+                # remember it so dispatch_stats reads the one that served
+                self._ambient_selector = ctx.selector
+                start = len(ctx.log)
+                try:
+                    yield
+                finally:
+                    # a failing trace still recorded selections before it
+                    # raised — keep them observable
+                    self.selection_log.extend(ctx.log[start:])
+        else:
+            # remember which ambient selector served this traffic, so
+            # dispatch_stats reads the right counters even after the
+            # caller's gemm_context has exited
+            self._ambient_selector = current_selector()
+            amb_log = current_log()
+            start = len(amb_log)
+            try:
+                yield
+            finally:
+                self.selection_log.extend(amb_log[start:])
+
+    @property
+    def dispatch_stats(self):
+        sel = self.selector
+        if sel is None:
+            sel = getattr(self, "_ambient_selector", None) or current_selector()
+        return sel.stats
 
     # -- request admission -------------------------------------------------
     def submit(self, prompt, max_new_tokens: int = 32, temperature: float = 0.0) -> int:
@@ -82,9 +137,10 @@ class ServeEngine:
         """Prefill one slot. Single-sequence prefill then scatter its cache
         into the shared pool at the slot index."""
         prompt = jnp.asarray(req.prompt)[None, :]
-        logits, cache1 = self.model.prefill(
-            self.params, prompt, max_seq=self.cfg.max_seq, div=self.div
-        )
+        with self._dispatch_ctx():
+            logits, cache1 = self.model.prefill(
+                self.params, prompt, max_seq=self.cfg.max_seq, div=self.div
+            )
 
         def place(pool, fresh):
             return jax.lax.dynamic_update_index_in_dim(pool, fresh[:, 0], slot, 1)
@@ -118,9 +174,10 @@ class ServeEngine:
         for i in active:
             tokens[i, 0] = self.slot_req[i].out_tokens[-1]
         cur_pos = jnp.asarray(self.pos)
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(tokens), cur_pos
-        )
+        with self._dispatch_ctx():
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(tokens), cur_pos
+            )
         logits_np = np.asarray(logits)[:, 0]
         for i in active:
             req = self.slot_req[i]

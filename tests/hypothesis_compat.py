@@ -1,0 +1,39 @@
+"""Optional-dependency shim for hypothesis.
+
+``hypothesis`` is a tier-2 dependency (CI installs it; the minimal test
+environment may not). Importing ``given``/``settings``/``st`` from here
+keeps module collection working either way: with hypothesis installed the
+real API is re-exported; without it, ``@given(...)`` marks the test skipped
+and the strategy namespace degrades to inert placeholders so module-level
+strategy expressions still evaluate. Non-property tests in the same module
+keep running."""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Inert placeholder: any method/call returns another placeholder."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: _Strategy()
+
+        def __call__(self, *a, **k):
+            return _Strategy()
+
+    class _Strategies:
+        def __getattr__(self, name):
+            return lambda *a, **k: _Strategy()
+
+    st = _Strategies()
+
+    def given(*a, **k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*a, **k):
+        return lambda f: f

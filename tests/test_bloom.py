@@ -7,7 +7,7 @@ problem-size sets.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # skips @given tests when hypothesis is absent
 
 from repro.core.bloom import BloomFilter, encode_mnk, murmur3_32, optimal_params
 from repro.core.opensieve import OpenSieve

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # skips @given tests when hypothesis is absent
 
 from conftest import tiny
 from repro.dist.sharding import materialize_tree
