@@ -101,5 +101,18 @@ def run() -> List[str]:
 
 
 if __name__ == "__main__":
-    for row in run():
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, help="also write rows as JSON")
+    args = ap.parse_args()
+    rows = run()
+    for row in rows:
         print(row)
+    if args.json:
+        import json
+
+        from benchmarks.run import rows_to_json
+
+        with open(args.json, "w") as f:
+            json.dump(rows_to_json(rows), f, indent=2)

@@ -1,14 +1,34 @@
-"""Benchmark harness: one module per paper table/figure (+ the roofline).
-Prints ``name,us_per_call,derived`` CSV (see each module for the claim it
-reproduces)."""
+"""Benchmark harness: one module per paper table/figure (+ the roofline and
+the online-adaptation convergence study). Prints ``name,us_per_call,derived``
+CSV (see each module for the claim it reproduces); ``--json`` additionally
+writes the rows as structured JSON for CI artifact upload.
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import traceback
 
 
+def rows_to_json(rows):
+    out = []
+    for row in rows:
+        name, us, derived = row.split(",", 2)
+        try:
+            us_val = float(us)
+        except ValueError:
+            us_val = None
+        out.append({"name": name, "us_per_call": us_val, "derived": derived})
+    return out
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, help="also write rows as JSON")
+    args = ap.parse_args()
+
     from benchmarks import (
         arch_dispatch,
         bloom_elimination,
@@ -17,6 +37,7 @@ def main() -> None:
         fig2_tolerance,
         fig3_gains,
         kernel_utilization,
+        online_adaptation,
         production_suite,
         roofline,
         sensitivity,
@@ -24,6 +45,7 @@ def main() -> None:
     )
 
     print("name,us_per_call,derived")
+    rows = []
     failures = 0
     for mod in (
         fig2_tolerance,
@@ -36,15 +58,22 @@ def main() -> None:
         production_suite,
         sensitivity,
         serving_throughput,
+        online_adaptation,
         roofline,
     ):
         try:
             for row in mod.run():
+                rows.append(row)
                 print(row)
         except Exception:  # pragma: no cover
             failures += 1
-            print(f"{mod.__name__},nan,ERROR")
+            row = f"{mod.__name__},nan,ERROR"
+            rows.append(row)  # failures must show up in the JSON artifact too
+            print(row)
             traceback.print_exc(file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows_to_json(rows), f, indent=2)
     if failures:
         raise SystemExit(1)
 

@@ -34,8 +34,15 @@ from repro.core.bloom import BloomFilter, encode_mnk, murmur3_32
 from repro.core.op import Epilogue, GemmOp, encode_key, encode_op
 from repro.core.opensieve import OpenSieve
 from repro.core.costmodel import Machine, V5E, gemm_tflops, gemm_time_s, best_config
-from repro.core.tuner import Tuner, TuningDatabase, TuningRecord
+from repro.core.tuner import (
+    Tuner,
+    TuningDatabase,
+    TuningRecord,
+    append_journal,
+    journal_entry,
+)
 from repro.core.selector import KernelSelector, Selection, default_selector
+from repro.core.adaptive import AdaptiveConfig, AdaptiveStats, AdaptiveTuner
 from repro.core.gemm import (
     current_log,
     gemm,
@@ -78,9 +85,14 @@ __all__ = [
     "Tuner",
     "TuningDatabase",
     "TuningRecord",
+    "append_journal",
+    "journal_entry",
     "KernelSelector",
     "Selection",
     "default_selector",
+    "AdaptiveConfig",
+    "AdaptiveStats",
+    "AdaptiveTuner",
     "Epilogue",
     "GemmOp",
     "encode_key",

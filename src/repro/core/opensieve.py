@@ -52,15 +52,24 @@ class QueryStats:
 
 
 class OpenSieve:
-    """Registry: policy name -> BloomFilter, with query bookkeeping."""
+    """Registry: policy name -> BloomFilter, with query bookkeeping.
+
+    ``generation`` is the sieve's build version: Bloom filters cannot delete,
+    so online adaptation never mutates a live sieve — it builds a fresh one
+    from the grown database under ``generation + 1`` and hot-swaps it in
+    (the old sieve keeps serving lookups until the swap, which is a single
+    atomic reference assignment in the selector).
+    """
 
     def __init__(
         self,
         policies: Sequence[Policy] = ALL_POLICIES,
         capacity: int = 10_000,
         fp_rate: float = 0.01,
+        generation: int = 0,
     ):
         self.policies: Tuple[Policy, ...] = tuple(policies)
+        self.generation = generation
         # One distinct hash family (seed) per filter — "7 distinct hash
         # functions, one for each filter" in the paper.
         self.filters: Dict[str, BloomFilter] = {
@@ -160,6 +169,7 @@ class OpenSieve:
         sieve.policies = tuple(policy_from_name(n) for n in filters)
         sieve.filters = filters
         sieve.stats = QueryStats()
+        sieve.generation = 0
         return sieve
 
     def encode_cpp_header(self) -> str:

@@ -28,7 +28,7 @@ forced overrides perform no selection work and leave the rate untouched.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core import costmodel
 from repro.core.op import GemmOp, OpKey
@@ -84,6 +84,12 @@ def _cfg_from_name(name: str) -> TileConfig:
     return TileConfig(bm, bn, bk)
 
 
+#: Miss-hook signature: called once per dispatch whose (memoised) selection
+#: did NOT come from the tuning database — the signal online adaptation
+#: feeds on. Must be cheap; it runs on the trace path.
+MissHook = Callable[[GemmOp, Selection], None]
+
+
 class KernelSelector:
     def __init__(
         self,
@@ -92,14 +98,51 @@ class KernelSelector:
         mach: costmodel.Machine = costmodel.V5E,
         policies: Sequence[Policy] = ALL_POLICIES,
         tile_configs: Sequence[TileConfig] = DEFAULT_TILE_CONFIGS,
+        on_miss: Optional[MissHook] = None,
     ):
         self.sieve = sieve
         self.db = db
         self.mach = mach
         self.policies = tuple(policies)
         self.tile_configs = tuple(tile_configs)
+        self.on_miss = on_miss
         self.stats = SelectorStats()
         self._cache: Dict[OpKey, Selection] = {}
+
+    @property
+    def sieve_generation(self) -> int:
+        """Build version of the currently installed sieve (0 when none)."""
+        return self.sieve.generation if self.sieve is not None else 0
+
+    def _notify_miss(self, op: GemmOp, sel: Selection) -> None:
+        if self.on_miss is not None and sel.source != "tuned":
+            self.on_miss(op, sel)
+
+    # -- online adaptation --------------------------------------------------
+    def hot_swap(
+        self,
+        db: Optional[TuningDatabase] = None,
+        sieve: Optional[OpenSieve] = None,
+        keys: Optional[Iterable[OpKey]] = None,
+    ) -> int:
+        """Install updated tuning artifacts mid-stream.
+
+        Reference assignment is atomic, so in-flight lookups finish against
+        whichever artifact they already grabbed — the old sieve serves until
+        the swap lands. Memoised selections for ``keys`` (all keys when
+        ``None``) are dropped so the next dispatch of a freshly tuned
+        fingerprint re-resolves against the new database instead of
+        replaying a stale sieve/fallback pick. Returns the number of cache
+        entries invalidated."""
+        if db is not None:
+            self.db = db
+        if sieve is not None:
+            self.sieve = sieve
+        if keys is None:
+            n = len(self._cache)
+            self._cache.clear()
+            return n
+        return sum(1 for k in keys if self._cache.pop(k, None) is not None)
 
     # -- scoring -----------------------------------------------------------
     def _score(self, size: MNK, pols: Sequence[Policy]) -> Tuple[Policy, TileConfig, int]:
@@ -184,6 +227,7 @@ class KernelSelector:
             self.stats.fallbacks += 1
         self.stats.evals += sel.evals
         self.stats.pruned += sel.pruned
+        self._notify_miss(op, sel)
         return sel
 
     def select(self, m: int, n: int, k: int) -> Selection:
@@ -212,6 +256,7 @@ class KernelSelector:
         )
         self.stats.evals += sel.evals
         self.stats.pruned += sel.pruned
+        self._notify_miss(op, base)
         return sel
 
     def record_forced(
@@ -220,10 +265,15 @@ class KernelSelector:
         """Account a fully caller-forced (policy, cfg) dispatch (tuner
         sweeps, tests). It performs no evaluations and prunes nothing, so it
         leaves ``elimination_rate`` untouched — but it is a real dispatch,
-        visible as one ``forced`` lookup."""
+        visible as one ``forced`` lookup. Forced dispatches of *untuned*
+        fingerprints still feed the miss hook: the caller knowing a config
+        is exactly the traffic online adaptation wants to learn from."""
         self.stats.lookups += 1
         self.stats.forced += 1
-        return Selection(policy, cfg, "forced", 0, 0)
+        sel = Selection(policy, cfg, "forced", 0, 0)
+        if self._db_record(op) is None:
+            self._notify_miss(op, sel)
+        return sel
 
 
 def default_selector() -> KernelSelector:

@@ -5,6 +5,15 @@ problem-size suite, producing the winner database that Open-sieve encodes.
   * default: the calibrated analytical model (CPU-only container);
   * ``measure_wallclock``: times the real kernel (used on TPU hardware; the
     paper's 50 warm-up + 50 timed launches protocol).
+
+Artifact lifecycle: ``TuningDatabase.save``/``load`` snapshot the full
+database (``artifacts/tuning_db.json``); incremental results — offline
+sweeps and serve-time :class:`repro.core.adaptive.AdaptiveTuner` commits
+alike — stream through an append-only JSONL *journal*
+(``artifacts/tuning_journal.jsonl``) that ``load``/``replay_journal``
+re-applies on startup, so records learned while serving survive restarts
+and warm-start the next run. ``version`` counts in-place appends, the
+monotone clock the generational sieve rebuilds key on.
 """
 
 from __future__ import annotations
@@ -26,6 +35,9 @@ from repro.core.policies import (
     policy_from_name,
 )
 from repro.core.workpart import GemmShape
+from repro.utils.logging import get_logger
+
+log = get_logger("tuner")
 
 MNK = Tuple[int, int, int]
 MeasureFn = Callable[[GemmShape, Policy, TileConfig], float]
@@ -70,13 +82,40 @@ class TuningDatabase:
     #: per-key best tflops for every policy (policy name -> tflops); kept so
     #: the Fig-2 tolerance analysis does not need to re-measure.
     per_policy: Dict[OpKey, Dict[str, float]] = field(default_factory=dict)
+    #: monotone append counter: bumps on every in-place ``add_record`` /
+    #: journal replay, so callers (the adaptive tuner, sieve rebuilds) can
+    #: cheaply detect "the database grew since I last looked".
+    version: int = 0
+    #: records dropped because their key/payload failed to parse (load +
+    #: journal replay) — a format skew must be visible, not a silent shrink.
+    load_errors: int = 0
 
     def winners(self) -> Dict[OpKey, Policy]:
         return {s: policy_from_name(r.policy) for s, r in self.records.items()}
 
-    def build_sieve(self, capacity: int = 10_000, fp_rate: float = 0.01) -> OpenSieve:
-        sieve = OpenSieve(ALL_POLICIES, capacity=capacity, fp_rate=fp_rate)
+    def build_sieve(
+        self,
+        capacity: int = 10_000,
+        fp_rate: float = 0.01,
+        generation: int = 0,
+    ) -> OpenSieve:
+        sieve = OpenSieve(
+            ALL_POLICIES, capacity=capacity, fp_rate=fp_rate, generation=generation
+        )
         return sieve.build_from_winners(self.winners())
+
+    def add_record(
+        self,
+        rec: TuningRecord,
+        per_policy: Optional[Dict[str, float]] = None,
+    ) -> None:
+        """In-place record append (the online-adaptation commit path).
+        Overwrites any existing record for the same key and bumps
+        ``version`` so sieve-generation machinery sees the change."""
+        self.records[rec.size] = rec
+        if per_policy is not None:
+            self.per_policy[rec.size] = per_policy
+        self.version += 1
 
     # -- persistence --------------------------------------------------------
     def save(self, path: str) -> None:
@@ -90,17 +129,94 @@ class TuningDatabase:
             json.dump(payload, f)
 
     @classmethod
-    def load(cls, path: str) -> "TuningDatabase":
+    def load(cls, path: str, journal: Optional[str] = None) -> "TuningDatabase":
+        """Load a snapshot, then optionally replay an append-only journal on
+        top (records learned after the last snapshot win). Records whose key
+        or payload fails to parse are skipped with a warning and counted in
+        ``load_errors`` — never silently dropped."""
         with open(path) as f:
             payload = json.load(f)
         db = cls()
         for key, rec in payload["records"].items():
-            size = key_from_str(key)
-            rec["size"] = size
-            db.records[size] = TuningRecord(**rec)
+            try:
+                size = key_from_str(key)
+                rec["size"] = size
+                db.records[size] = TuningRecord(**rec)
+            except (ValueError, IndexError, TypeError) as e:
+                db.load_errors += 1
+                log.warning("dropping unparsable tuning record %r: %s", key, e)
         for key, pp in payload.get("per_policy", {}).items():
-            db.per_policy[key_from_str(key)] = pp
+            try:
+                db.per_policy[key_from_str(key)] = pp
+            except (ValueError, IndexError) as e:
+                db.load_errors += 1
+                log.warning("dropping unparsable per-policy key %r: %s", key, e)
+        if db.load_errors:
+            log.warning(
+                "%s: dropped %d unparsable entries (kept %d records) — "
+                "journal/db format skew?",
+                path,
+                db.load_errors,
+                len(db.records),
+            )
+        if journal is not None:
+            db.replay_journal(journal, missing_ok=True)
         return db
+
+    def replay_journal(self, path: str, missing_ok: bool = False) -> int:
+        """Re-apply an append-only JSONL journal (see :func:`journal_entry`)
+        in order; later lines win. Returns the number of records applied;
+        malformed lines are warned about and counted in ``load_errors``."""
+        try:
+            f = open(path)
+        except FileNotFoundError:
+            if missing_ok:
+                return 0
+            raise
+        applied = 0
+        with f:
+            for lineno, line in enumerate(f, 1):
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    entry = json.loads(line)
+                    size = key_from_str(entry["key"])
+                    rec = dict(entry["record"])
+                    rec.pop("size", None)
+                    self.add_record(
+                        TuningRecord(size=size, **rec), entry.get("per_policy")
+                    )
+                    applied += 1
+                except (ValueError, IndexError, TypeError, KeyError) as e:
+                    self.load_errors += 1
+                    log.warning(
+                        "%s:%d: skipping malformed journal line: %s", path, lineno, e
+                    )
+        return applied
+
+
+def journal_entry(
+    rec: TuningRecord, per_policy: Optional[Dict[str, float]] = None
+) -> str:
+    """One journal line: the shared format the offline ``Tuner`` emits and
+    the serve-time adaptive tuner appends — ``TuningDatabase.replay_journal``
+    consumes both identically."""
+    payload = asdict(rec)
+    payload.pop("size")
+    entry = {"key": key_to_str(rec.size), "record": payload}
+    if per_policy is not None:
+        entry["per_policy"] = per_policy
+    return json.dumps(entry)
+
+
+def append_journal(
+    path: str, rec: TuningRecord, per_policy: Optional[Dict[str, float]] = None
+) -> None:
+    """Append one record to the JSONL journal (crash-safe: one line per
+    commit, flushed before close; a torn final line is skipped on replay)."""
+    with open(path, "a") as f:
+        f.write(journal_entry(rec, per_policy) + "\n")
 
 
 def measure_model(mach: costmodel.Machine = costmodel.V5E) -> MeasureFn:
@@ -200,13 +316,22 @@ class Tuner:
         )
         return rec, per_policy
 
-    def tune(self, sizes: Sequence, progress_every: int = 0) -> TuningDatabase:
-        """Tune a suite of targets (bare (M, N, K) sizes and/or GemmOps)."""
+    def tune(
+        self,
+        sizes: Sequence,
+        progress_every: int = 0,
+        journal: Optional[str] = None,
+    ) -> TuningDatabase:
+        """Tune a suite of targets (bare (M, N, K) sizes and/or GemmOps).
+        With ``journal``, each record is also appended to the JSONL journal
+        as it lands — the same format the online adaptive tuner emits, so an
+        offline sweep and a serving run can share one warm-start artifact."""
         db = TuningDatabase()
         for i, size in enumerate(sizes):
             rec, per_policy = self.tune_size(size)
-            db.records[rec.size] = rec
-            db.per_policy[rec.size] = per_policy
+            db.add_record(rec, per_policy)
+            if journal is not None:
+                append_journal(journal, rec, per_policy)
             if progress_every and (i + 1) % progress_every == 0:  # pragma: no cover
                 print(f"tuned {i + 1}/{len(sizes)}")
         return db

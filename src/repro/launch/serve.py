@@ -3,20 +3,32 @@
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --preset 100m \
       --requests 16 --max-new-tokens 32
+
+Online adaptation (miss-driven autotuning in the decode loop):
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --requests 16 \
+      --adapt --adapt-every 4 --adapt-budget 0.05 \
+      --db artifacts/tuning_db.json --journal artifacts/tuning_journal.jsonl
+
+``--db`` warm-starts the selector from an offline snapshot; ``--journal`` is
+replayed on top at startup and appended to as serving traffic teaches the
+tuner new fingerprints, so the next run starts where this one left off.
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 import time
 
 import jax
 import numpy as np
 
 from repro.configs import list_archs
+from repro.core.adaptive import AdaptiveConfig, AdaptiveTuner
 from repro.core.gemm import gemm_context
-from repro.core.selector import default_selector
+from repro.core.selector import KernelSelector, default_selector
+from repro.core.tuner import TuningDatabase
 from repro.dist.sharding import materialize_tree
 from repro.launch.train import preset_config
 from repro.models import build_model
@@ -37,6 +49,42 @@ def main() -> int:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dtype", default="float32")
+    ap.add_argument(
+        "--adapt",
+        action="store_true",
+        help="enable online miss-driven autotuning in the decode loop",
+    )
+    ap.add_argument(
+        "--adapt-every",
+        type=int,
+        default=4,
+        help="decode steps between adaptation rounds (with --adapt)",
+    )
+    ap.add_argument(
+        "--adapt-budget",
+        type=float,
+        default=None,
+        help="wallclock seconds per adaptation round (default: uncapped)",
+    )
+    ap.add_argument(
+        "--adapt-threshold",
+        type=int,
+        default=1,
+        help="trace-time misses before a fingerprint is tuned (selection "
+        "runs at trace time, so jit-cached repeats don't re-count: a "
+        "fingerprint that traces at all will serve many dispatches)",
+    )
+    ap.add_argument(
+        "--db",
+        default=None,
+        help="tuning database snapshot to warm-start the selector from",
+    )
+    ap.add_argument(
+        "--journal",
+        default=None,
+        help="append-only tuning journal: replayed on start, appended to by "
+        "--adapt commits",
+    )
     args = ap.parse_args()
 
     cfg = preset_config(args.arch, args.preset)
@@ -47,10 +95,39 @@ def main() -> int:
     model = build_model(cfg)
     params = materialize_tree(model.param_specs(), jax.random.PRNGKey(args.seed))
 
-    selector = default_selector()
+    if args.db or args.journal or args.adapt:
+        if args.db and os.path.exists(args.db):
+            db = TuningDatabase.load(args.db, journal=args.journal)
+        else:
+            db = TuningDatabase()
+            if args.journal:
+                db.replay_journal(args.journal, missing_ok=True)
+        sieve = db.build_sieve() if db.records else None
+        selector = KernelSelector(sieve=sieve, db=db)
+        log.info(
+            "selector warm-start: %d tuned records (%d dropped at load)",
+            len(db.records),
+            db.load_errors,
+        )
+    else:
+        selector = default_selector()
+    adaptive = None
+    if args.adapt:
+        adaptive = AdaptiveTuner(
+            selector,
+            config=AdaptiveConfig(
+                budget_s=args.adapt_budget,
+                hot_threshold=args.adapt_threshold,
+            ),
+            journal=args.journal,
+        )
     with gemm_context(selector=selector) as ctx:
         engine = ServeEngine(
-            model, params, ServeConfig(n_slots=args.slots, max_seq=args.max_seq, eos=-1)
+            model,
+            params,
+            ServeConfig(n_slots=args.slots, max_seq=args.max_seq, eos=-1),
+            adaptive=adaptive,
+            adapt_every=args.adapt_every if args.adapt else 0,
         )
         rng = np.random.default_rng(args.seed)
         for _ in range(args.requests):
@@ -70,9 +147,22 @@ def main() -> int:
         dt,
         ntok / max(dt, 1e-9),
     )
+    if adaptive is not None:
+        st = engine.dispatch_stats
+        log.info(
+            "online adaptation: %d misses -> %d records committed "
+            "(sieve generation %d, %d pending, db=%d records)",
+            st.misses,
+            st.adaptations,
+            st.sieve_generation,
+            st.pending_hot,
+            st.db_records,
+        )
     # show the Stream-K++ dispatch decisions the decode GEMMs triggered
+    # (the engine mirrors its traces' selections whether it served under
+    # the ambient context or its own selector-scoped one)
     seen = {}
-    for e in ctx.log:
+    for e in engine.selection_log or ctx.log:
         seen.setdefault((e.tag, e.local_mnk), e.selection)
     log.info("distinct GEMM dispatches: %d", len(seen))
     for (tag, mnk), sel in sorted(seen.items())[:20]:

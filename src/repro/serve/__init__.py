@@ -1,3 +1,3 @@
-from repro.serve.engine import Request, ServeConfig, ServeEngine
+from repro.serve.engine import DispatchStats, Request, ServeConfig, ServeEngine
 
-__all__ = ["Request", "ServeConfig", "ServeEngine"]
+__all__ = ["DispatchStats", "Request", "ServeConfig", "ServeEngine"]

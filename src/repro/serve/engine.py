@@ -25,11 +25,30 @@ import numpy as np
 
 from contextlib import contextmanager
 
+from repro.core.adaptive import AdaptiveTuner
 from repro.core.gemm import current_log, current_selector, gemm_context
-from repro.core.selector import KernelSelector
+from repro.core.selector import KernelSelector, SelectorStats
 from repro.utils.logging import get_logger
 
 log = get_logger("serve")
+
+
+@dataclass(frozen=True)
+class DispatchStats:
+    """Point-in-time view of the engine's dispatch health: the selector's
+    counters plus the online-adaptation loop's. Selector fields
+    (``tuned_hits``, ``lookups``, ...) are reachable directly via attribute
+    delegation."""
+
+    selector: SelectorStats
+    misses: int  # untuned dispatches observed (adaptive) or cold non-DB hits
+    adaptations: int  # tuning records committed online
+    sieve_generation: int  # build version of the live sieve
+    db_records: int  # tuning database size
+    pending_hot: int  # promoted fingerprints awaiting an adaptation round
+
+    def __getattr__(self, name):
+        return getattr(self.selector, name)
 
 
 @dataclass
@@ -60,11 +79,23 @@ class ServeEngine:
         div=None,
         selector: Optional[KernelSelector] = None,
         backend: Optional[str] = None,
+        adaptive: Optional[AdaptiveTuner] = None,
+        adapt_every: int = 0,
     ):
         self.model = model
         self.params = params
         self.cfg = cfg
         self.div = div or {}
+        # Online adaptation: an AdaptiveTuner rides the decode loop — every
+        # ``adapt_every`` engine steps it gets one budgeted round to tune the
+        # hottest untuned fingerprints the serving traffic produced. The
+        # tuner is bound to a selector; if the caller did not pass one
+        # explicitly, the engine serves through the tuner's.
+        if adaptive is not None and selector is None:
+            selector = adaptive.selector
+        self.adaptive = adaptive
+        self.adapt_every = adapt_every
+        self._steps = 0
         # Dispatch threading: when the caller hands the engine a selector
         # and/or backend, every prefill/decode trace runs under that
         # dedicated context; otherwise traces use the ambient context (so
@@ -112,11 +143,31 @@ class ServeEngine:
                 self.selection_log.extend(amb_log[start:])
 
     @property
-    def dispatch_stats(self):
+    def dispatch_stats(self) -> DispatchStats:
         sel = self.selector
         if sel is None:
             sel = getattr(self, "_ambient_selector", None) or current_selector()
-        return sel.stats
+        ad = self.adaptive
+        if ad is not None:
+            misses = ad.stats.misses
+            adaptations = ad.stats.adaptations
+            pending = ad.pending_hot
+            db_records = len(ad.db.records)
+        else:
+            # without an adaptive loop, "miss" degrades to the cold
+            # non-database selections the selector itself counted
+            misses = sel.stats.sieve_hits + sel.stats.fallbacks
+            adaptations = 0
+            pending = 0
+            db_records = len(sel.db.records) if sel.db is not None else 0
+        return DispatchStats(
+            selector=sel.stats,
+            misses=misses,
+            adaptations=adaptations,
+            sieve_generation=sel.sieve_generation,
+            db_records=db_records,
+            pending_hot=pending,
+        )
 
     # -- request admission -------------------------------------------------
     def submit(self, prompt, max_new_tokens: int = 32, temperature: float = 0.0) -> int:
@@ -191,6 +242,13 @@ class ServeEngine:
                 req.done = True
                 self.slot_req[i] = None
                 self.pos[i] = 0
+        self._steps += 1
+        if (
+            self.adaptive is not None
+            and self.adapt_every > 0
+            and self._steps % self.adapt_every == 0
+        ):
+            self.adaptive.adapt()
         return True
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
@@ -205,6 +263,10 @@ class ServeEngine:
                     seen[r.uid] = r
             if not self.step():
                 break
+        if self.adaptive is not None and self.adapt_every > 0:
+            # end-of-run flush: short traces must still commit what they
+            # learned (and journal it) before the process goes away
+            self.adaptive.drain()
         for r in seen.values():
             if r.done:
                 finished.append(r)

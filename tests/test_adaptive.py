@@ -1,0 +1,288 @@
+"""Artifact lifecycle + online adaptation: journal roundtrips, generational
+sieve rebuilds, selector hot-swap, and the AdaptiveTuner miss loop."""
+
+import json
+
+import pytest
+
+from repro.core.adaptive import AdaptiveConfig, AdaptiveTuner
+from repro.core.op import Epilogue, GemmOp
+from repro.core.selector import KernelSelector
+from repro.core.tuner import (
+    Tuner,
+    TuningDatabase,
+    append_journal,
+    journal_entry,
+)
+from repro.core.policies import DEFAULT_TILE_CONFIGS, DP
+
+
+OPS = [
+    GemmOp.plain(256, 512, 128),
+    GemmOp.plain(96, 384, 256, in_dtype="bfloat16"),
+    GemmOp(64, 256, 128, g=8, kind="grouped"),
+    GemmOp.plain(128, 128, 512, epilogue=Epilogue(activation="gelu")),
+    GemmOp.plain(32, 640, 256, epilogue=Epilogue(bias=True, activation="silu")),
+]
+
+
+def cold_selector():
+    db = TuningDatabase()
+    return KernelSelector(sieve=db.build_sieve(), db=db), db
+
+
+# -- journal / persistence lifecycle ----------------------------------------
+
+
+def test_add_record_bumps_version():
+    db = TuningDatabase()
+    rec, pp = Tuner().tune_size(OPS[0])
+    assert db.version == 0
+    db.add_record(rec, pp)
+    assert db.version == 1
+    assert db.records[rec.size] is rec
+    assert db.per_policy[rec.size] == pp
+
+
+def test_save_journal_load_roundtrip(tmp_path):
+    """Snapshot + journal-append + load reproduces every record, including
+    grouped and epilogue-fused fingerprints (extended op keys)."""
+    tuner = Tuner()
+    db = tuner.tune(OPS[:3])
+    snap = str(tmp_path / "db.json")
+    journal = str(tmp_path / "journal.jsonl")
+    db.save(snap)
+    # two more records land after the snapshot, journal-only
+    late = {}
+    for op in OPS[3:]:
+        rec, pp = tuner.tune_size(op)
+        append_journal(journal, rec, pp)
+        late[rec.size] = rec
+
+    loaded = TuningDatabase.load(snap, journal=journal)
+    assert loaded.load_errors == 0
+    assert set(loaded.records) == {op.key for op in OPS}
+    for op in OPS:
+        assert loaded.records[op.key].policy == (
+            db.records[op.key].policy
+            if op.key in db.records
+            else late[op.key].policy
+        )
+    # grouped / fused keys survived as tuples, not strings
+    assert loaded.records[OPS[2].key].size == OPS[2].key
+    assert len(OPS[2].key) == 7
+    # per-policy tables survive both paths
+    for op in OPS:
+        assert op.key in loaded.per_policy
+
+
+def test_load_counts_and_keeps_going_on_bad_keys(tmp_path):
+    db = Tuner().tune([OPS[0]])
+    path = str(tmp_path / "db.json")
+    db.save(path)
+    payload = json.load(open(path))
+    good = next(iter(payload["records"].values()))
+    payload["records"]["not-a-key"] = dict(good)
+    payload["records"]["1,2"] = dict(good)
+    payload["per_policy"]["also,bad"] = {"dp": 1.0}
+    json.dump(payload, open(path, "w"))
+
+    loaded = TuningDatabase.load(path)
+    assert set(loaded.records) == set(db.records)  # good records kept
+    assert loaded.load_errors == 3  # skew visible, not a silent shrink
+
+
+def test_journal_replay_skips_malformed_lines(tmp_path):
+    path = str(tmp_path / "journal.jsonl")
+    rec, pp = Tuner().tune_size(OPS[0])
+    with open(path, "w") as f:
+        f.write(journal_entry(rec, pp) + "\n")
+        f.write("{torn line\n")
+        f.write('{"key": "1,2,3", "record": {"nonsense": true}}\n')
+    db = TuningDatabase()
+    assert db.replay_journal(path) == 1
+    assert db.load_errors == 2
+    assert db.records[rec.size].policy == rec.policy
+
+
+def test_journal_replay_missing_file(tmp_path):
+    db = TuningDatabase()
+    assert db.replay_journal(str(tmp_path / "nope.jsonl"), missing_ok=True) == 0
+    with pytest.raises(FileNotFoundError):
+        db.replay_journal(str(tmp_path / "nope.jsonl"))
+
+
+def test_tuner_emits_the_journal_it_consumes(tmp_path):
+    """Offline sweeps and journal replay share one format: a database built
+    by ``Tuner.tune(journal=...)`` is exactly reproduced by replaying."""
+    path = str(tmp_path / "journal.jsonl")
+    db = Tuner().tune(OPS, journal=path)
+    replayed = TuningDatabase()
+    assert replayed.replay_journal(path) == len(OPS)
+    assert set(replayed.records) == set(db.records)
+    for key, rec in db.records.items():
+        assert replayed.records[key] == rec
+        assert replayed.per_policy[key] == db.per_policy[key]
+
+
+# -- generational sieve rebuilds --------------------------------------------
+
+
+def test_sieve_generation_increments_on_rebuild():
+    sel, db = cold_selector()
+    ad = AdaptiveTuner(sel, config=AdaptiveConfig(hot_threshold=1, rebuild_every=1))
+    assert sel.sieve_generation == 0
+    for i, op in enumerate(OPS[:3]):
+        sel.select_op(op)
+        ad.adapt()
+        assert sel.sieve_generation == i + 1  # monotone, one per rebuild
+    assert ad.stats.rebuilds == 3
+    # the rebuilt sieve actually contains the learned winners
+    winners = db.winners()
+    assert sel.sieve.validate_true_negative_rate(winners) == 1.0
+
+
+def test_hot_swap_mid_stream_never_serves_stale_candidate():
+    """A memoised sieve/fallback pick must not survive the artifact swap:
+    after commit + hot-swap, the very next dispatch resolves from the DB
+    with the same winner an offline sweep finds."""
+    sel, db = cold_selector()
+    ad = AdaptiveTuner(sel, config=AdaptiveConfig(hot_threshold=2, rebuild_every=1))
+    op = OPS[3]
+    for _ in range(3):
+        pre = sel.select_op(op)
+    assert pre.source == "fallback"  # cold: empty sieve prunes everything
+    assert ad.pending_hot == 1
+    ad.adapt()
+    post = sel.select_op(op)
+    offline, _ = Tuner().tune_size(op)
+    assert post.source == "tuned"
+    assert post.policy.name == offline.policy
+    assert post.cfg.name == offline.cfg
+    # and the memoised repeat stays the tuned one
+    assert sel.select_op(op).source == "tuned"
+
+
+def test_hot_swap_invalidates_only_requested_keys():
+    sel, db = cold_selector()
+    a, b = OPS[0], OPS[1]
+    sel.select_op(a)
+    sel.select_op(b)
+    assert sel.hot_swap(keys=[a.key]) == 1
+    assert a.key not in sel._cache and b.key in sel._cache
+    assert sel.hot_swap() == 1  # keys=None clears the rest
+
+
+# -- the miss-driven adaptation loop ----------------------------------------
+
+
+def test_hot_threshold_gates_promotion():
+    sel, _ = cold_selector()
+    ad = AdaptiveTuner(sel, config=AdaptiveConfig(hot_threshold=3))
+    op = OPS[0]
+    sel.select_op(op)
+    sel.select_op(op)
+    assert ad.pending_hot == 0 and ad.stats.misses == 2
+    sel.select_op(op)  # third repeated miss crosses the threshold
+    assert ad.pending_hot == 1 and ad.stats.promoted == 1
+    sel.select_op(op)  # further misses do not re-promote
+    assert ad.stats.promoted == 1
+
+
+def test_miss_table_is_bounded():
+    sel, _ = cold_selector()
+    ad = AdaptiveTuner(
+        sel, config=AdaptiveConfig(hot_threshold=100, max_pending=8)
+    )
+    for i in range(40):
+        sel.select_op(GemmOp.plain(8 * (i + 1), 128, 128))
+    assert ad.tracked <= 8
+    assert ad.stats.evicted == 32
+    assert ad.stats.misses == 40
+
+
+def test_hot_queue_is_bounded_at_threshold_one():
+    """At hot_threshold=1 (the serving CLI default) every miss promotes, so
+    the hot queue needs its own bound — a one-off fingerprint stream must
+    not grow tuner state without limit."""
+    sel, _ = cold_selector()
+    ad = AdaptiveTuner(sel, config=AdaptiveConfig(hot_threshold=1, max_pending=8))
+    for i in range(40):
+        sel.select_op(GemmOp.plain(8 * (i + 1), 128, 128))
+    assert ad.pending_hot <= 8
+    assert ad.tracked <= 16  # hot queue + miss table, each bounded
+    assert ad.stats.evicted == 32
+
+
+def test_explicit_db_is_installed_into_selector():
+    """An explicitly passed database must be the one selection reads —
+    otherwise commits would be invisible to dispatch forever."""
+    sel, original = cold_selector()
+    fresh = TuningDatabase()
+    ad = AdaptiveTuner(
+        sel, db=fresh, config=AdaptiveConfig(hot_threshold=1, rebuild_every=1)
+    )
+    assert sel.db is fresh
+    op = OPS[0]
+    sel.select_op(op)
+    ad.adapt()
+    assert op.key in fresh.records and op.key not in original.records
+    assert sel.select_op(op).source == "tuned"
+
+
+def test_budget_cuts_adaptation_round_short():
+    sel, db = cold_selector()
+    ad = AdaptiveTuner(sel, config=AdaptiveConfig(hot_threshold=1))
+    for op in OPS[:3]:
+        sel.select_op(op)
+    assert ad.pending_hot == 3
+    assert ad.adapt(budget_s=0.0) == 0  # no wallclock left: commit nothing
+    assert ad.stats.budget_stops == 1
+    assert ad.pending_hot == 3  # nothing lost, just deferred
+    assert ad.adapt(budget_s=None) == 3  # uncapped round drains them
+    assert len(db.records) == 3
+
+
+def test_forced_dispatches_feed_the_miss_queue():
+    sel, db = cold_selector()
+    ad = AdaptiveTuner(sel, config=AdaptiveConfig(hot_threshold=1))
+    cfg = DEFAULT_TILE_CONFIGS[0]
+    sel.record_forced(OPS[0], DP, cfg)
+    assert ad.stats.misses == 1 and ad.pending_hot == 1
+    ad.adapt()
+    # once tuned, forced dispatches of the same op are no longer misses
+    sel.record_forced(OPS[0], DP, cfg)
+    assert ad.stats.misses == 1
+
+
+def test_drain_flushes_everything_and_rebuilds():
+    sel, db = cold_selector()
+    ad = AdaptiveTuner(
+        sel,
+        config=AdaptiveConfig(hot_threshold=1, max_tunes_per_step=2, rebuild_every=100),
+    )
+    for op in OPS:
+        sel.select_op(op)
+    assert ad.pending_hot == len(OPS)
+    assert ad.drain() == len(OPS)
+    assert ad.pending_hot == 0
+    assert len(db.records) == len(OPS)
+    assert sel.sieve_generation == 1  # final fold-in even below rebuild_every
+
+
+def test_adaptive_journal_commits_warm_start_next_run(tmp_path):
+    """Records learned while serving survive the restart: replaying the
+    journal into a fresh selector turns yesterday's misses into DB hits."""
+    journal = str(tmp_path / "journal.jsonl")
+    sel, _ = cold_selector()
+    ad = AdaptiveTuner(
+        sel, config=AdaptiveConfig(hot_threshold=1), journal=journal
+    )
+    for op in OPS:
+        sel.select_op(op)
+    ad.drain()
+
+    db2 = TuningDatabase()
+    db2.replay_journal(journal)
+    sel2 = KernelSelector(sieve=db2.build_sieve(), db=db2)
+    assert all(sel2.select_op(op).source == "tuned" for op in OPS)

@@ -1,0 +1,159 @@
+"""ServeEngine online adaptation: a cold-start engine serving repeated
+novel shapes converges to db-hit dispatch, dispatch_stats counters stay
+consistent, and journal commits survive into the next run."""
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.core.adaptive import AdaptiveConfig, AdaptiveTuner
+from repro.core.selector import KernelSelector
+from repro.core.tuner import TuningDatabase
+from repro.dist.sharding import materialize_tree
+from repro.models import build_model
+from repro.serve import DispatchStats, ServeConfig, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = tiny("granite-8b")
+    model = build_model(cfg)
+    params = materialize_tree(model.param_specs(), jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def cold_adaptive(**overrides):
+    db = TuningDatabase()
+    sel = KernelSelector(sieve=db.build_sieve(), db=db)
+    cfg = AdaptiveConfig(
+        **{"hot_threshold": 1, "max_tunes_per_step": 8, "rebuild_every": 4, **overrides}
+    )
+    return AdaptiveTuner(sel, config=cfg), db
+
+
+def submit_wave(eng, cfg, n=3, prompt_len=8, new_tokens=4, seed=0):
+    rng = np.random.default_rng(seed)
+    for _ in range(n):
+        eng.submit(
+            rng.integers(1, cfg.vocab_size, size=prompt_len),
+            max_new_tokens=new_tokens,
+        )
+
+
+def test_cold_engine_converges_to_db_hits(served):
+    cfg, model, params = served
+    adaptive, db = cold_adaptive()
+    eng = ServeEngine(
+        model,
+        params,
+        ServeConfig(n_slots=2, max_seq=64, eos=-1),
+        adaptive=adaptive,
+        adapt_every=1,
+    )
+    assert eng.selector is adaptive.selector  # engine adopts the tuner's selector
+
+    submit_wave(eng, cfg, seed=0)
+    eng.run()
+    assert adaptive.stats.misses > 0  # cold start: nothing was tuned
+    assert adaptive.stats.adaptations > 0  # ...and the decode loop tuned it
+    assert adaptive.pending_hot == 0  # end-of-run drain flushed the queue
+    assert len(db.records) == adaptive.stats.adaptations
+
+    # second wave over the same shapes: every dispatch is now a DB hit
+    start = len(eng.selection_log)
+    submit_wave(eng, cfg, seed=1)
+    eng.run()
+    wave2 = eng.selection_log[start:]
+    assert wave2, "second wave produced no dispatches"
+    assert all(e.selection.source == "tuned" for e in wave2)
+    misses_after = adaptive.stats.misses
+    submit_wave(eng, cfg, seed=2)
+    eng.run()
+    assert adaptive.stats.misses == misses_after  # converged: misses stopped
+
+
+def test_dispatch_stats_counters_consistent(served):
+    cfg, model, params = served
+    adaptive, db = cold_adaptive(rebuild_every=2)
+    eng = ServeEngine(
+        model,
+        params,
+        ServeConfig(n_slots=2, max_seq=64, eos=-1),
+        adaptive=adaptive,
+        adapt_every=2,
+    )
+    submit_wave(eng, cfg)
+    eng.run()
+    st = eng.dispatch_stats
+    assert isinstance(st, DispatchStats)
+    assert st.misses == adaptive.stats.misses
+    assert st.adaptations == adaptive.stats.adaptations == len(db.records)
+    assert st.sieve_generation == adaptive.selector.sieve_generation >= 1
+    assert st.db_records == len(db.records) > 0
+    assert st.pending_hot == 0
+    # selector-field delegation still works and agrees with the selector
+    assert st.lookups == adaptive.selector.stats.lookups > 0
+    assert st.tuned_hits == adaptive.selector.stats.tuned_hits
+    # every dispatch was categorised exactly once
+    s = st.selector
+    assert s.lookups == (
+        s.tuned_hits + s.sieve_hits + s.fallbacks + s.cache_hits + s.forced
+    )
+
+
+def test_adaptation_off_without_step_hook(served):
+    """adaptive without adapt_every (or vice versa) never tunes: the step
+    hook is the only trigger."""
+    cfg, model, params = served
+    adaptive, db = cold_adaptive()
+    eng = ServeEngine(
+        model,
+        params,
+        ServeConfig(n_slots=2, max_seq=64, eos=-1),
+        adaptive=adaptive,
+        adapt_every=0,
+    )
+    submit_wave(eng, cfg, n=2, new_tokens=2)
+    eng.run()
+    assert adaptive.stats.misses > 0  # misses were observed...
+    assert adaptive.stats.adaptations == 0  # ...but nothing tuned
+    assert len(db.records) == 0
+    assert eng.dispatch_stats.pending_hot == adaptive.pending_hot > 0
+
+
+def test_engine_journal_warm_starts_next_engine(served, tmp_path):
+    cfg, model, params = served
+    journal = str(tmp_path / "serve_journal.jsonl")
+    db = TuningDatabase()
+    sel = KernelSelector(sieve=db.build_sieve(), db=db)
+    adaptive = AdaptiveTuner(
+        sel, config=AdaptiveConfig(hot_threshold=1), journal=journal
+    )
+    eng = ServeEngine(
+        model,
+        params,
+        ServeConfig(n_slots=2, max_seq=64, eos=-1),
+        adaptive=adaptive,
+        adapt_every=1,
+    )
+    submit_wave(eng, cfg)
+    eng.run()
+    assert adaptive.stats.adaptations > 0
+
+    # "restart": a fresh engine warm-started from the journal alone serves
+    # the same traffic entirely from the database
+    db2 = TuningDatabase()
+    assert db2.replay_journal(journal) == adaptive.stats.adaptations
+    sel2 = KernelSelector(sieve=db2.build_sieve(), db=db2)
+    eng2 = ServeEngine(
+        model,
+        params,
+        ServeConfig(n_slots=2, max_seq=64, eos=-1),
+        selector=sel2,
+    )
+    submit_wave(eng2, cfg, seed=3)
+    eng2.run()
+    assert eng2.selection_log
+    assert all(e.selection.source == "tuned" for e in eng2.selection_log)
+    assert eng2.dispatch_stats.misses == 0
