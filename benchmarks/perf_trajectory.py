@@ -1,0 +1,181 @@
+"""Perf trajectory: one ``BENCH_<n>.json`` at the repo root per PR.
+
+Each snapshot records (a) trace-time dispatch overhead (cold / memoised
+select_op) and (b) the modeled-TFLOP/s winner — (policy, cfg, g) at the
+op's real byte-widths — for a deterministic sample of gemm_suite shapes,
+in f32 and bf16. When the previous snapshot (``BENCH_<n-1>.json``) exists,
+per-shape and dispatch deltas are computed, embedded under ``"deltas"``,
+and printed — the CI bench-smoke job runs this and uploads the file, so
+the trajectory of modeled-speed fidelity is diffable across PRs.
+
+Usage:
+  PYTHONPATH=src:. python benchmarks/perf_trajectory.py            # next n
+  PYTHONPATH=src:. python benchmarks/perf_trajectory.py --index 3  # pin n
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+from typing import Dict, List, Optional
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+N_SHAPES = 32
+DTYPES = ("float32", "bfloat16")
+
+
+def _sample_shapes(n: int = N_SHAPES) -> List[tuple]:
+    """Deterministic spread over the 923-size suite (every len/n-th shape)."""
+    from repro.configs.gemm_suite import suite
+
+    full = suite()
+    step = max(1, len(full) // n)
+    return full[::step][:n]
+
+
+def _dispatch_overhead_us() -> Dict[str, float]:
+    """Same harness as benchmarks/dispatch_overhead.py (shared size
+    generator, cached 923-size DB, shared timer) so the trajectory's
+    dispatch numbers cannot drift from that benchmark's artifact."""
+    from benchmarks.common import tuned_db
+    from benchmarks.dispatch_overhead import _sizes, _time_per
+    from repro.core.op import GemmOp
+    from repro.core.selector import KernelSelector
+
+    db = tuned_db()
+    sel = KernelSelector(sieve=db.build_sieve(), db=db)
+    ops = [GemmOp.plain(*s) for s in _sizes(200)]
+    return {
+        "op_cold_us": _time_per(sel.select_op, ops),
+        "op_cached_us": _time_per(sel.select_op, ops),
+    }
+
+
+def _modeled_suite() -> Dict[str, dict]:
+    from repro.core.op import GemmOp
+    from repro.core.selector import default_selector
+    from repro.core import costmodel
+    from repro.core.workpart import GemmShape
+
+    sel = default_selector()
+    out: Dict[str, dict] = {}
+    for m, n, k in _sample_shapes():
+        entry = {}
+        for dt_name in DTYPES:
+            s = sel.select_op(GemmOp.plain(m, n, k, in_dtype=dt_name))
+            dt = costmodel.profile_for(dt_name, dt_name)
+            tflops = costmodel.gemm_tflops(
+                GemmShape(m, n, k), s.cfg, s.policy, g=s.g, dt=dt
+            )
+            entry[dt_name] = {
+                "policy": s.policy.name,
+                "cfg": s.cfg.name,
+                "g": s.g,
+                "modeled_tflops": round(tflops, 4),
+            }
+        out[f"{m}x{n}x{k}"] = entry
+    return out
+
+
+def _find_indices(out_dir: str) -> List[int]:
+    idx = []
+    for path in glob.glob(os.path.join(out_dir, "BENCH_*.json")):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", os.path.basename(path))
+        if m:
+            idx.append(int(m.group(1)))
+    return sorted(idx)
+
+
+def _deltas(cur: dict, prev: dict) -> dict:
+    d: dict = {"vs": prev.get("index"), "suite": {}, "dispatch": {}}
+    for key, cur_us in cur["dispatch"].items():
+        prev_us = prev.get("dispatch", {}).get(key)
+        if prev_us:
+            d["dispatch"][key] = round(cur_us - prev_us, 3)
+    for shape, entry in cur["suite"].items():
+        prev_entry = prev.get("suite", {}).get(shape)
+        if not prev_entry:
+            continue
+        for dt_name, cur_dt in entry.items():
+            prev_dt = prev_entry.get(dt_name)
+            if not prev_dt:
+                continue
+            delta_tf = round(
+                cur_dt["modeled_tflops"] - prev_dt["modeled_tflops"], 4
+            )
+            changed = (cur_dt["policy"], cur_dt["cfg"], cur_dt["g"]) != (
+                prev_dt["policy"],
+                prev_dt["cfg"],
+                prev_dt.get("g", 8),
+            )
+            if delta_tf or changed:
+                d["suite"].setdefault(shape, {})[dt_name] = {
+                    "d_tflops": delta_tf,
+                    "winner_changed": changed,
+                }
+    return d
+
+
+def build_snapshot(
+    index: Optional[int] = None,
+    out_dir: str = REPO_ROOT,
+    diff_dir: Optional[str] = None,
+) -> str:
+    """Write BENCH_<index>.json into ``out_dir``, diffing against the latest
+    prior snapshot found in ``diff_dir`` (default: ``out_dir``). CI points
+    ``out_dir`` at its artifact folder and ``diff_dir`` at the repo root, so
+    only the newly generated snapshot is uploaded."""
+    diff_dir = diff_dir or out_dir
+    existing = _find_indices(diff_dir)
+    if index is None:
+        index = (existing[-1] + 1) if existing else 0
+    snapshot = {
+        "index": index,
+        "dispatch": _dispatch_overhead_us(),
+        "suite": _modeled_suite(),
+    }
+    prior = [i for i in existing if i < index]
+    if prior:
+        with open(os.path.join(diff_dir, f"BENCH_{prior[-1]}.json")) as f:
+            snapshot["deltas"] = _deltas(snapshot, json.load(f))
+    path = os.path.join(out_dir, f"BENCH_{index}.json")
+    with open(path, "w") as f:
+        json.dump(snapshot, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--index", type=int, default=None, help="pin the snapshot index")
+    ap.add_argument("--out-dir", default=REPO_ROOT)
+    ap.add_argument(
+        "--diff-dir",
+        default=None,
+        help="where to look for prior snapshots to diff against "
+        "(default: --out-dir)",
+    )
+    args = ap.parse_args()
+    path = build_snapshot(
+        index=args.index, out_dir=args.out_dir, diff_dir=args.diff_dir
+    )
+    with open(path) as f:
+        snap = json.load(f)
+    print(f"wrote {path}")
+    print(f"dispatch: {snap['dispatch']}")
+    deltas = snap.get("deltas")
+    if deltas:
+        print(f"deltas vs BENCH_{deltas['vs']}:")
+        print(f"  dispatch: {deltas['dispatch']}")
+        for shape, entry in sorted(deltas["suite"].items()):
+            print(f"  {shape}: {entry}")
+    else:
+        print("no previous snapshot to diff against")
+
+
+if __name__ == "__main__":
+    main()

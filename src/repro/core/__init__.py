@@ -33,8 +33,18 @@ from repro.core.workpart import (
 from repro.core.bloom import BloomFilter, encode_mnk, murmur3_32
 from repro.core.op import Epilogue, GemmOp, encode_key, encode_op
 from repro.core.opensieve import OpenSieve
-from repro.core.costmodel import Machine, V5E, gemm_tflops, gemm_time_s, best_config
+from repro.core.costmodel import (
+    DtypeBytes,
+    Machine,
+    V5E,
+    best_config,
+    default_grid_sizes,
+    gemm_tflops,
+    gemm_time_s,
+    profile_for,
+)
 from repro.core.tuner import (
+    LEGACY_GRID,
     Tuner,
     TuningDatabase,
     TuningRecord,
@@ -79,9 +89,13 @@ __all__ = [
     "OpenSieve",
     "Machine",
     "V5E",
+    "DtypeBytes",
+    "profile_for",
+    "default_grid_sizes",
     "gemm_tflops",
     "gemm_time_s",
     "best_config",
+    "LEGACY_GRID",
     "Tuner",
     "TuningDatabase",
     "TuningRecord",

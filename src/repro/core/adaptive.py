@@ -12,8 +12,9 @@ a resharded MoE group size) falls through to the heuristic forever. The
   2. fingerprints whose miss count crosses ``hot_threshold`` are promoted to
      a FIFO of *hot* tuning candidates;
   3. :meth:`AdaptiveTuner.adapt` — called from the serving loop between
-     decode steps (``ServeEngine(adapt_every=...)``) — sweeps (policy, tile)
-     candidates for a few hot fingerprints under an optional wallclock
+     decode steps (``ServeEngine(adapt_every=...)``) — sweeps
+     (policy, tile, grid-size) candidates at the fingerprint's real operand
+     byte-widths for a few hot fingerprints under an optional wallclock
      budget and commits each winner as an incremental
      :class:`~repro.core.tuner.TuningRecord`;
   4. commits append to the shared JSONL journal (restart-safe warm start),
@@ -95,7 +96,7 @@ class AdaptiveTuner:
             selector.hot_swap(db=self.db)
         self.tuner = tuner or Tuner(
             policies=selector.policies, tile_configs=selector.tile_configs,
-            mach=selector.mach,
+            mach=selector.mach, grid_sizes=selector.grid_sizes,
         )
         self.cfg = config or AdaptiveConfig()
         self.journal = journal

@@ -135,6 +135,18 @@ class BloomFilter:
         return float(np.unpackbits(self.bits).mean())
 
     @property
+    def est_items(self) -> float:
+        """Distinct-key estimate from the bit saturation — the standard
+        ``-(m/k) * ln(1 - X/m)`` Bloom cardinality estimator. Unlike
+        ``n_items`` (an add-counter that double-counts duplicates, and after
+        ``merge`` only an upper bound) this is dedupe-aware, so capacity
+        planning should read this, not ``n_items``."""
+        sat = self.saturation
+        if sat >= 1.0:
+            return float("inf")
+        return -(self.n_bits / self.n_hashes) * math.log(1.0 - sat)
+
+    @property
     def est_fp_rate(self) -> float:
         return self.saturation**self.n_hashes
 
@@ -161,5 +173,9 @@ class BloomFilter:
             raise ValueError("incompatible filters")
         out = BloomFilter(self.n_bits, self.n_hashes, self.seed)
         out.bits = self.bits | other.bits
+        # The merge is dedupe-agnostic (bitwise OR cannot tell how many keys
+        # the two filters shared), so the summed count is only an UPPER
+        # bound on distinct keys — overlapping key sets double-count. Read
+        # ``est_items`` (saturation-based) for occupancy/capacity planning.
         out.n_items = self.n_items + other.n_items
         return out

@@ -19,11 +19,30 @@ Machine model (TPU v5e):
     is why tile-config selection matters for skinny GEMMs and why the tuner
     sweeps configs jointly with policies.
 
+Grid size ``g`` (number of persistent workgroups the flattened iteration
+space is split over) is a *tuning axis*, not a hardware constant: the
+original Stream-K paper shows performance is highly sensitive to it. The
+model keeps ``g`` distinct from ``lanes``: ``g`` workgroups time-share the
+``lanes`` physical slots, so every wave of ``g`` programs costs
+``ceil(g / lanes)`` lane-rounds. ``g == lanes`` reproduces the legacy
+one-program-per-lane schedule exactly; ``g != lanes`` changes the HYBRID
+remainder wave (``T mod g``), the split-tile fix-up plan, and DP wave
+quantization — which is why the tuner sweeps it jointly with (policy, tile).
+
+Dtype awareness: every timing term is keyed on the *actual* operand
+byte-widths (:class:`DtypeBytes`) — A/B input widths drive the HBM term of
+each k-iteration, the output width drives the C writeback, and the f32
+accumulator width drives fix-up traffic and VMEM feasibility. f32, bf16 and
+int8 ops of the same MNK therefore score (and can select) differently. The
+module-level default stays the paper's fp16-suite 2-byte profile so bare
+(M, N, K) scoring is unchanged.
+
 Timing terms:
   t_tile  = max(tile_flops / lane_flops, tile_bytes / lane_bw)
-  DP      : ceil(T/C) * t_tile                                  (wave rounds)
-  ALL_SK  : ceil(total_iters/C) * t_iter + fixup                (Algorithm 1)
-  HYBRID_b: sk_body + max(dp_waves * t_tile, fixup)             (overlap §4.1)
+  DP      : ceil(T/g) * mult * t_tile                            (wave rounds)
+  ALL_SK  : ceil(total_iters/g) * mult * t_iter + fixup          (Algorithm 1)
+  HYBRID_b: sk_body + max(dp_waves * mult * t_tile, fixup)       (overlap §4.1)
+  mult    = ceil(g / lanes)                       (lane multiplexing rounds)
 
 Fix-up (TPU two-phase reduction replacing GPU atomics): every split tile's
 non-owning contributors round-trip a BM*BN f32 partial through HBM, plus a
@@ -33,8 +52,10 @@ per-split-tile serialization latency (the analogue of the paper's
 
 from __future__ import annotations
 
+import re
 from dataclasses import dataclass
 from functools import lru_cache
+from typing import Optional, Tuple
 
 from repro.core.policies import (
     ALL_POLICIES,
@@ -56,7 +77,7 @@ from repro.core.workpart import (
 class Machine:
     """Hardware constants; defaults are TPU v5e."""
 
-    peak_flops: float = 197e12  # bf16 FLOP/s per chip
+    peak_flops: float = 197e12  # bf16 FLOP/s per chip (MXU)
     hbm_bw: float = 819e9  # B/s
     lanes: int = 8  # concurrent tile slots (virtual CUs)
     ici_bw: float = 50e9  # B/s per link (used by the roofline module)
@@ -76,26 +97,124 @@ class Machine:
 V5E = Machine()
 
 
-def _tile_times(mach: Machine, cfg: TileConfig, in_bytes: int = 2):
-    """(t_full_tile, t_single_k_iter) for one lane."""
+def default_grid_sizes(mach: Machine = V5E) -> Tuple[int, ...]:
+    """The swept grid sizes: {lanes/2, lanes, 2*lanes}, deduped, ascending —
+    the "additional tuning parameter" axis the tuner/selector sweep jointly
+    with (policy, tile)."""
+    lanes = mach.lanes
+    return tuple(sorted({max(1, lanes // 2), lanes, 2 * lanes}))
+
+
+# ---------------------------------------------------------------------------
+# Dtype byte-width profiles
+# ---------------------------------------------------------------------------
+
+_WIDTHS = {
+    "float64": 8,
+    "float32": 4,
+    "float16": 2,
+    "bfloat16": 2,
+    "int32": 4,
+    "uint32": 4,
+    "int16": 2,
+    "uint16": 2,
+    "int8": 1,
+    "uint8": 1,
+    "int4": 1,  # packed sub-byte dtypes still move >= 1 byte per element here
+    "uint4": 1,
+}
+
+
+def dtype_width(name: str) -> int:
+    """Byte width of a dtype fingerprint component (e.g. ``"bfloat16"``).
+    Unknown names fall back to the bit-count embedded in the name (so
+    ``float8_e4m3fn`` -> 1) and finally to 4 bytes."""
+    w = _WIDTHS.get(name)
+    if w is not None:
+        return w
+    m = re.search(r"(\d+)", name)
+    if m:
+        return max(1, int(m.group(1)) // 8)
+    return 4
+
+
+@dataclass(frozen=True)
+class DtypeBytes:
+    """Operand byte-widths one GEMM dispatch actually moves.
+
+    ``a``/``b`` are the input widths (distinct, so mixed bf16-activation x
+    int8-weight ops model their real A/B traffic), ``out`` the C width, and
+    ``acc`` the accumulator width (f32 partials in every kernel here —
+    fix-up traffic and VMEM accumulators are ``acc``-wide regardless of the
+    input dtype)."""
+
+    a: int = 2
+    b: int = 2
+    out: int = 2
+    acc: int = 4
+
+
+#: module default: the paper's fp16 benchmark suite moves 2-byte operands;
+#: bare (M, N, K) scoring keeps this profile so legacy artifacts are stable.
+DEFAULT_DTYPES = DtypeBytes()
+
+
+def profile_for(in_dtype: str, out_dtype: Optional[str] = None) -> DtypeBytes:
+    """DtypeBytes for a :class:`~repro.core.op.GemmOp`'s dtype fingerprints.
+    ``in_dtype`` may be the mixed ``"<a_dtype>*<b_dtype>"`` form."""
+    if "*" in in_dtype:
+        a_name, b_name = in_dtype.split("*", 1)
+    else:
+        a_name = b_name = in_dtype
+    a = dtype_width(a_name)
+    b = dtype_width(b_name)
+    out = dtype_width(out_dtype) if out_dtype else max(a, b)
+    return DtypeBytes(a=a, b=b, out=out)
+
+
+def op_dtypes(op) -> DtypeBytes:
+    """Profile for a GemmOp (duck-typed: anything with in_dtype/out_dtype)."""
+    return profile_for(op.in_dtype, op.out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Timing terms
+# ---------------------------------------------------------------------------
+
+
+def _tile_times(mach: Machine, cfg: TileConfig, dt: DtypeBytes = DEFAULT_DTYPES):
+    """t_single_k_iter for one lane."""
     # One k-iteration moves an A (BM,BK) and B (BK,BN) tile HBM->VMEM and
-    # issues 2*BM*BN*BK MACs on the MXU.
+    # issues 2*BM*BN*BK MACs on the MXU; A and B widths differ for mixed
+    # activation x weight dtypes.
     iter_flops = 2 * cfg.bm * cfg.bn * cfg.bk
-    iter_bytes = (cfg.bm * cfg.bk + cfg.bk * cfg.bn) * in_bytes
+    iter_bytes = cfg.bm * cfg.bk * dt.a + cfg.bk * cfg.bn * dt.b
     t_iter = max(iter_flops / mach.lane_flops, iter_bytes / mach.lane_bw)
     return t_iter
 
 
-def _fixup_time(mach: Machine, st: PartitionStats, cfg: TileConfig) -> float:
+def _fixup_time(
+    mach: Machine, st: PartitionStats, cfg: TileConfig, dt: DtypeBytes = DEFAULT_DTYPES
+) -> float:
     """Two-phase reduction cost: partial write + read + final write, plus a
-    serialization tail per split tile."""
-    acc_bytes = cfg.bm * cfg.bn * 4  # f32 partials
+    serialization tail per split tile. Partials are accumulator-width."""
+    acc_bytes = cfg.bm * cfg.bn * dt.acc
     bytes_moved = st.extra_contributors * acc_bytes * 2  # write + read back
     return bytes_moved / mach.hbm_bw + st.n_split_tiles * mach.fixup_serial_s
 
 
-def _output_time(mach: Machine, st: PartitionStats, cfg: TileConfig, out_bytes: int = 2) -> float:
-    return (st.n_tiles_total * cfg.bm * cfg.bn * out_bytes) / mach.hbm_bw
+def _output_time(
+    mach: Machine, st: PartitionStats, cfg: TileConfig, dt: DtypeBytes = DEFAULT_DTYPES
+) -> float:
+    return (st.n_tiles_total * cfg.bm * cfg.bn * dt.out) / mach.hbm_bw
+
+
+def vmem_working_set(cfg: TileConfig, dt: DtypeBytes = DEFAULT_DTYPES) -> int:
+    """Dtype-aware VMEM claim: ``TileConfig.vmem_bytes`` at the profile's
+    real A/B/accumulator widths (one source of truth for the formula)."""
+    return cfg.vmem_bytes(
+        in_dtype_bytes=dt.a, acc_dtype_bytes=dt.acc, b_dtype_bytes=dt.b
+    )
 
 
 @lru_cache(maxsize=200_000)
@@ -104,19 +223,23 @@ def gemm_time_s(
     cfg: TileConfig,
     policy: Policy,
     mach: Machine = V5E,
-    g: int | None = None,
+    g: Optional[int] = None,
+    dt: DtypeBytes = DEFAULT_DTYPES,
 ) -> float:
-    """Modeled execution time of one GEMM under (cfg, policy)."""
+    """Modeled execution time of one GEMM under (cfg, policy, g, dtypes)."""
     g = g or mach.lanes
     st = partition_stats(shape, cfg, g, policy)
-    t_iter = _tile_times(mach, cfg)
+    t_iter = _tile_times(mach, cfg, dt)
     t_tile = st.iters_per_tile * t_iter
+    # g workgroups time-share `lanes` physical slots: each wave of g programs
+    # costs ceil(g/lanes) lane-rounds (mult == 1 for the legacy g == lanes).
+    mult = cdiv(g, mach.lanes)
 
-    t = mach.launch_overhead_s + _output_time(mach, st, cfg)
+    t = mach.launch_overhead_s + _output_time(mach, st, cfg, dt)
     if st.sk_tiles:
-        sk_body = cdiv(st.sk_total_iters, g) * t_iter
-        fixup = _fixup_time(mach, st, cfg)
-        dp = st.dp_waves * t_tile
+        sk_body = cdiv(st.sk_total_iters, g) * mult * t_iter
+        fixup = _fixup_time(mach, st, cfg, dt)
+        dp = st.dp_waves * mult * t_tile
         if st.dp_tiles:
             # SK scheduled first; fix-up latency hidden under the DP phase
             # (§4.1 "strategic overlap of execution").
@@ -124,7 +247,7 @@ def gemm_time_s(
         else:
             t += sk_body + fixup
     else:
-        t += st.dp_waves * t_tile
+        t += st.dp_waves * mult * t_tile
     return t
 
 
@@ -133,11 +256,12 @@ def gemm_tflops(
     cfg: TileConfig,
     policy: Policy,
     mach: Machine = V5E,
-    g: int | None = None,
+    g: Optional[int] = None,
+    dt: DtypeBytes = DEFAULT_DTYPES,
 ) -> float:
     """Modeled effective TFLOP/s (true FLOPs / modeled time) — the tuner's
     objective, matching ckProfiler's reporting."""
-    return shape.flops / gemm_time_s(shape, cfg, policy, mach, g) / 1e12
+    return shape.flops / gemm_time_s(shape, cfg, policy, mach, g, dt) / 1e12
 
 
 def best_config(
@@ -145,20 +269,25 @@ def best_config(
     policy: Policy,
     mach: Machine = V5E,
     tile_configs=DEFAULT_TILE_CONFIGS,
+    g: Optional[int] = None,
+    dt: DtypeBytes = DEFAULT_DTYPES,
 ) -> tuple[TileConfig, float]:
-    """Best tile config for a fixed policy (what ckProfiler sweeps per
-    GEMM instance)."""
+    """Best tile config for a fixed (policy, g) (what ckProfiler sweeps per
+    GEMM instance). VMEM feasibility uses the op's real byte-widths: a config
+    that fits bf16 operands can overflow for f32."""
     best = None
     for cfg in tile_configs:
-        if cfg.vmem_bytes() > mach.vmem_bytes:
+        if vmem_working_set(cfg, dt) > mach.vmem_bytes:
             continue
-        tf = gemm_tflops(shape, cfg, policy, mach)
+        tf = gemm_tflops(shape, cfg, policy, mach, g, dt)
         if best is None or tf > best[1]:
             best = (cfg, tf)
     assert best is not None, "no tile config fits VMEM"
     return best
 
 
-def dp_baseline_tflops(shape: GemmShape, mach: Machine = V5E) -> float:
+def dp_baseline_tflops(
+    shape: GemmShape, mach: Machine = V5E, dt: DtypeBytes = DEFAULT_DTYPES
+) -> float:
     """The paper's comparison baseline: best data-parallel configuration."""
-    return best_config(shape, DP, mach)[1]
+    return best_config(shape, DP, mach, dt=dt)[1]

@@ -45,6 +45,7 @@ import jax.numpy as jnp
 from repro.core.op import Epilogue, GemmOp, as_epilogue
 from repro.core.policies import Policy, TileConfig
 from repro.core.selector import KernelSelector, Selection, default_selector
+from repro.core.tuner import LEGACY_GRID
 
 _state = threading.local()
 
@@ -53,9 +54,12 @@ _state = threading.local()
 # Backend registry
 # ---------------------------------------------------------------------------
 
-#: BackendFn(x, w, *, op, policy, cfg, bias, operand) -> out
+#: BackendFn(x, w, *, op, policy, cfg, g, bias, operand) -> out
 #:   x: (G, M, K), w: (G, K, N), bias: (G, N) | None, operand: (G, M, N) | None
 #:   returns (G, M, N) in op.out_dtype. G == 1 for plain 2-D dispatches.
+#:   ``g`` is the selected grid size (persistent-workgroup count) the kernel
+#:   partitions the flattened iteration space over; backends without a grid
+#:   concept (xla) may ignore it.
 BackendFn = Callable[..., jax.Array]
 
 _BACKENDS: Dict[str, BackendFn] = {}
@@ -85,7 +89,7 @@ def get_backend(name: str) -> BackendFn:
         ) from None
 
 
-def _xla_backend(x, w, *, op: GemmOp, policy, cfg, bias, operand):
+def _xla_backend(x, w, *, op: GemmOp, policy, cfg, g, bias, operand):
     acc = jnp.einsum("gmk,gkn->gmn", x, w, preferred_element_type=jnp.float32)
     acc = op.epilogue.apply(
         acc,
@@ -96,7 +100,7 @@ def _xla_backend(x, w, *, op: GemmOp, policy, cfg, bias, operand):
 
 
 def _make_pallas_backend(interpret: bool) -> BackendFn:
-    def backend(x, w, *, op: GemmOp, policy, cfg, bias, operand):
+    def backend(x, w, *, op: GemmOp, policy, cfg, g, bias, operand):
         from repro.kernels.streamk import ops as sk_ops
 
         # One pallas_call per group: trace cost grows with G (tracked by
@@ -111,6 +115,7 @@ def _make_pallas_backend(interpret: bool) -> BackendFn:
                     w[i],
                     policy=policy,
                     cfg=cfg,
+                    g=g,
                     interpret=interpret,
                     out_dtype=jnp.dtype(op.out_dtype),
                     epilogue=op.epilogue,
@@ -207,24 +212,28 @@ def _dispatch(
     tag: str,
     policy: Optional[Policy],
     cfg: Optional[TileConfig],
+    g: Optional[int],
     bias: Optional[jax.Array],
     operand: Optional[jax.Array],
 ) -> jax.Array:
     ctx = _ctx()
-    if policy is None and cfg is None:
+    if policy is None and cfg is None and g is None:
         sel = ctx.selector.select_op(op)
-        policy, cfg = sel.policy, sel.cfg
     elif policy is not None and cfg is not None:
-        sel = ctx.selector.record_forced(op, policy, cfg)
+        sel = ctx.selector.record_forced(
+            op, policy, cfg, g=g if g is not None else LEGACY_GRID
+        )
     else:
-        # partial override: fill the missing half from selection, but log
+        # partial override: fill the missing parts from selection, but log
         # what actually runs (source "forced") — never the selector's own
-        # pick, which may pair a different policy with this cfg
-        sel = ctx.selector.select_partial(op, policy, cfg)
-        policy, cfg = sel.policy, sel.cfg
+        # pick, which may pair a different policy with this cfg/g
+        sel = ctx.selector.select_partial(op, policy, cfg, g=g)
+    policy, cfg, grid = sel.policy, sel.cfg, sel.g
     ctx.log.append(SelectionLogEntry(op, sel, tag))
     backend = get_backend(ctx.backend)
-    return backend(x, w, op=op, policy=policy, cfg=cfg, bias=bias, operand=operand)
+    return backend(
+        x, w, op=op, policy=policy, cfg=cfg, g=grid, bias=bias, operand=operand
+    )
 
 
 def _check_epilogue(epilogue: Epilogue, bias, operand) -> None:
@@ -254,6 +263,7 @@ def gemm(
     tag: str = "",
     policy: Optional[Policy] = None,
     cfg: Optional[TileConfig] = None,
+    g: Optional[int] = None,
     epilogue: Union[None, str, Epilogue] = None,
     bias: Optional[jax.Array] = None,
     operand: Optional[jax.Array] = None,
@@ -264,7 +274,8 @@ def gemm(
     factors (dm, dn, dk) so selection keys on the per-shard local shape.
     ``epilogue`` fuses bias/activation/binary post-ops into the kernel
     (``bias``: (N,), ``operand``: (..., N) matching the output).
-    ``policy``/``cfg`` override selection (used by the tuner itself).
+    ``policy``/``cfg``/``g`` override selection (used by the tuner itself);
+    otherwise the selector chooses all three jointly.
     """
     if x.shape[-1] != w.shape[0]:
         raise ValueError(f"gemm contraction mismatch: {x.shape} @ {w.shape}")
@@ -291,6 +302,7 @@ def gemm(
         tag=tag,
         policy=policy,
         cfg=cfg,
+        g=g,
         bias=None if bias is None else bias.reshape(1, n_global),
         operand=None if operand is None else operand.reshape(1, m_global, n_global),
     )
@@ -308,6 +320,7 @@ def _gemm_stacked(
     tag: str,
     policy: Optional[Policy],
     cfg: Optional[TileConfig],
+    grid: Optional[int],
     epilogue: Union[None, str, Epilogue],
     bias: Optional[jax.Array],
     operand: Optional[jax.Array],
@@ -338,7 +351,7 @@ def _gemm_stacked(
     if bias is not None and bias.ndim == 1:
         bias = jnp.broadcast_to(bias[None], (g, n))
     return _dispatch(
-        x, w, op, tag=tag, policy=policy, cfg=cfg, bias=bias, operand=operand
+        x, w, op, tag=tag, policy=policy, cfg=cfg, g=grid, bias=bias, operand=operand
     )
 
 
@@ -352,6 +365,7 @@ def gemm_grouped(
     tag: str = "",
     policy: Optional[Policy] = None,
     cfg: Optional[TileConfig] = None,
+    grid: Optional[int] = None,
     epilogue: Union[None, str, Epilogue] = None,
     bias: Optional[jax.Array] = None,
     operand: Optional[jax.Array] = None,
@@ -363,7 +377,8 @@ def gemm_grouped(
     group; the op fingerprint still records ``G`` (and ``g_divisor``, the
     expert-parallel sharding factor) so grouped shapes tune and prune
     independently of the plain 2-D path. ``bias``: (G, N) or (N,);
-    ``operand``: (G, M, N).
+    ``operand``: (G, M, N). ``grid`` overrides the selected grid size
+    (named to avoid clashing with the group count ``G``).
     """
     return _gemm_stacked(
         "grouped",
@@ -375,6 +390,7 @@ def gemm_grouped(
         tag=tag,
         policy=policy,
         cfg=cfg,
+        grid=grid,
         epilogue=epilogue,
         bias=bias,
         operand=operand,
@@ -391,6 +407,7 @@ def gemm_batched(
     tag: str = "",
     policy: Optional[Policy] = None,
     cfg: Optional[TileConfig] = None,
+    grid: Optional[int] = None,
     epilogue: Union[None, str, Epilogue] = None,
     bias: Optional[jax.Array] = None,
     operand: Optional[jax.Array] = None,
@@ -407,6 +424,7 @@ def gemm_batched(
         tag=tag,
         policy=policy,
         cfg=cfg,
+        grid=grid,
         epilogue=epilogue,
         bias=bias,
         operand=operand,

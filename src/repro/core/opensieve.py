@@ -194,9 +194,14 @@ class OpenSieve:
 
     # -- info -----------------------------------------------------------------
     def summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-filter occupancy stats. ``n_items`` is the raw add-counter —
+        after ``BloomFilter.merge`` it is only an upper bound on distinct
+        keys — so capacity planning reads the saturation-derived
+        ``est_items`` instead."""
         return {
             name: {
                 "n_items": f.n_items,
+                "est_items": f.est_items,
                 "n_bits": f.n_bits,
                 "n_hashes": f.n_hashes,
                 "saturation": f.saturation,

@@ -109,11 +109,20 @@ class TileConfig:
     def name(self) -> str:
         return f"{self.bm}x{self.bn}x{self.bk}"
 
-    def vmem_bytes(self, in_dtype_bytes: int = 2, acc_dtype_bytes: int = 4) -> int:
+    def vmem_bytes(
+        self,
+        in_dtype_bytes: int = 2,
+        acc_dtype_bytes: int = 4,
+        b_dtype_bytes: int | None = None,
+    ) -> int:
         """Working-set claim: A tile + B tile + accumulator (double-buffered
-        inputs, matching the pipelined BlockSpec the kernels use)."""
+        inputs, matching the pipelined BlockSpec the kernels use).
+        ``b_dtype_bytes`` lets mixed activation x weight ops claim distinct
+        A/B widths; it defaults to ``in_dtype_bytes``."""
         a = self.bm * self.bk * in_dtype_bytes
-        b = self.bk * self.bn * in_dtype_bytes
+        b = self.bk * self.bn * (
+            b_dtype_bytes if b_dtype_bytes is not None else in_dtype_bytes
+        )
         acc = self.bm * self.bn * acc_dtype_bytes
         return 2 * (a + b) + acc
 

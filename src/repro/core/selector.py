@@ -2,11 +2,12 @@
 
 Dispatch path for a :class:`repro.core.op.GemmOp` (selection keys on the op
 fingerprint — per-shard local shape, group count, dtypes, epilogue):
-  1. Exact tuning-database hit -> return the tuned (policy, config).
+  1. Exact tuning-database hit -> return the tuned (policy, config, g).
   2. Otherwise query the Bloom filters. Policies answering "definitely
      absent" are pruned (the paper's headline: up to ~95.8% of evaluations
      skipped, 100% true-negative rate). Surviving candidates are scored with
-     the fast analytical model and the best wins.
+     the fast analytical model — at the op's *actual* operand byte-widths,
+     jointly over the swept grid sizes — and the best wins.
   3. If every filter says absent (a size the tuner never saw and no filter
      aliases), fall back to the naive single-policy default the original
      Stream-K paper proposes — data-parallel — scored against ALL_SK for
@@ -21,8 +22,15 @@ nothing at runtime on device; the recorded ``SelectionLog`` is how tests and
 benchmarks introspect dispatch decisions. ``SelectorStats`` counts every
 dispatch exactly once (cold source, cache hit, or forced), and memoised
 repeats re-credit their evals/pruned, so ``elimination_rate`` is weighted by
-what the workload actually dispatched — not just by unique shapes. Fully
-forced overrides perform no selection work and leave the rate untouched.
+what the workload actually dispatched — not just by unique shapes.
+
+Elimination accounting is honest about *who* did the eliminating: only
+dispatches that actually consulted the Bloom filters credit ``pruned``. A
+tuned database hit skips the filters entirely — it contributes zero evals
+AND zero pruned, so a warm database drives ``elimination_rate`` toward the
+sieve's true contribution instead of inflating the paper-headline metric.
+Fully forced overrides perform no selection work and leave the rate
+untouched.
 """
 
 from __future__ import annotations
@@ -31,6 +39,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core import costmodel
+from repro.core.costmodel import DtypeBytes
 from repro.core.op import GemmOp, OpKey
 from repro.core.opensieve import OpenSieve
 from repro.core.policies import (
@@ -42,7 +51,7 @@ from repro.core.policies import (
     TileConfig,
     policy_from_name,
 )
-from repro.core.tuner import TuningDatabase
+from repro.core.tuner import LEGACY_GRID, TuningDatabase
 from repro.core.workpart import GemmShape
 
 MNK = Tuple[int, int, int]
@@ -55,6 +64,9 @@ class Selection:
     source: str  # "tuned" | "sieve" | "fallback" | "forced"
     evals: int  # how many (policy) evaluations the scorer performed
     pruned: int  # how many the Bloom filters eliminated
+    #: grid size the kernel launches with (tuned winner's g, or the scored
+    #: best over the selector's grid sweep; LEGACY_GRID when nothing chose)
+    g: int = LEGACY_GRID
 
 
 @dataclass
@@ -66,10 +78,13 @@ class SelectorStats:
     cache_hits: int = 0  # memoised repeats of an already-selected op
     forced: int = 0  # caller-supplied (policy, cfg) overrides
     evals: int = 0
-    pruned: int = 0
+    pruned: int = 0  # policies genuinely eliminated by Bloom filters
 
     @property
     def elimination_rate(self) -> float:
+        """Fraction of filter-consulted policy evaluations the sieve skipped.
+        Tuned hits bypass the filters and contribute to neither term, so a
+        warm database cannot inflate the sieve's paper-headline metric."""
         tot = self.evals + self.pruned
         return self.pruned / tot if tot else 0.0
 
@@ -99,6 +114,7 @@ class KernelSelector:
         policies: Sequence[Policy] = ALL_POLICIES,
         tile_configs: Sequence[TileConfig] = DEFAULT_TILE_CONFIGS,
         on_miss: Optional[MissHook] = None,
+        grid_sizes: Optional[Sequence[int]] = None,
     ):
         self.sieve = sieve
         self.db = db
@@ -106,6 +122,11 @@ class KernelSelector:
         self.policies = tuple(policies)
         self.tile_configs = tuple(tile_configs)
         self.on_miss = on_miss
+        self.grid_sizes = (
+            tuple(grid_sizes)
+            if grid_sizes is not None
+            else costmodel.default_grid_sizes(mach)
+        )
         self.stats = SelectorStats()
         self._cache: Dict[OpKey, Selection] = {}
 
@@ -145,16 +166,25 @@ class KernelSelector:
         return sum(1 for k in keys if self._cache.pop(k, None) is not None)
 
     # -- scoring -----------------------------------------------------------
-    def _score(self, size: MNK, pols: Sequence[Policy]) -> Tuple[Policy, TileConfig, int]:
+    def _score(
+        self, size: MNK, pols: Sequence[Policy], dt: DtypeBytes
+    ) -> Tuple[Policy, TileConfig, int, int]:
+        """Best (policy, cfg, g) over the candidate policies, sweeping the
+        selector's grid sizes at the op's real byte-widths. ``evals`` counts
+        *policies* scored (the unit Bloom pruning removes), whatever the
+        width of the inner cfg x g sweep."""
         shape = GemmShape(*size)
         best = None
         evals = 0
         for pol in pols:
-            cfg, tf = costmodel.best_config(shape, pol, self.mach, self.tile_configs)
             evals += 1
-            if best is None or tf > best[2]:
-                best = (pol, cfg, tf)
-        return best[0], best[1], evals
+            for g in self.grid_sizes:
+                cfg, tf = costmodel.best_config(
+                    shape, pol, self.mach, self.tile_configs, g=g, dt=dt
+                )
+                if best is None or tf > best[3]:
+                    best = (pol, cfg, g, tf)
+        return best[0], best[1], best[2], evals
 
     def _db_record(self, op: GemmOp):
         """Exact op-key hit first; shape-only ops of any dtype then fall
@@ -181,34 +211,38 @@ class KernelSelector:
             return self._cache[key], True
 
         size = op.local
+        dt = costmodel.op_dtypes(op)
         sel: Selection
         rec = self._db_record(op)
         if rec is not None:
+            # No filter was consulted: zero evals, zero pruned — a tuned hit
+            # must not inflate the sieve's elimination rate.
             sel = Selection(
                 policy=policy_from_name(rec.policy),
                 cfg=_cfg_from_name(rec.cfg),
                 source="tuned",
                 evals=0,
-                pruned=len(self.policies),
+                pruned=0,
+                g=rec.g,
             )
         elif self.sieve is not None:
             cands = self._sieve_candidates(op)
             pruned = len(self.policies) - len(cands)
             if cands:
-                pol, cfg, evals = self._score(size, cands)
-                sel = Selection(pol, cfg, "sieve", evals, pruned)
+                pol, cfg, g, evals = self._score(size, cands, dt)
+                sel = Selection(pol, cfg, "sieve", evals, pruned, g=g)
             else:
-                pol, cfg, evals = self._score(size, (DP, ALL_SK))
-                sel = Selection(pol, cfg, "fallback", evals, pruned)
+                pol, cfg, g, evals = self._score(size, (DP, ALL_SK), dt)
+                sel = Selection(pol, cfg, "fallback", evals, pruned, g=g)
         else:
-            pol, cfg, evals = self._score(size, self.policies)
-            sel = Selection(pol, cfg, "fallback", evals, 0)
+            pol, cfg, g, evals = self._score(size, self.policies, dt)
+            sel = Selection(pol, cfg, "fallback", evals, 0, g=g)
         self._cache[key] = sel
         return sel, False
 
     # -- public ------------------------------------------------------------
     def select_op(self, op: GemmOp) -> Selection:
-        """Select (policy, tile config) for a full op fingerprint.
+        """Select (policy, tile config, grid size) for a full op fingerprint.
 
         Every dispatch contributes its (memoised) evals/pruned to ``stats``,
         so ``elimination_rate`` is workload-weighted — a hot op that was
@@ -239,8 +273,9 @@ class KernelSelector:
         op: GemmOp,
         policy: Optional[Policy] = None,
         cfg: Optional[TileConfig] = None,
+        g: Optional[int] = None,
     ) -> Selection:
-        """Fill the missing half of a caller override from normal selection.
+        """Fill the missing parts of a caller override from normal selection.
         Categorised as one ``forced`` lookup (never double-counted under a
         second category); the underlying selection's evals/pruned still
         count, since the selector really did that work."""
@@ -253,6 +288,7 @@ class KernelSelector:
             "forced",
             base.evals,
             base.pruned,
+            g=g if g is not None else base.g,
         )
         self.stats.evals += sel.evals
         self.stats.pruned += sel.pruned
@@ -260,9 +296,13 @@ class KernelSelector:
         return sel
 
     def record_forced(
-        self, op: GemmOp, policy: Policy, cfg: TileConfig
+        self,
+        op: GemmOp,
+        policy: Policy,
+        cfg: TileConfig,
+        g: int = LEGACY_GRID,
     ) -> Selection:
-        """Account a fully caller-forced (policy, cfg) dispatch (tuner
+        """Account a fully caller-forced (policy, cfg, g) dispatch (tuner
         sweeps, tests). It performs no evaluations and prunes nothing, so it
         leaves ``elimination_rate`` untouched — but it is a real dispatch,
         visible as one ``forced`` lookup. Forced dispatches of *untuned*
@@ -270,7 +310,7 @@ class KernelSelector:
         is exactly the traffic online adaptation wants to learn from."""
         self.stats.lookups += 1
         self.stats.forced += 1
-        sel = Selection(policy, cfg, "forced", 0, 0)
+        sel = Selection(policy, cfg, "forced", 0, 0, g=g)
         if self._db_record(op) is None:
             self._notify_miss(op, sel)
         return sel

@@ -1,10 +1,20 @@
-"""ckProfiler analogue: exhaustive (policy x tile-config) tuning over a GEMM
-problem-size suite, producing the winner database that Open-sieve encodes.
+"""ckProfiler analogue: exhaustive (policy x tile-config x grid-size) tuning
+over a GEMM problem-size suite, producing the winner database that Open-sieve
+encodes.
 
-``measure_fn(shape, policy, cfg) -> tflops`` is injected:
+``measure_fn(shape, policy, cfg, g, dt) -> tflops`` is injected:
   * default: the calibrated analytical model (CPU-only container);
   * ``measure_wallclock``: times the real kernel (used on TPU hardware; the
     paper's 50 warm-up + 50 timed launches protocol).
+
+The sweep covers the paper's (policy x tile) space jointly with the grid
+size ``g`` the flattened iteration space is split over (``grid_sizes``,
+default {lanes/2, lanes, 2*lanes}) — the "additional tuning parameters"
+extension the framework was built for. Measurement is keyed on the target's
+*actual* operand byte-widths: a :class:`~repro.core.op.GemmOp` target tunes
+under its own dtype profile, a bare (M, N, K) under the f32 profile (the
+bare key exact-matches f32 plain ops — see ``_BARE_KEY_DTYPES``), so
+f32/int8/bf16 ops of the same MNK can record different winners.
 
 Artifact lifecycle: ``TuningDatabase.save``/``load`` snapshot the full
 database (``artifacts/tuning_db.json``); incremental results — offline
@@ -14,6 +24,11 @@ alike — stream through an append-only JSONL *journal*
 re-applies on startup, so records learned while serving survive restarts
 and warm-start the next run. ``version`` counts in-place appends, the
 monotone clock the generational sieve rebuilds key on.
+
+Backward compatibility: records/journal lines written before ``g`` became a
+tuning axis carry no ``g`` field — they parse with ``g = LEGACY_GRID`` (8,
+the grid every legacy kernel launch used), so old artifacts load and
+dispatch identically.
 """
 
 from __future__ import annotations
@@ -24,6 +39,7 @@ from dataclasses import dataclass, field, asdict
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core import costmodel
+from repro.core.costmodel import DtypeBytes
 from repro.core.op import GemmOp, OpKey, key_from_str, key_to_str
 from repro.core.opensieve import OpenSieve
 from repro.core.policies import (
@@ -40,7 +56,11 @@ from repro.utils.logging import get_logger
 log = get_logger("tuner")
 
 MNK = Tuple[int, int, int]
-MeasureFn = Callable[[GemmShape, Policy, TileConfig], float]
+MeasureFn = Callable[[GemmShape, Policy, TileConfig, int, DtypeBytes], float]
+
+#: grid size every record/journal line implied before ``g`` was swept —
+#: the old kernels launched with g=8 unconditionally.
+LEGACY_GRID = 8
 
 
 def _as_key(entry) -> OpKey:
@@ -55,6 +75,25 @@ def _key_local(key: OpKey) -> MNK:
     return (key[0], key[1], key[2])
 
 
+#: bare (M, N, K) targets tune under the float32 profile: a bare key is the
+#: *exact-match* dispatch key of float32 plain ops (``GemmOp.is_plain``), so
+#: the record must be honest for that owner — scoring it at 2-byte widths
+#: would hand every f32 dispatch a bf16-optimal winner, the exact
+#: mis-selection bug this module exists to avoid. bf16/f16 shape-only ops
+#: consult bare records only as the paper's dtype-agnostic *fallback*
+#: (selector ``_db_record``) until adaptation tunes their own fingerprint.
+_BARE_KEY_DTYPES = costmodel.profile_for("float32", "float32")
+
+
+def _target_dtypes(entry) -> DtypeBytes:
+    """Byte-width profile a tuning target measures under: a GemmOp's real
+    dtypes, or the f32 profile for bare (M, N, K) sizes (whose key
+    exact-matches f32 plain ops)."""
+    if isinstance(entry, GemmOp):
+        return costmodel.op_dtypes(entry)
+    return _BARE_KEY_DTYPES
+
+
 @dataclass
 class TuningRecord:
     size: OpKey  # legacy (M, N, K) or extended op-fingerprint key
@@ -64,6 +103,9 @@ class TuningRecord:
     runner_up_policy: str
     runner_up_tflops: float
     dp_best_tflops: float  # paper's baseline for tolerance analysis
+    #: winner grid size; defaults to LEGACY_GRID so g-less records written
+    #: before the grid sweep existed keep dispatching exactly as they did
+    g: int = LEGACY_GRID
 
     @property
     def gain_over_runner_up(self) -> float:
@@ -133,7 +175,8 @@ class TuningDatabase:
         """Load a snapshot, then optionally replay an append-only journal on
         top (records learned after the last snapshot win). Records whose key
         or payload fails to parse are skipped with a warning and counted in
-        ``load_errors`` — never silently dropped."""
+        ``load_errors`` — never silently dropped. Snapshots written before
+        the grid sweep carry no ``g``: they parse with ``g = LEGACY_GRID``."""
         with open(path) as f:
             payload = json.load(f)
         db = cls()
@@ -166,7 +209,8 @@ class TuningDatabase:
     def replay_journal(self, path: str, missing_ok: bool = False) -> int:
         """Re-apply an append-only JSONL journal (see :func:`journal_entry`)
         in order; later lines win. Returns the number of records applied;
-        malformed lines are warned about and counted in ``load_errors``."""
+        malformed lines are warned about and counted in ``load_errors``.
+        Legacy g-less lines replay with ``g = LEGACY_GRID``."""
         try:
             f = open(path)
         except FileNotFoundError:
@@ -222,28 +266,72 @@ def append_journal(
 def measure_model(mach: costmodel.Machine = costmodel.V5E) -> MeasureFn:
     """Measurement oracle backed by the analytical cost model."""
 
-    def fn(shape: GemmShape, policy: Policy, cfg: TileConfig) -> float:
-        return costmodel.gemm_tflops(shape, cfg, policy, mach)
+    def fn(
+        shape: GemmShape,
+        policy: Policy,
+        cfg: TileConfig,
+        g: int,
+        dt: DtypeBytes,
+    ) -> float:
+        return costmodel.gemm_tflops(shape, cfg, policy, mach, g, dt)
 
     return fn
 
 
 def measure_wallclock(
-    warmup: int = 50, iters: int = 50, interpret: bool = False
+    warmup: int = 50, iters: int = 50, interpret: bool = False, dtype=None
 ) -> MeasureFn:
     """The paper's protocol on real hardware: 50 warm-up launches, then the
-    average of 50 timed launches. Uses the Pallas kernels via ops.gemm."""
+    average of 50 timed launches. Uses the Pallas kernels via ops.gemm.
+    Operand dtypes follow the target's :class:`DtypeBytes` profile (so an
+    f32 fingerprint really times f32 kernels); ``dtype`` forces one operand
+    dtype for both A and B instead. The swept grid size threads straight
+    into the kernel launch."""
     import jax
     import jax.numpy as jnp
 
     from repro.kernels.streamk import ops as sk_ops
 
-    def fn(shape: GemmShape, policy: Policy, cfg: TileConfig) -> float:
+    width_to_dtype = {
+        1: jnp.int8,
+        2: jnp.bfloat16,
+        4: jnp.float32,
+        8: jnp.float64,
+    }
+
+    def _dt_dtype(width: int):
+        if width == 8 and not jax.config.jax_enable_x64:
+            # without x64, f64 operands silently downcast to f32 — measure
+            # what will actually run and say so, instead of recording an
+            # "f64" winner that never timed f64 kernels
+            log.warning(
+                "jax x64 disabled: measuring 8-byte fingerprint at float32"
+            )
+            return jnp.float32
+        if width == 1:
+            # byte-wide fingerprints (int8, fp8 variants) all time the int8
+            # stand-in; fp8 records therefore reflect int8 kernel timing
+            log.warning("measuring 1-byte fingerprint with int8 operands")
+        return width_to_dtype.get(width, jnp.float32)
+
+    def fn(
+        shape: GemmShape,
+        policy: Policy,
+        cfg: TileConfig,
+        g: int,
+        dt: DtypeBytes,
+    ) -> float:
+        a_dtype = dtype or _dt_dtype(dt.a)
+        b_dtype = dtype or _dt_dtype(dt.b)
+        out_dtype = dtype or _dt_dtype(dt.out)
         key = jax.random.PRNGKey(0)
-        a = jax.random.normal(key, (shape.m, shape.k), jnp.bfloat16)
-        b = jax.random.normal(key, (shape.k, shape.n), jnp.bfloat16)
+        a = jax.random.normal(key, (shape.m, shape.k)).astype(a_dtype)
+        b = jax.random.normal(key, (shape.k, shape.n)).astype(b_dtype)
         call = jax.jit(
-            lambda a, b: sk_ops.gemm(a, b, policy=policy, cfg=cfg, interpret=interpret)
+            lambda a, b: sk_ops.gemm(
+                a, b, policy=policy, cfg=cfg, g=g, interpret=interpret,
+                out_dtype=out_dtype,
+            )
         )
         for _ in range(warmup):
             call(a, b).block_until_ready()
@@ -251,16 +339,16 @@ def measure_wallclock(
         for _ in range(iters):
             out = call(a, b)
         out.block_until_ready()
-        dt = (time.perf_counter() - t0) / iters
-        return shape.flops / dt / 1e12
+        dt_s = (time.perf_counter() - t0) / iters
+        return shape.flops / dt_s / 1e12
 
     return fn
 
 
 class Tuner:
-    """Sweep (policy x tile config) per problem size; record winner and
-    runner-up (runner-up = best config of the *second-best policy*, which is
-    what the paper's Fig. 3 violin compares against)."""
+    """Sweep (policy x tile config x grid size) per problem size; record
+    winner and runner-up (runner-up = best configuration of the *second-best
+    policy*, which is what the paper's Fig. 3 violin compares against)."""
 
     def __init__(
         self,
@@ -268,31 +356,43 @@ class Tuner:
         tile_configs: Sequence[TileConfig] = DEFAULT_TILE_CONFIGS,
         measure_fn: Optional[MeasureFn] = None,
         mach: costmodel.Machine = costmodel.V5E,
+        grid_sizes: Optional[Sequence[int]] = None,
     ):
         self.policies = tuple(policies)
         self.tile_configs = tuple(tile_configs)
         self.measure = measure_fn or measure_model(mach)
         self.mach = mach
+        self.grid_sizes = (
+            tuple(grid_sizes)
+            if grid_sizes is not None
+            else costmodel.default_grid_sizes(mach)
+        )
 
     def tune_size(self, size) -> Tuple[TuningRecord, Dict[str, float]]:
         """Sweep one tuning target — a bare (M, N, K) or a full GemmOp
         (grouped / fused ops tune per-group on their local shape and record
-        under their op-fingerprint key)."""
+        under their op-fingerprint key, measured at their real operand
+        byte-widths)."""
         key = _as_key(size)
         shape = GemmShape(*_key_local(key))
+        dt = _target_dtypes(size)
         per_policy: Dict[str, float] = {}
         per_policy_cfg: Dict[str, str] = {}
+        per_policy_g: Dict[str, int] = {}
         for pol in self.policies:
             best = -1.0
             best_cfg = self.tile_configs[0]
-            for cfg in self.tile_configs:
-                if cfg.vmem_bytes() > self.mach.vmem_bytes:
-                    continue
-                tf = self.measure(shape, pol, cfg)
-                if tf > best:
-                    best, best_cfg = tf, cfg
+            best_g = self.grid_sizes[0]
+            for g in self.grid_sizes:
+                for cfg in self.tile_configs:
+                    if costmodel.vmem_working_set(cfg, dt) > self.mach.vmem_bytes:
+                        continue
+                    tf = self.measure(shape, pol, cfg, g, dt)
+                    if tf > best:
+                        best, best_cfg, best_g = tf, cfg, g
             per_policy[pol.name] = best
             per_policy_cfg[pol.name] = best_cfg.name
+            per_policy_g[pol.name] = best_g
         ranked = sorted(per_policy.items(), key=lambda kv: kv[1], reverse=True)
         w_name, w_tf = ranked[0]
         # runner-up = best policy with strictly lower modeled performance
@@ -313,6 +413,7 @@ class Tuner:
             runner_up_policy=r_name,
             runner_up_tflops=r_tf,
             dp_best_tflops=per_policy.get(DP.name, 0.0),
+            g=per_policy_g[w_name],
         )
         return rec, per_policy
 

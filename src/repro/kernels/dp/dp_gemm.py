@@ -80,6 +80,7 @@ def dp_gemm_region(
     epilogue="none",
     bias=None,
     operand=None,
+    g: int = 0,
 ):
     """Tiled GEMM over output tiles [tile_offset, m_tiles*n_tiles).
 
@@ -87,6 +88,22 @@ def dp_gemm_region(
     optional epilogue operands ``bias`` (1, Np) and ``operand`` (Mp, Np).
     ``c_init``: existing C buffer whose tiles < tile_offset must be kept
     (required iff tile_offset > 0).
+
+    ``g`` > 0 launches the region in whole waves of ``g`` programs (the
+    tuned grid size): the tile dimension is padded up to a multiple of ``g``
+    and the surplus programs redundantly recompute the final tile (their
+    index maps clamp to it, so every write is the same deterministic value).
+    This makes wave quantization — what the cost model scores ``g`` on — a
+    real property of the launched grid. ``g`` == 0 keeps the exact legacy
+    one-program-per-tile grid.
+
+    Cost of padding: up to ``g - 1`` redundant tile recomputes, and the
+    padded tile dim drops to sequential (ARBITRARY) semantics because the
+    surplus programs alias the final tile. The analytical model does not
+    price that serialization — but on hardware the tuner's
+    ``measure_wallclock`` times this exact kernel per swept ``g``, so a
+    ``g`` whose padding costs more than its quantization win loses the
+    sweep where it matters.
     """
     mp, kp = a.shape
     kp2, np_ = b.shape
@@ -97,19 +114,26 @@ def dp_gemm_region(
     n_region = n_total - tile_offset
     assert n_region > 0, "empty DP region"
     out_dtype = out_dtype or a.dtype
+    n_prog = cdiv(n_region, g) * g if g > 0 else n_region
 
     def tm(i):
+        i = jnp.minimum(i, n_region - 1) if n_prog != n_region else i
         return (i + tile_offset) // n_tiles
 
     def tn(i):
+        i = jnp.minimum(i, n_region - 1) if n_prog != n_region else i
         return (i + tile_offset) % n_tiles
 
     a_spec = pl.BlockSpec((cfg.bm, cfg.bk), lambda i, k: (tm(i), k))
     b_spec = pl.BlockSpec((cfg.bk, cfg.bn), lambda i, k: (k, tn(i)))
     c_spec = pl.BlockSpec((cfg.bm, cfg.bn), lambda i, k: (tm(i), tn(i)))
     scratch = [pltpu.VMEM((cfg.bm, cfg.bn), jnp.float32)]
+    # A padded grid clamps its surplus programs onto the final tile, so the
+    # tile dim no longer writes disjoint blocks — it must be ARBITRARY
+    # (sequential, last identical write wins), not PARALLEL.
+    tile_sem = pltpu.ARBITRARY if n_prog != n_region else pltpu.PARALLEL
     params = CompilerParams(
-        dimension_semantics=(pltpu.PARALLEL, pltpu.ARBITRARY)
+        dimension_semantics=(tile_sem, pltpu.ARBITRARY)
     )
     out_shape = jax.ShapeDtypeStruct((mp, np_), out_dtype)
 
@@ -132,7 +156,7 @@ def dp_gemm_region(
     if tile_offset == 0:
         return pl.pallas_call(
             kernel,
-            grid=(n_region, ipt),
+            grid=(n_prog, ipt),
             in_specs=in_specs,
             out_specs=c_spec,
             out_shape=out_shape,
@@ -147,7 +171,7 @@ def dp_gemm_region(
     in_specs.append(c_spec)
     return pl.pallas_call(
         kernel,
-        grid=(n_region, ipt),
+        grid=(n_prog, ipt),
         in_specs=in_specs,
         out_specs=c_spec,
         out_shape=out_shape,

@@ -11,16 +11,20 @@ from repro.kernels.common import pad_to, unpad
 from repro.kernels.dp.dp_gemm import dp_gemm_region
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "interpret", "out_dtype"))
+@functools.partial(jax.jit, static_argnames=("cfg", "g", "interpret", "out_dtype"))
 def gemm(
     a: jax.Array,
     b: jax.Array,
     *,
     cfg: TileConfig = TileConfig(128, 128, 128),
+    g: int = 0,
     interpret: bool = False,
     out_dtype=None,
 ) -> jax.Array:
-    """``a @ b`` with the conventional output-tile decomposition."""
+    """``a @ b`` with the conventional output-tile decomposition.
+
+    ``g`` > 0 launches whole waves of ``g`` programs (the tuned grid size);
+    0 keeps the legacy one-program-per-tile grid."""
     if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
         raise ValueError(f"bad gemm operands {a.shape} @ {b.shape}")
     m, _ = a.shape
@@ -28,5 +32,5 @@ def gemm(
     out_dtype = out_dtype or a.dtype
     ap = pad_to(a, (cfg.bm, cfg.bk))
     bp = pad_to(b, (cfg.bk, cfg.bn))
-    cp = dp_gemm_region(ap, bp, cfg, out_dtype=out_dtype, interpret=interpret)
+    cp = dp_gemm_region(ap, bp, cfg, out_dtype=out_dtype, interpret=interpret, g=g)
     return unpad(cp, (m, n))

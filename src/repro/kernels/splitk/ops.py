@@ -13,17 +13,21 @@ from repro.kernels.common import pad_to, unpad
 from repro.kernels.splitk.splitk_gemm import splitk_partials
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "s", "interpret", "out_dtype"))
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "s", "g", "interpret", "out_dtype")
+)
 def gemm(
     a: jax.Array,
     b: jax.Array,
     *,
     cfg: TileConfig = TileConfig(128, 128, 128),
     s: int = 2,
+    g: int = 0,
     interpret: bool = False,
     out_dtype=None,
 ) -> jax.Array:
-    """``a @ b`` with a fixed split-K factor ``s``."""
+    """``a @ b`` with a fixed split-K factor ``s``. ``g`` > 0 launches the
+    tile dimension in whole waves of ``g`` programs (the tuned grid size)."""
     if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
         raise ValueError(f"bad gemm operands {a.shape} @ {b.shape}")
     m, k = a.shape
@@ -33,6 +37,6 @@ def gemm(
     k_unit = cfg.bk * s
     ap = pad_to(a, (cfg.bm, k_unit))
     bp = pad_to(b, (k_unit, cfg.bn))
-    parts = splitk_partials(ap, bp, cfg, s, interpret=interpret)
+    parts = splitk_partials(ap, bp, cfg, s, interpret=interpret, g=g)
     cp = jnp.sum(parts, axis=0).astype(out_dtype)
     return unpad(cp, (m, n))

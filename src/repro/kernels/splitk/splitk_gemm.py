@@ -20,6 +20,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.policies import TileConfig
+from repro.core.workpart import cdiv
 from repro.kernels.common import CompilerParams
 
 
@@ -37,10 +38,15 @@ def _splitk_kernel(a_ref, b_ref, p_ref, acc_ref, *, kps: int):
         p_ref[0] = acc_ref[...]
 
 
-def splitk_partials(a, b, cfg: TileConfig, s: int, *, interpret: bool = False):
+def splitk_partials(
+    a, b, cfg: TileConfig, s: int, *, interpret: bool = False, g: int = 0
+):
     """Returns partials (s, Mp, Np) f32; caller reduces over axis 0.
 
     a, b already padded; K must split into s * k_per_split * bk.
+    ``g`` > 0 pads the tile dimension up to whole waves of ``g`` programs
+    (surplus programs redundantly recompute the last tile — deterministic,
+    same value); 0 keeps the exact legacy one-program-per-tile grid.
     """
     mp, kp = a.shape
     _, np_ = b.shape
@@ -48,16 +54,20 @@ def splitk_partials(a, b, cfg: TileConfig, s: int, *, interpret: bool = False):
     ipt = kp // cfg.bk
     assert ipt % s == 0, "split factor must divide k-iterations"
     kps = ipt // s
+    n_total = m_tiles * n_tiles
+    n_prog = cdiv(n_total, g) * g if g > 0 else n_total
 
     def tm(i):
+        i = jnp.minimum(i, n_total - 1) if n_prog != n_total else i
         return i // n_tiles
 
     def tn(i):
+        i = jnp.minimum(i, n_total - 1) if n_prog != n_total else i
         return i % n_tiles
 
     return pl.pallas_call(
         functools.partial(_splitk_kernel, kps=kps),
-        grid=(m_tiles * n_tiles, s, kps),
+        grid=(n_prog, s, kps),
         in_specs=[
             pl.BlockSpec((cfg.bm, cfg.bk), lambda i, sp, k: (tm(i), sp * kps + k)),
             pl.BlockSpec((cfg.bk, cfg.bn), lambda i, sp, k: (sp * kps + k, tn(i))),
@@ -69,7 +79,13 @@ def splitk_partials(a, b, cfg: TileConfig, s: int, *, interpret: bool = False):
         scratch_shapes=[pltpu.VMEM((cfg.bm, cfg.bn), jnp.float32)],
         interpret=interpret,
         compiler_params=CompilerParams(
-            dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL, pltpu.ARBITRARY)
+            # surplus programs of a padded grid alias the final tile's
+            # partials slot: that dim must drop to ARBITRARY (see dp_gemm)
+            dimension_semantics=(
+                pltpu.ARBITRARY if n_prog != n_total else pltpu.PARALLEL,
+                pltpu.PARALLEL,
+                pltpu.ARBITRARY,
+            )
         ),
         name=f"splitk_gemm_{cfg.name}_s{s}",
     )(a, b)

@@ -83,8 +83,11 @@ def gemm(
     epi = dict(epilogue=epilogue, bias=biasp, operand=operandp)
 
     if part.sk_tiles == 0:
+        # policy degraded to pure DP (DP itself, or a HYBRID whose remainder
+        # wave is empty at this g): the DP region still launches in waves of
+        # the selected grid size
         cp = dp_gemm_region(
-            ap, bp, cfg, out_dtype=out_dtype, interpret=interpret, **epi
+            ap, bp, cfg, out_dtype=out_dtype, interpret=interpret, g=g, **epi
         )
         return unpad(cp, (m, n))
 
@@ -105,6 +108,7 @@ def gemm(
         c_init=c_sk,
         out_dtype=out_dtype,
         interpret=interpret,
+        g=g,
         **epi,
     )
     return unpad(cp, (m, n))

@@ -27,7 +27,7 @@ import numpy as np
 from repro.configs import list_archs
 from repro.core.adaptive import AdaptiveConfig, AdaptiveTuner
 from repro.core.gemm import gemm_context
-from repro.core.selector import KernelSelector, default_selector
+from repro.core.selector import KernelSelector
 from repro.core.tuner import TuningDatabase
 from repro.dist.sharding import materialize_tree
 from repro.launch.train import preset_config
@@ -75,6 +75,13 @@ def main() -> int:
         "fingerprint that traces at all will serve many dispatches)",
     )
     ap.add_argument(
+        "--grid-sweep",
+        default=None,
+        help="comma-separated grid sizes the selector/tuner sweep jointly "
+        "with (policy, tile), e.g. '4,8,16' (default: {lanes/2, lanes, "
+        "2*lanes} for the machine model)",
+    )
+    ap.add_argument(
         "--db",
         default=None,
         help="tuning database snapshot to warm-start the selector from",
@@ -95,6 +102,16 @@ def main() -> int:
     model = build_model(cfg)
     params = materialize_tree(model.param_specs(), jax.random.PRNGKey(args.seed))
 
+    grid_sizes = None
+    if args.grid_sweep:
+        try:
+            grid_sizes = tuple(
+                sorted({int(x) for x in args.grid_sweep.split(",") if x.strip()})
+            )
+        except ValueError:
+            raise SystemExit(f"bad --grid-sweep {args.grid_sweep!r}") from None
+        if not grid_sizes or min(grid_sizes) < 1:
+            raise SystemExit(f"bad --grid-sweep {args.grid_sweep!r}")
     if args.db or args.journal or args.adapt:
         if args.db and os.path.exists(args.db):
             db = TuningDatabase.load(args.db, journal=args.journal)
@@ -103,14 +120,14 @@ def main() -> int:
             if args.journal:
                 db.replay_journal(args.journal, missing_ok=True)
         sieve = db.build_sieve() if db.records else None
-        selector = KernelSelector(sieve=sieve, db=db)
+        selector = KernelSelector(sieve=sieve, db=db, grid_sizes=grid_sizes)
         log.info(
             "selector warm-start: %d tuned records (%d dropped at load)",
             len(db.records),
             db.load_errors,
         )
     else:
-        selector = default_selector()
+        selector = KernelSelector(grid_sizes=grid_sizes)
     adaptive = None
     if args.adapt:
         adaptive = AdaptiveTuner(
@@ -130,9 +147,13 @@ def main() -> int:
             adapt_every=args.adapt_every if args.adapt else 0,
         )
         rng = np.random.default_rng(args.seed)
+        # prompt lengths must respect the engine's cache bound: submit()
+        # rejects len > max_seq
+        p_hi = min(64, args.max_seq + 1)
+        p_lo = min(8, p_hi - 1)
         for _ in range(args.requests):
             engine.submit(
-                rng.integers(1, cfg.vocab_size, size=int(rng.integers(8, 64))),
+                rng.integers(1, cfg.vocab_size, size=int(rng.integers(p_lo, p_hi))),
                 max_new_tokens=args.max_new_tokens,
                 temperature=args.temperature,
             )
@@ -166,7 +187,10 @@ def main() -> int:
         seen.setdefault((e.tag, e.local_mnk), e.selection)
     log.info("distinct GEMM dispatches: %d", len(seen))
     for (tag, mnk), sel in sorted(seen.items())[:20]:
-        log.info("  %-12s M,N,K=%s -> %s/%s (%s)", tag, mnk, sel.policy.name, sel.cfg.name, sel.source)
+        log.info(
+            "  %-12s M,N,K=%s -> %s/%s g=%d (%s)",
+            tag, mnk, sel.policy.name, sel.cfg.name, sel.g, sel.source,
+        )
     return 0
 
 

@@ -171,22 +171,42 @@ class ServeEngine:
 
     # -- request admission -------------------------------------------------
     def submit(self, prompt, max_new_tokens: int = 32, temperature: float = 0.0) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        if len(prompt) > self.cfg.max_seq:
+            raise ValueError(
+                f"prompt length {len(prompt)} exceeds max_seq {self.cfg.max_seq}"
+            )
         self._uid += 1
         self._queue.append(
-            Request(self._uid, np.asarray(prompt, np.int32), max_new_tokens, temperature)
+            Request(self._uid, prompt, max_new_tokens, temperature)
         )
         return self._uid
 
     def _admit(self):
         for slot in range(self.cfg.n_slots):
-            if self.slot_req[slot] is not None or not self._queue:
-                continue
-            req = self._queue.pop(0)
-            self._prefill_slot(slot, req)
+            # a request can finish AT prefill (EOS / max_new_tokens == 1 /
+            # prompt exactly fills the cache) and free its slot immediately;
+            # keep admitting into the same slot so a run() whose every
+            # request prefill-finishes still drains the queue instead of
+            # abandoning it (step() would otherwise see no active slots)
+            while self.slot_req[slot] is None and self._queue:
+                req = self._queue.pop(0)
+                self._prefill_slot(slot, req)
+            if not self._queue:
+                break
 
     def _prefill_slot(self, slot: int, req: Request):
         """Prefill one slot. Single-sequence prefill then scatter its cache
-        into the shared pool at the slot index."""
+        into the shared pool at the slot index. Prompts longer than the
+        cache are rejected here too (defense in depth for direct callers —
+        ``submit`` already refuses them): prefilling one would silently
+        scatter KV entries out of bounds."""
+        if len(req.prompt) > self.cfg.max_seq:
+            raise ValueError(
+                f"prompt length {len(req.prompt)} exceeds max_seq "
+                f"{self.cfg.max_seq}; cannot prefill without scattering out "
+                "of bounds"
+            )
         prompt = jnp.asarray(req.prompt)[None, :]
         with self._dispatch_ctx():
             logits, cache1 = self.model.prefill(
@@ -201,8 +221,11 @@ class ServeEngine:
         self.slot_req[slot] = req
         tok = self._sample(np.asarray(logits)[0, -1], req.temperature)
         req.out_tokens.append(int(tok))
-        # the prefill-sampled token can already terminate the request
-        if tok == self.cfg.eos or len(req.out_tokens) >= req.max_new_tokens:
+        # the prefill-sampled token can already terminate the request; a
+        # prompt that exactly fills the cache leaves no decode room, so it
+        # finishes with the one prefill-sampled token
+        full = self.pos[slot] >= self.cfg.max_seq
+        if tok == self.cfg.eos or len(req.out_tokens) >= req.max_new_tokens or full:
             req.done = True
             self.slot_req[slot] = None
             self.pos[slot] = 0
@@ -237,7 +260,10 @@ class ServeEngine:
             req.out_tokens.append(tok)
             length_done = len(req.out_tokens) >= req.max_new_tokens
             eos_done = tok == self.cfg.eos
-            full = self.pos[i] + 1 >= self.cfg.max_seq
+            # the cache is full when the *next* write position is out of
+            # bounds; pos was already advanced above, so compare pos itself
+            # (pos + 1 retired slots one usable token early)
+            full = self.pos[i] >= self.cfg.max_seq
             if length_done or eos_done or full:
                 req.done = True
                 self.slot_req[i] = None

@@ -91,6 +91,37 @@ def test_merge():
         a.merge(BloomFilter.for_capacity(100, 0.01, seed=4))
 
 
+def test_merge_n_items_is_upper_bound_est_items_is_honest():
+    """Merging filters with overlapping key sets double-counts ``n_items``
+    (dedupe-agnostic OR); the saturation-based ``est_items`` stays close to
+    the true distinct-key count, which is what occupancy planning reads."""
+    a = BloomFilter.for_capacity(1000, 0.01, seed=3)
+    b = BloomFilter.for_capacity(1000, 0.01, seed=3)
+    for i in range(200):
+        a.add_mnk(i, i + 1, i + 2)
+    for i in range(100, 300):  # 100 keys overlap with a
+        b.add_mnk(i, i + 1, i + 2)
+    c = a.merge(b)
+    assert c.n_items == 400  # upper bound: 100 duplicates double-counted
+    assert abs(c.est_items - 300) / 300 < 0.1  # dedupe-aware estimate
+    # identical merge is the worst case: n_items doubles, est_items doesn't
+    d = a.merge(a)
+    assert d.n_items == 400
+    assert abs(d.est_items - 200) / 200 < 0.1
+
+
+def test_opensieve_summary_exposes_est_items():
+    from repro.core.opensieve import OpenSieve
+    from repro.core.policies import ALL_POLICIES, ALL_SK
+
+    sieve = OpenSieve(ALL_POLICIES, capacity=1000)
+    for i in range(50):
+        sieve.insert_winner((i + 1, 64, 64), ALL_SK)
+    s = sieve.summary()[ALL_SK.name]
+    assert s["n_items"] == 50
+    assert abs(s["est_items"] - 50) / 50 < 0.15
+
+
 def test_optimal_params_monotone():
     b1, k1 = optimal_params(1000, 0.01)
     b2, k2 = optimal_params(1000, 0.001)

@@ -254,7 +254,7 @@ def test_builtin_backends_registered():
 def test_register_backend_pluggable():
     calls = []
 
-    def counting_backend(x, w, *, op, policy, cfg, bias, operand):
+    def counting_backend(x, w, *, op, policy, cfg, g, bias, operand):
         calls.append(op)
         return jnp.einsum("gmk,gkn->gmn", x, w).astype(op.out_dtype)
 

@@ -1,0 +1,163 @@
+"""Differential coverage for the policy/shape degenerate paths.
+
+Interpret-mode Pallas kernels vs the ``jnp.dot`` oracle, sweeping all 8
+policies x epilogues x odd shapes — including the ``rem == 0`` HYBRID(1)
+case where ``sk_tile_count`` returns 0 and ``gemm`` silently degrades to a
+pure-DP launch — across f32 and bf16 and the swept grid sizes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.op import Epilogue
+from repro.core.policies import ALL_POLICIES, ALL_SK, DP, HYBRIDS, TileConfig
+from repro.core.workpart import GemmShape, partition, sk_tile_count
+from repro.kernels.dp import ops as dp_ops
+from repro.kernels.splitk import ops as splitk_ops
+from repro.kernels.streamk import ops as sk_ops
+
+CFG = TileConfig(8, 128, 128)
+ODD = (17, 200, 300)  # ragged on every dim: 3x2 tiles, padding everywhere
+
+
+def _mk(m, n, k, dtype, seed=0):
+    r = np.random.default_rng(seed)
+    a = jnp.asarray(r.normal(size=(m, k)), dtype)
+    b = jnp.asarray(r.normal(size=(k, n)), dtype)
+    return a, b
+
+
+def _tol(dtype):
+    return (
+        dict(rtol=2e-2, atol=2e-2)
+        if dtype == jnp.bfloat16
+        else dict(rtol=1e-4, atol=1e-4)
+    )
+
+
+def _oracle(a, b, epilogue=None, bias=None, operand=None):
+    acc = jnp.dot(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    if epilogue is not None:
+        acc = epilogue.apply(
+            acc,
+            bias=None if bias is None else bias,
+            operand=None if operand is None else operand,
+        )
+    return acc
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16], ids=["f32", "bf16"])
+@pytest.mark.parametrize("g", [4, 16])
+@pytest.mark.parametrize("policy", ALL_POLICIES, ids=lambda p: p.name)
+def test_all_policies_all_grids_match_oracle(policy, g, dtype):
+    m, n, k = ODD
+    a, b = _mk(m, n, k, dtype)
+    want = _oracle(a, b)
+    got = sk_ops.gemm(
+        a, b, policy=policy, cfg=CFG, g=g, interpret=True, out_dtype=jnp.float32
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# rem == 0: HYBRID(1) silently degrades to DP
+# ---------------------------------------------------------------------------
+
+
+def test_hybrid1_rem0_has_no_sk_region():
+    # 16x256 with 8x128 tiles -> 2x2 = 4 output tiles; g=4 divides evenly,
+    # so HYBRID(1)'s remainder wave is empty and the schedule IS pure DP
+    assert sk_tile_count(4, 4, HYBRIDS[0]) == 0
+    part = partition(GemmShape(16, 256, 384), CFG, 4, HYBRIDS[0])
+    assert part.sk_tiles == 0 and part.dp_tiles == 4
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16], ids=["f32", "bf16"])
+@pytest.mark.parametrize("g", [1, 2, 4])
+def test_hybrid1_rem0_degrades_to_dp_and_matches_oracle(g, dtype):
+    """4 tiles, g | 4: sk_tile_count == 0 and the kernel must still produce
+    the exact GEMM through the pure-DP fallback launch at that g."""
+    m, n, k = 16, 256, 384
+    assert sk_tile_count(4, g, HYBRIDS[0]) == 0
+    a, b = _mk(m, n, k, dtype, seed=1)
+    want = _oracle(a, b)
+    got = sk_ops.gemm(
+        a, b, policy=HYBRIDS[0], cfg=CFG, g=g, interpret=True, out_dtype=jnp.float32
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
+    # ... and matches the DP policy bit-for-bit (same schedule)
+    dp = sk_ops.gemm(
+        a, b, policy=DP, cfg=CFG, g=g, interpret=True, out_dtype=jnp.float32
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(dp))
+
+
+# ---------------------------------------------------------------------------
+# epilogues x policies x grid sizes
+# ---------------------------------------------------------------------------
+
+EPILOGUES = [
+    Epilogue(bias=True, activation="gelu"),
+    Epilogue(binary="mul_silu"),
+    Epilogue(bias=True, activation="silu", binary="add"),
+]
+
+
+@pytest.mark.parametrize("g", [4, 16])
+@pytest.mark.parametrize("epi", EPILOGUES, ids=lambda e: e.name)
+@pytest.mark.parametrize(
+    "policy", [DP, ALL_SK, HYBRIDS[0], HYBRIDS[3]], ids=lambda p: p.name
+)
+def test_epilogue_fusion_across_policies_and_grids(policy, epi, g):
+    m, n, k = 24, 384, 640  # 3x3 tiles over g=4: quantized remainder wave
+    a, b = _mk(m, n, k, jnp.float32, seed=2)
+    r = np.random.default_rng(3)
+    bias = jnp.asarray(r.normal(size=(n,)), jnp.float32) if epi.bias else None
+    operand = (
+        jnp.asarray(r.normal(size=(m, n)), jnp.float32)
+        if epi.binary != "none"
+        else None
+    )
+    want = _oracle(a, b, epilogue=epi, bias=bias, operand=operand)
+    got = sk_ops.gemm(
+        a,
+        b,
+        policy=policy,
+        cfg=CFG,
+        g=g,
+        interpret=True,
+        out_dtype=jnp.float32,
+        epilogue=epi,
+        bias=bias,
+        operand=operand,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# g threads into the dp / splitk baseline packages too
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("g", [0, 3, 4, 16])
+def test_dp_ops_wave_grid_matches_oracle(g):
+    a, b = _mk(*ODD, jnp.float32, seed=4)
+    got = dp_ops.gemm(a, b, cfg=CFG, g=g, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(_oracle(a, b)), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("g", [0, 3, 8])
+def test_splitk_ops_wave_grid_matches_oracle(g):
+    a, b = _mk(24, 256, 512, jnp.float32, seed=5)
+    got = splitk_ops.gemm(a, b, cfg=CFG, s=2, g=g, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(_oracle(a, b)), rtol=1e-4, atol=1e-4
+    )

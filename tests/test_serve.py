@@ -84,6 +84,65 @@ def test_temperature_sampling_is_seeded(served):
     assert out[0] == out[1]  # same seed -> same samples
 
 
+def test_slot_serves_until_cache_actually_full(served):
+    """Regression for the retire-one-early off-by-one: a slot must keep
+    decoding until the *next* write position is out of bounds, so a request
+    bounded only by max_seq yields exactly max_seq - len(prompt) + 1 tokens
+    (the prefill-sampled token plus one per free cache line)."""
+    cfg, model, params = served
+    max_seq, prompt_len = 16, 4
+    eng = ServeEngine(model, params, ServeConfig(n_slots=1, max_seq=max_seq, eos=-1))
+    eng.submit(np.arange(1, prompt_len + 1, dtype=np.int32), max_new_tokens=1000)
+    [req] = eng.run()
+    assert req.done
+    assert len(req.out_tokens) == max_seq - prompt_len + 1
+
+
+def test_submit_rejects_overlong_prompt(served):
+    cfg, model, params = served
+    eng = ServeEngine(model, params, ServeConfig(n_slots=1, max_seq=8, eos=-1))
+    with pytest.raises(ValueError, match="exceeds max_seq"):
+        eng.submit(np.arange(1, 10, dtype=np.int32))  # 9 tokens > max_seq=8
+    # direct prefill of an oversized request is refused too (no silent
+    # out-of-bounds scatter), even for callers that bypass submit()
+    from repro.serve.engine import Request
+
+    with pytest.raises(ValueError, match="exceeds max_seq"):
+        eng._prefill_slot(0, Request(99, np.arange(1, 10, dtype=np.int32)))
+
+
+def test_queue_drains_when_every_request_finishes_at_prefill(served):
+    """Regression: a prefill-finished request frees its slot after _admit's
+    loop passed it — the engine must keep admitting into that slot instead
+    of returning with the queue non-empty (previously the 2nd request was
+    silently abandoned)."""
+    cfg, model, params = served
+    max_seq = 8
+    eng = ServeEngine(model, params, ServeConfig(n_slots=1, max_seq=max_seq, eos=-1))
+    uids = [
+        eng.submit(np.arange(1, max_seq + 1, dtype=np.int32), max_new_tokens=100)
+        for _ in range(3)  # every one fills the cache and finishes at prefill
+    ]
+    done = eng.run()
+    assert sorted(r.uid for r in done) == sorted(uids)
+    assert all(len(r.out_tokens) == 1 for r in done)
+    assert eng._queue == []
+
+
+def test_prompt_exactly_max_seq_finishes_at_prefill(served):
+    """Boundary: a prompt that exactly fills the cache is admitted, yields
+    the one prefill-sampled token, and frees its slot immediately (no decode
+    step may write at position max_seq)."""
+    cfg, model, params = served
+    max_seq = 8
+    eng = ServeEngine(model, params, ServeConfig(n_slots=1, max_seq=max_seq, eos=-1))
+    eng.submit(np.arange(1, max_seq + 1, dtype=np.int32), max_new_tokens=100)
+    [req] = eng.run()
+    assert req.done
+    assert len(req.out_tokens) == 1
+    assert eng.slot_req == [None] and eng.pos[0] == 0
+
+
 def test_dispatch_log_records_decode_gemms(served):
     cfg, model, params = served
     with gemm_context(selector=default_selector()) as ctx:
