@@ -1,5 +1,11 @@
 """Shared benchmark infrastructure: the tuned 923-size database (cached to
-artifacts/) and timing helpers."""
+artifacts/) and timing helpers.
+
+Warm-start order for :func:`tuned_db`: the JSON snapshot if complete, else
+replaying ``artifacts/tuning_journal.jsonl`` (the append-only artifact CI
+caches keyed on the ``src/repro/core/**`` content hash — a warm CI runner
+skips the full 923-size sweep entirely), else a cold sweep that *emits*
+that journal so the next run is warm."""
 
 from __future__ import annotations
 
@@ -11,18 +17,46 @@ from repro.core.tuner import Tuner, TuningDatabase
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
 DB_PATH = os.path.join(ART, "tuning_db.json")
+JOURNAL_PATH = os.path.join(ART, "tuning_journal.jsonl")
+
+
+def _covers_suite(db: TuningDatabase, sizes) -> bool:
+    return all(tuple(s) in db.records for s in sizes)
 
 
 def tuned_db(force: bool = False) -> TuningDatabase:
     """Tune the full 923-size paper suite (cached — the one-time
-    preprocessing step of §4.2)."""
+    preprocessing step of §4.2). Set ``REPRO_BENCH_TIMING=path`` to append
+    a ``source,seconds`` line recording how the database materialised
+    (cold sweep vs. snapshot/journal warm start) — CI surfaces this in the
+    job summary."""
     os.makedirs(ART, exist_ok=True)
-    if os.path.exists(DB_PATH) and not force:
-        db = TuningDatabase.load(DB_PATH)
-        if len(db.records) == 923:
-            return db
-    db = Tuner().tune(suite())
-    db.save(DB_PATH)
+    sizes = suite()
+    t0 = time.perf_counter()
+    source = "cold_sweep"
+    db = None
+    if not force:
+        if os.path.exists(DB_PATH):
+            cand = TuningDatabase.load(DB_PATH)
+            if _covers_suite(cand, sizes):
+                db, source = cand, "snapshot"
+        if db is None and os.path.exists(JOURNAL_PATH):
+            cand = TuningDatabase()
+            cand.replay_journal(JOURNAL_PATH, missing_ok=True)
+            if _covers_suite(cand, sizes):
+                db, source = cand, "journal"
+                cand.save(DB_PATH)  # snapshot for the next consumer
+    if db is None:
+        # cold: sweep and journal as we go, so a crash keeps partial work
+        # and the CI cache turns the next run into a journal warm start
+        if os.path.exists(JOURNAL_PATH):
+            os.remove(JOURNAL_PATH)  # stale/partial journal must not grow
+        db = Tuner().tune(sizes, journal=JOURNAL_PATH)
+        db.save(DB_PATH)
+    timing = os.environ.get("REPRO_BENCH_TIMING")
+    if timing:
+        with open(timing, "a") as f:
+            f.write(f"{source},{time.perf_counter() - t0:.2f}\n")
     return db
 
 

@@ -1,0 +1,195 @@
+"""Federated tuning: sharded-sweep scaling + merge equivalence.
+
+Simulates an N-worker tuning fleet over a deterministic slice of the paper
+suite plus extended op fingerprints (bf16 / grouped / epilogue-fused):
+
+  * each worker runs ``Tuner.tune(shard=(i, n))`` over its disjoint slice,
+    journaling to its own shard file;
+  * the shards merge through :func:`repro.core.federate.merge_journal_shards`
+    and the per-worker sieves union through ``merge_sieves``;
+  * the merged state is checked for *bit-identical* selection vs. the
+    single-worker full sweep: same records (modulo producer commit clocks),
+    same per-fingerprint (policy, cfg, g), byte-identical sieve filters —
+    so elimination decisions (100% true-negative rate included) match.
+
+Reported rows: per-worker-count simulated parallel sweep wall-time (the
+slowest shard, i.e. what a real fleet would wait for), speedup vs. the
+single-worker sweep, and the equivalence verdicts. Near-linear speedup is
+the point: tuning knowledge is produced in parallel and merged, not
+rediscovered per worker.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+from typing import Dict, List, Optional
+
+from benchmarks.common import csv_row
+from repro.configs.gemm_suite import suite
+from repro.core.federate import (
+    merge_journal_shards,
+    merge_sieves,
+    record_payload,
+    selection_table,
+)
+from repro.core.op import Epilogue, GemmOp
+from repro.core.selector import KernelSelector
+from repro.core.tuner import Tuner
+
+N_SUITE = 48  # bare (M, N, K) targets sampled from the 923-size suite
+WORKER_COUNTS = (2, 4)
+
+
+def _targets(n_suite: int = N_SUITE) -> List:
+    """Deterministic sweep targets: a spread of the paper suite plus the
+    extended fingerprints federation must round-trip (dtype / grouped /
+    epilogue keys)."""
+    full = suite()
+    step = max(1, len(full) // n_suite)
+    targets: List = list(full[::step][:n_suite])
+    targets += [
+        GemmOp.plain(64, 2048, 512, in_dtype="bfloat16"),
+        GemmOp.plain(16, 1536, 896, in_dtype="bfloat16"),
+        GemmOp(32, 1024, 512, g=8, kind="grouped"),
+        GemmOp(8, 768, 640, g=4, kind="grouped"),
+        GemmOp.plain(128, 512, 512, epilogue=Epilogue(activation="gelu")),
+        GemmOp.plain(24, 640, 320, epilogue=Epilogue(bias=True, activation="silu")),
+    ]
+    return targets
+
+
+def _sweep_shard(tuner: Tuner, targets, i: int, n: int, journal: str):
+    t0 = time.perf_counter()
+    db = tuner.tune(targets, shard=(i, n), journal=journal)
+    return db, time.perf_counter() - t0
+
+
+def run(json_path: Optional[str] = None) -> List[str]:
+    rows: List[str] = []
+    targets = _targets()
+    tuner = Tuner()
+
+    tuner.tune(targets)  # warm-up: cost-model caches must not skew scaling
+    with tempfile.TemporaryDirectory() as tmp:
+        # the single-worker baseline journals too — shards pay journal I/O,
+        # so the baseline must as well for the speedup to be honest
+        t0 = time.perf_counter()
+        full = tuner.tune(targets, journal=os.path.join(tmp, "full.jsonl"))
+        t_full = time.perf_counter() - t0
+    full_sieve = full.build_sieve()
+    full_sel = KernelSelector(sieve=full_sieve, db=full)
+    full_table = selection_table(full_sel, full.records)
+    rows.append(
+        csv_row(
+            "federated_full_sweep",
+            t_full * 1e6 / len(targets),
+            f"1 worker; {len(targets)} targets; wall={t_full:.3f}s",
+        )
+    )
+
+    report: Dict[str, object] = {
+        "targets": len(targets),
+        "single_worker_wall_s": round(t_full, 4),
+        "workers": {},
+    }
+    with tempfile.TemporaryDirectory() as tmp:
+        for n in WORKER_COUNTS:
+            shard_paths = [os.path.join(tmp, f"w{n}_{i}.jsonl") for i in range(n)]
+            shard_dbs, shard_walls = [], []
+            for i in range(n):
+                db, wall = _sweep_shard(tuner, targets, i, n, shard_paths[i])
+                shard_dbs.append(db)
+                shard_walls.append(wall)
+            # a real fleet's sweep takes as long as its slowest shard
+            t_parallel = max(shard_walls)
+            speedup = t_full / t_parallel if t_parallel > 0 else float("inf")
+
+            merged, rep = merge_journal_shards(shard_paths)
+            records_equal = set(merged.records) == set(full.records) and all(
+                record_payload(merged.records[k]) == record_payload(full.records[k])
+                for k in full.records
+            )
+            merged_sieve = merge_sieves([db.build_sieve() for db in shard_dbs])
+            # byte-identical filters => identical candidate sets for every
+            # possible key => elimination decisions (and the Bloom 100%
+            # true-negative guarantee) match the full rebuild exactly
+            sieves_equal = merged_sieve.to_bytes() == full_sieve.to_bytes()
+            merged_sel = KernelSelector(sieve=merged_sieve, db=merged)
+            selection_equal = (
+                selection_table(merged_sel, full.records) == full_table
+            )
+            verdict = (
+                "identical"
+                if records_equal and sieves_equal and selection_equal
+                else "DIVERGED"
+            )
+            rows.append(
+                csv_row(
+                    f"federated_sweep_{n}w",
+                    t_parallel * 1e6 / len(targets),
+                    f"speedup={speedup:.2f}x; merge={verdict}; "
+                    f"conflicts={rep.conflicts}",
+                )
+            )
+            report["workers"][str(n)] = {
+                "parallel_wall_s": round(t_parallel, 4),
+                "shard_walls_s": [round(w, 4) for w in shard_walls],
+                "speedup": round(speedup, 3),
+                "records_equal": records_equal,
+                "sieves_equal": sieves_equal,
+                "selection_equal": selection_equal,
+                "conflicts": rep.conflicts,
+                "load_errors": rep.load_errors,
+            }
+            if verdict == "DIVERGED":  # pragma: no cover - would be a bug
+                raise AssertionError(
+                    f"{n}-worker federated merge diverged from full sweep: "
+                    f"records={records_equal} sieves={sieves_equal} "
+                    f"selection={selection_equal}"
+                )
+
+    # cold vs. federated warm start: replaying the merged journals into a
+    # fresh worker turns the whole sweep into database hits
+    with tempfile.TemporaryDirectory() as tmp:
+        paths = [os.path.join(tmp, f"s{i}.jsonl") for i in range(2)]
+        for i in range(2):
+            tuner.tune(targets, shard=(i, 2), journal=paths[i])
+        t0 = time.perf_counter()
+        warm, _ = merge_journal_shards(paths)
+        t_merge = time.perf_counter() - t0
+        warm_sel = KernelSelector(sieve=warm.build_sieve(), db=warm)
+        hits = sum(
+            1
+            for key in full.records
+            if warm_sel.db.records.get(key) is not None
+        )
+        rows.append(
+            csv_row(
+                "federated_merge",
+                t_merge * 1e6,
+                f"{hits}/{len(full.records)} fingerprints warm after merge",
+            )
+        )
+        report["merge_wall_s"] = round(t_merge, 6)
+        report["warm_fingerprints"] = hits
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, help="write the full report as JSON")
+    args = ap.parse_args()
+    for row in run(json_path=args.json):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -3,24 +3,51 @@ GEMM suite, build Open-sieve, emit the C++ header (the paper's compact
 lookup-table artifact) and print the headline statistics.
 
 Run:  PYTHONPATH=src python examples/tune_gemm.py [--out /tmp/opensieve.hpp]
+
+Federated sweep (N workers, each tuning a disjoint shard, merged back into
+the exact single-worker database):
+
+  PYTHONPATH=src python examples/tune_gemm.py --workers 4
 """
 
 import argparse
+import os
+import tempfile
 import time
 
 from repro.configs.gemm_suite import suite
-from repro.core import Tuner
+from repro.core import Tuner, merge_journal_shards
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="/tmp/opensieve.hpp")
     ap.add_argument("--stride", type=int, default=1, help="suite subsample stride")
+    ap.add_argument(
+        "--workers",
+        type=int,
+        default=1,
+        help="shard the sweep across N simulated workers and merge journals",
+    )
     args = ap.parse_args()
 
     sizes = suite()[:: args.stride]
     t0 = time.time()
-    db = Tuner().tune(sizes)
+    if args.workers > 1:
+        tuner = Tuner()
+        with tempfile.TemporaryDirectory() as tmp:
+            paths = []
+            for i in range(args.workers):
+                p = os.path.join(tmp, f"shard{i}.jsonl")
+                tuner.tune(sizes, shard=(i, args.workers), journal=p)
+                paths.append(p)
+            db, report = merge_journal_shards(paths)
+        print(
+            f"federated: {args.workers} worker shards merged to "
+            f"{len(db.records)} records ({report.conflicts} conflicts)"
+        )
+    else:
+        db = Tuner().tune(sizes)
     print(f"tuned {len(sizes)} sizes in {time.time() - t0:.1f}s")
 
     wins = {}

@@ -50,6 +50,16 @@ from repro.core.tuner import (
     TuningRecord,
     append_journal,
     journal_entry,
+    parse_journal_line,
+    shard_targets,
+)
+from repro.core.federate import (
+    MergeReport,
+    apply_journal_db,
+    federate_selector,
+    merge_databases,
+    merge_journal_shards,
+    merge_sieves,
 )
 from repro.core.selector import KernelSelector, Selection, default_selector
 from repro.core.adaptive import AdaptiveConfig, AdaptiveStats, AdaptiveTuner
@@ -101,6 +111,14 @@ __all__ = [
     "TuningRecord",
     "append_journal",
     "journal_entry",
+    "parse_journal_line",
+    "shard_targets",
+    "MergeReport",
+    "apply_journal_db",
+    "federate_selector",
+    "merge_databases",
+    "merge_journal_shards",
+    "merge_sieves",
     "KernelSelector",
     "Selection",
     "default_selector",

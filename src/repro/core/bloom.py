@@ -160,17 +160,49 @@ class BloomFilter:
         if magic != b"BLM1":
             raise ValueError("not a serialized BloomFilter")
         f = cls(n_bits=n_bits, n_hashes=n_hashes, seed=seed)
+        if len(blob) - 20 != f.n_bits // 8:
+            # a truncated blob would otherwise produce a filter whose bit
+            # array is shorter than n_bits claims — every probe past the end
+            # then raises IndexError, and merge would silently mis-combine
+            raise ValueError(
+                f"BloomFilter blob payload is {len(blob) - 20} bytes but "
+                f"n_bits={f.n_bits} requires {f.n_bits // 8}"
+            )
         f.bits = np.frombuffer(blob[20:], dtype=np.uint8).copy()
         f.n_items = n_items
         return f
 
+    def params_str(self) -> str:
+        """Human-readable parameter fingerprint (for mismatch diagnostics)."""
+        return (
+            f"BloomFilter(n_bits={self.n_bits}, n_hashes={self.n_hashes}, "
+            f"seed={self.seed})"
+        )
+
     def merge(self, other: "BloomFilter") -> "BloomFilter":
+        """Bitwise-OR union of two filters over the SAME parameterisation.
+
+        Filters are only unionable when n_bits, n_hashes, and seed all match
+        — otherwise the probe schedules differ and the OR would answer
+        "possibly present" for keys neither filter ever saw *and* lose the
+        no-false-negative contract. Mismatches raise up front with both
+        configurations named (a silent shape-broadcast or an IndexError deep
+        in a later query is how this used to surface)."""
         if (self.n_bits, self.n_hashes, self.seed) != (
             other.n_bits,
             other.n_hashes,
             other.seed,
         ):
-            raise ValueError("incompatible filters")
+            raise ValueError(
+                "cannot merge BloomFilters with mismatched parameters: "
+                f"{self.params_str()} vs {other.params_str()}"
+            )
+        if self.bits.shape != other.bits.shape:
+            raise ValueError(
+                "cannot merge BloomFilters with mismatched bit arrays: "
+                f"{self.bits.shape[0]} vs {other.bits.shape[0]} bytes "
+                f"(both claim n_bits={self.n_bits})"
+            )
         out = BloomFilter(self.n_bits, self.n_hashes, self.seed)
         out.bits = self.bits | other.bits
         # The merge is dedupe-agnostic (bitwise OR cannot tell how many keys

@@ -1,0 +1,295 @@
+"""Federated tuning: merge what N workers learned into one selection state.
+
+The offline :class:`~repro.core.tuner.Tuner` shards a sweep across workers
+(``Tuner.tune(shard=(i, n))``) and serving processes each append to their own
+journal shard; this module is the reassembly layer that turns those partial
+artifacts back into ONE :class:`~repro.core.tuner.TuningDatabase` + one
+:class:`~repro.core.opensieve.OpenSieve`, so every worker's next
+:meth:`~repro.core.selector.KernelSelector.hot_swap` dispatches from the
+union instead of re-discovering what a sibling already tuned.
+
+Merge semantics:
+
+  * **Records** — last-writer-wins per fingerprint key on the record's
+    ``version`` (the producer's commit clock). A version tie between
+    *differing* payloads is a real conflict (two workers tuned the same
+    fingerprint independently): it is counted in ``MergeReport.conflicts``
+    and resolved deterministically — higher measured tflops, then policy /
+    cfg / g name order — so the merged database is identical whatever order
+    the shards arrive in. Records that lose are counted in ``superseded``.
+    Sharded sweeps partition fingerprints disjointly, so an offline
+    federated sweep merges with zero conflicts and is record-identical
+    (modulo local commit clocks) to the single-worker full sweep.
+
+    Clock caveat: ``version`` is a *per-producer* counter, not a global
+    wall clock — comparing stamps from unrelated producers is a
+    deterministic heuristic, not a time ordering. Where a genuine
+    precedence exists, express it structurally instead: journals replay
+    *on top of* the snapshot they post-date (``apply_journal_db`` /
+    ``TuningDatabase.load(path, journal=...)`` overwrite unconditionally),
+    and ``federate_selector`` merges into the worker's live database, whose
+    records stand unless a sibling's strictly outranks them.
+  * **Sieves** — :meth:`OpenSieve.merge` bitwise-ORs the per-policy Bloom
+    filters (inserting a key sets the same bits whichever worker's filter it
+    landed in, so the union is bit-identical to rebuilding from the merged
+    winner map) and bumps ``generation`` past every input, which is what
+    makes selector hot-swaps drop picks memoised under any pre-merge sieve.
+  * **Journals** — each shard replays into its own staging database first
+    (preserving intra-shard time order and producer version stamps), then
+    databases merge as above. Torn/malformed lines are skipped and summed
+    into ``MergeReport.load_errors`` (see ``replay_journal``).
+
+``federate_selector`` is the worker-side entry point: merge everything that
+arrived from the fleet into this worker's selector and hot-swap, after which
+a fingerprint tuned in any sibling process dispatches here as a database hit
+— no miss, no re-tune.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.op import OpKey
+from repro.core.opensieve import OpenSieve
+from repro.core.selector import KernelSelector
+from repro.core.tuner import TuningDatabase, TuningRecord
+from repro.utils.logging import get_logger
+
+log = get_logger("federate")
+
+
+@dataclass
+class MergeReport:
+    """What a federated merge did — the observability surface CI and the
+    serve CLI print, so shard skew is a number rather than a mystery."""
+
+    sources: int = 0  # databases / journal shards consumed
+    examined: int = 0  # records read across all sources
+    merged: int = 0  # distinct fingerprint keys in the result
+    conflicts: int = 0  # same key, same version, DIFFERENT payload
+    superseded: int = 0  # records that lost last-writer-wins
+    load_errors: int = 0  # malformed/torn journal lines skipped
+
+    def combine(self, other: "MergeReport") -> "MergeReport":
+        return MergeReport(
+            sources=self.sources + other.sources,
+            examined=self.examined + other.examined,
+            merged=max(self.merged, other.merged),
+            conflicts=self.conflicts + other.conflicts,
+            superseded=self.superseded + other.superseded,
+            load_errors=self.load_errors + other.load_errors,
+        )
+
+
+def record_payload(rec: TuningRecord) -> TuningRecord:
+    """The record with its producer clock zeroed — what two workers must
+    agree on for their records to count as the *same* result. Sharded
+    sweeps of one suite produce per-shard clocks, so equality checks (and
+    conflict detection) must ignore ``version``."""
+    return dataclasses.replace(rec, version=0)
+
+
+def _wins(challenger: TuningRecord, incumbent: TuningRecord) -> bool:
+    """Deterministic total order for last-writer-wins: version first, then
+    measured tflops, then (policy, cfg, g) name order as the final
+    arbitrary-but-stable tiebreak. Symmetric: merge order never changes the
+    winner."""
+    return (
+        challenger.version,
+        challenger.tflops,
+        challenger.policy,
+        challenger.cfg,
+        challenger.g,
+    ) > (
+        incumbent.version,
+        incumbent.tflops,
+        incumbent.policy,
+        incumbent.cfg,
+        incumbent.g,
+    )
+
+
+def merge_records(
+    into: TuningDatabase,
+    records: Iterable[Tuple[TuningRecord, Optional[Dict[str, float]]]],
+    report: Optional[MergeReport] = None,
+) -> MergeReport:
+    """Fold (record, per_policy) pairs into ``into`` under last-writer-wins.
+    Mutates ``into`` (bumping its ``version`` clock past every applied
+    record) and returns the report."""
+    report = report if report is not None else MergeReport()
+    for rec, per_policy in records:
+        report.examined += 1
+        cur = into.records.get(rec.size)
+        if cur is not None and record_payload(cur) != record_payload(rec):
+            if cur.version == rec.version:
+                report.conflicts += 1
+            report.superseded += 1
+        if cur is None or _wins(rec, cur):
+            into.records[rec.size] = rec
+            # the per-policy table must describe the stored record: install
+            # the winner's (when it has one) or drop the loser's stale one
+            # — fig2-tolerance-style consumers must never read measurements
+            # that belong to a superseded record
+            if per_policy is not None:
+                into.per_policy[rec.size] = per_policy
+            elif cur is not None and record_payload(cur) != record_payload(rec):
+                into.per_policy.pop(rec.size, None)
+            into.version = max(into.version, rec.version)
+    report.merged = len(into.records)
+    return report
+
+
+def merge_databases(
+    dbs: Sequence[TuningDatabase],
+    into: Optional[TuningDatabase] = None,
+) -> Tuple[TuningDatabase, MergeReport]:
+    """Merge N workers' databases into one (inputs are not mutated unless
+    one of them is passed as ``into``)."""
+    out = into if into is not None else TuningDatabase()
+    report = MergeReport(sources=len(dbs))
+    for db in dbs:
+        merge_records(
+            out,
+            ((rec, db.per_policy.get(key)) for key, rec in db.records.items()),
+            report,
+        )
+        report.load_errors += db.load_errors
+    return out, report
+
+
+def merge_journal_shards(
+    paths: Sequence[str],
+    into: Optional[TuningDatabase] = None,
+    missing_ok: bool = False,
+) -> Tuple[TuningDatabase, MergeReport]:
+    """Reassemble journal shards (one append-only JSONL per worker) into one
+    database. Each shard replays into its own staging database first — that
+    preserves intra-shard commit order (later lines win within a shard) and
+    the producers' version stamps — then staging databases merge under
+    last-writer-wins. Torn final lines and malformed lines are skipped and
+    totalled in the report (``replay_journal`` semantics)."""
+    staged: List[TuningDatabase] = []
+    for path in paths:
+        db = TuningDatabase()
+        db.replay_journal(path, missing_ok=missing_ok)
+        staged.append(db)
+    out, report = merge_databases(staged, into=into)
+    report.sources = len(paths)
+    return out, report
+
+
+def apply_journal_db(
+    into: TuningDatabase, journal_db: TuningDatabase
+) -> TuningDatabase:
+    """Apply journal-derived records ON TOP of a snapshot database —
+    unconditional overwrite, the ``TuningDatabase.load(path, journal=...)``
+    contract: a journal post-dates the snapshot it accompanies, so its
+    records win regardless of version stamps (which are per-producer
+    counters and NOT comparable across a snapshot/journal boundary — a
+    923-record snapshot's clock would otherwise permanently outrank a
+    fresh worker's low-numbered online commits). Producer stamps are
+    preserved; the clock fast-forwards."""
+    for key, rec in journal_db.records.items():
+        pp = journal_db.per_policy.get(key)
+        if pp is None and key in into.per_policy:
+            cur = into.records.get(key)
+            if cur is None or record_payload(cur) != record_payload(rec):
+                into.per_policy.pop(key, None)  # must not describe the loser
+        into.add_record(rec, pp, stamp=False)
+    into.load_errors += journal_db.load_errors
+    return into
+
+
+def merge_sieves(
+    sieves: Sequence[OpenSieve], generation: Optional[int] = None
+) -> OpenSieve:
+    """Union N workers' sieves (see :meth:`OpenSieve.merge`); the result's
+    generation lands past every input so hot-swap consumers re-resolve.
+    Always returns a detached sieve — inputs are never aliased or mutated,
+    so a worker's live sieve keeps serving while the union is assembled."""
+    if not sieves:
+        raise ValueError("merge_sieves needs at least one sieve")
+    out = OpenSieve.from_bytes(sieves[0].to_bytes())  # detached copy
+    out.policies = sieves[0].policies
+    for s in sieves[1:]:
+        out = out.merge(s, generation=0)
+    out.generation = (
+        generation
+        if generation is not None
+        else max(s.generation for s in sieves) + 1
+    )
+    return out
+
+
+def federate_selector(
+    selector: KernelSelector,
+    dbs: Sequence[TuningDatabase] = (),
+    journals: Sequence[str] = (),
+    sieves: Sequence[OpenSieve] = (),
+    capacity: int = 10_000,
+    fp_rate: float = 0.01,
+    missing_ok: bool = False,
+) -> MergeReport:
+    """Fold fleet state into one worker's selector and hot-swap.
+
+    The worker's own database is the merge base (its in-process commits keep
+    last-writer-wins standing against stale fleet copies); sibling databases
+    and journal shards fold in on top. The new sieve is built under
+    ``max(every input generation, selector's) + 1`` — either by unioning the
+    supplied sibling ``sieves`` and folding in any merged winners they have
+    not seen, or by rebuilding from the merged database — and the hot-swap
+    drops every memoised pick, so the very next dispatch of a fingerprint
+    tuned in a sibling process resolves as a database hit here."""
+    base = selector.db if selector.db is not None else TuningDatabase()
+    merged_report = MergeReport()
+    if dbs:
+        _, r = merge_databases(list(dbs), into=base)
+        merged_report = merged_report.combine(r)
+    if journals:
+        _, r = merge_journal_shards(list(journals), into=base, missing_ok=missing_ok)
+        merged_report = merged_report.combine(r)
+    merged_report.merged = len(base.records)
+
+    generation = selector.sieve_generation
+    if sieves:
+        generation = max(generation, *(s.generation for s in sieves))
+    generation += 1
+    if sieves:
+        sieve = merge_sieves(list(sieves), generation=generation)
+        # winners the sibling sieves never encoded (e.g. records that only
+        # travelled as journal shards) still need to be queryable
+        sieve.build_from_winners(base.winners())
+    else:
+        sieve = base.build_sieve(
+            capacity=capacity, fp_rate=fp_rate, generation=generation
+        )
+    selector.hot_swap(db=base, sieve=sieve, keys=None)
+    log.info(
+        "federated merge: %d sources, %d records examined -> %d merged "
+        "(%d conflicts, %d superseded, %d load errors), sieve generation %d",
+        merged_report.sources,
+        merged_report.examined,
+        merged_report.merged,
+        merged_report.conflicts,
+        merged_report.superseded,
+        merged_report.load_errors,
+        generation,
+    )
+    return merged_report
+
+
+def selection_table(
+    selector: KernelSelector, keys: Iterable[OpKey]
+) -> Dict[OpKey, Tuple[str, str, int]]:
+    """(policy, cfg, g) the selector's database resolves for each key —
+    the equivalence surface federated tests/benchmarks compare between a
+    merged fleet and a single-worker full sweep."""
+    out: Dict[OpKey, Tuple[str, str, int]] = {}
+    for key in keys:
+        rec = selector.db.records.get(key) if selector.db is not None else None
+        if rec is not None:
+            out[key] = (rec.policy, rec.cfg, rec.g)
+    return out

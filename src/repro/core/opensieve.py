@@ -141,6 +141,43 @@ class OpenSieve:
                         genuine += 1
         return genuine / negatives if negatives else 1.0
 
+    # -- federation -----------------------------------------------------------
+    def merge(
+        self, other: "OpenSieve", generation: Optional[int] = None
+    ) -> "OpenSieve":
+        """Union of two sieves built over the SAME policy registry and
+        filter parameterisation — the federated-merge path: N workers each
+        encode their shard's winners, and the bitwise-OR union answers
+        queries exactly like a sieve built from the merged winner map
+        (inserting a key sets the same bits whichever worker's filter it
+        lands in, so the union is bit-identical to the full rebuild).
+
+        The result's ``generation`` defaults to ``max(ours, theirs) + 1`` —
+        a merge is a new build version, so every
+        :meth:`~repro.core.selector.KernelSelector.hot_swap` consumer
+        re-resolves against the union rather than trusting picks memoised
+        under either input. Mismatched policy registries or filter
+        parameters raise descriptively (see :meth:`BloomFilter.merge`)."""
+        mine = {p.name for p in self.policies}
+        theirs = {p.name for p in other.policies}
+        if mine != theirs:
+            raise ValueError(
+                "cannot merge OpenSieves over different policy registries: "
+                f"{sorted(mine)} vs {sorted(theirs)}"
+            )
+        out = OpenSieve.__new__(OpenSieve)
+        out.policies = self.policies
+        out.filters = {
+            name: f.merge(other.filters[name]) for name, f in self.filters.items()
+        }
+        out.stats = QueryStats()
+        out.generation = (
+            generation
+            if generation is not None
+            else max(self.generation, other.generation) + 1
+        )
+        return out
+
     # -- codec ---------------------------------------------------------------
     def to_bytes(self) -> bytes:
         blobs = [(name.encode(), f.to_bytes()) for name, f in self.filters.items()]

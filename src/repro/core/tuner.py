@@ -28,7 +28,16 @@ monotone clock the generational sieve rebuilds key on.
 Backward compatibility: records/journal lines written before ``g`` became a
 tuning axis carry no ``g`` field — they parse with ``g = LEGACY_GRID`` (8,
 the grid every legacy kernel launch used), so old artifacts load and
-dispatch identically.
+dispatch identically. Likewise records written before federation carry no
+``version`` — they parse with ``version = 0`` and lose last-writer-wins
+merges against any stamped record (see :mod:`repro.core.federate`).
+
+Federated sweeps: ``Tuner.tune(shard=(i, n))`` tunes only the ``i``-th of
+``n`` deterministic, disjoint slices of the target list (strided, so the
+suite's size-correlated cost balances across workers). Each worker journals
+to its own shard file; :func:`repro.core.federate.merge_journal_shards`
+reassembles the union, which is record-identical to the single-worker full
+sweep because a fingerprint is always tuned whole by exactly one worker.
 """
 
 from __future__ import annotations
@@ -106,6 +115,11 @@ class TuningRecord:
     #: winner grid size; defaults to LEGACY_GRID so g-less records written
     #: before the grid sweep existed keep dispatching exactly as they did
     g: int = LEGACY_GRID
+    #: producer commit clock: stamped by ``TuningDatabase.add_record`` (the
+    #: database's monotone ``version`` at commit time) and carried through
+    #: journals/snapshots, so federated merges can apply last-writer-wins
+    #: per key. Pre-federation artifacts parse with 0 (always superseded).
+    version: int = 0
 
     @property
     def gain_over_runner_up(self) -> float:
@@ -150,14 +164,26 @@ class TuningDatabase:
         self,
         rec: TuningRecord,
         per_policy: Optional[Dict[str, float]] = None,
+        stamp: bool = True,
     ) -> None:
         """In-place record append (the online-adaptation commit path).
         Overwrites any existing record for the same key and bumps
-        ``version`` so sieve-generation machinery sees the change."""
+        ``version`` so sieve-generation machinery sees the change.
+
+        ``stamp`` controls the commit clock: fresh local commits (the
+        default) arriving unstamped get ``version = clock + 1``; replay
+        paths pass ``stamp=False`` so a record keeps exactly the version
+        its producer wrote — in particular a legacy version-less journal
+        line stays at 0 and always loses a federated last-writer-wins
+        merge, the same as legacy snapshot records. Already-stamped records
+        keep their stamp either way and fast-forward the local clock, so a
+        later local commit always outranks them."""
+        if stamp and rec.version <= 0:
+            rec.version = self.version + 1
         self.records[rec.size] = rec
         if per_policy is not None:
             self.per_policy[rec.size] = per_policy
-        self.version += 1
+        self.version = max(self.version + 1, rec.version)
 
     # -- persistence --------------------------------------------------------
     def save(self, path: str) -> None:
@@ -202,6 +228,9 @@ class TuningDatabase:
                 db.load_errors,
                 len(db.records),
             )
+        # resume the producer's commit clock so post-load commits outrank
+        # every loaded record in a federated merge
+        db.version = max((r.version for r in db.records.values()), default=0)
         if journal is not None:
             db.replay_journal(journal, missing_ok=True)
         return db
@@ -210,34 +239,66 @@ class TuningDatabase:
         """Re-apply an append-only JSONL journal (see :func:`journal_entry`)
         in order; later lines win. Returns the number of records applied;
         malformed lines are warned about and counted in ``load_errors``.
-        Legacy g-less lines replay with ``g = LEGACY_GRID``."""
+        Legacy g-less lines replay with ``g = LEGACY_GRID``.
+
+        Crash tolerance: a process dying mid-``append_journal`` leaves a
+        truncated final line — possibly ending inside a multi-byte UTF-8
+        sequence, which is why the file is read as bytes and decoded per
+        line (text-mode iteration would raise ``UnicodeDecodeError`` before
+        any handler ran). The torn line is skipped with a warning and
+        counted in ``load_errors``; every complete line before it replays
+        normally."""
         try:
-            f = open(path)
+            f = open(path, "rb")
         except FileNotFoundError:
             if missing_ok:
                 return 0
             raise
-        applied = 0
         with f:
-            for lineno, line in enumerate(f, 1):
-                line = line.strip()
-                if not line:
-                    continue
-                try:
-                    entry = json.loads(line)
-                    size = key_from_str(entry["key"])
-                    rec = dict(entry["record"])
-                    rec.pop("size", None)
-                    self.add_record(
-                        TuningRecord(size=size, **rec), entry.get("per_policy")
-                    )
-                    applied += 1
-                except (ValueError, IndexError, TypeError, KeyError) as e:
-                    self.load_errors += 1
+            raw_lines = f.read().split(b"\n")
+        last_lineno = max(
+            (i for i, raw in enumerate(raw_lines, 1) if raw.strip()), default=0
+        )
+        applied = 0
+        for lineno, raw in enumerate(raw_lines, 1):
+            if not raw.strip():
+                continue
+            try:
+                rec, per_policy = parse_journal_line(raw.decode("utf-8"))
+                # stamp=False: replay reconstructs producer state — legacy
+                # version-less lines must stay 0 (and lose merges), not be
+                # promoted to fresh local commits
+                self.add_record(rec, per_policy, stamp=False)
+                applied += 1
+            except (ValueError, IndexError, TypeError, KeyError) as e:
+                self.load_errors += 1
+                if lineno == last_lineno:
                     log.warning(
-                        "%s:%d: skipping malformed journal line: %s", path, lineno, e
+                        "%s:%d: skipping truncated final journal line "
+                        "(crash during append?): %s",
+                        path,
+                        lineno,
+                        e,
+                    )
+                else:
+                    log.warning(
+                        "%s:%d: skipping malformed journal line: %s",
+                        path,
+                        lineno,
+                        e,
                     )
         return applied
+
+
+def parse_journal_line(line: str) -> Tuple[TuningRecord, Optional[Dict[str, float]]]:
+    """Parse one journal line into (record, per_policy). Raises on any
+    malformed input (``replay_journal`` / shard mergers decide whether that
+    is fatal). Legacy lines parse with ``g = LEGACY_GRID``/``version = 0``."""
+    entry = json.loads(line)
+    size = key_from_str(entry["key"])
+    rec = dict(entry["record"])
+    rec.pop("size", None)
+    return TuningRecord(size=size, **rec), entry.get("per_policy")
 
 
 def journal_entry(
@@ -345,6 +406,19 @@ def measure_wallclock(
     return fn
 
 
+def shard_targets(sizes: Sequence, index: int, n_shards: int) -> List:
+    """Worker ``index``'s slice of a sweep: every ``n_shards``-th target
+    starting at ``index``. Strided (not contiguous) so the suite's
+    size-sorted cost profile balances across workers; the ``n_shards``
+    slices are disjoint and cover ``sizes`` exactly, which is what makes a
+    federated merge record-identical to the single-worker full sweep."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if not 0 <= index < n_shards:
+        raise ValueError(f"shard index {index} outside [0, {n_shards})")
+    return list(sizes)[index::n_shards]
+
+
 class Tuner:
     """Sweep (policy x tile config x grid size) per problem size; record
     winner and runner-up (runner-up = best configuration of the *second-best
@@ -422,11 +496,20 @@ class Tuner:
         sizes: Sequence,
         progress_every: int = 0,
         journal: Optional[str] = None,
+        shard: Optional[Tuple[int, int]] = None,
     ) -> TuningDatabase:
         """Tune a suite of targets (bare (M, N, K) sizes and/or GemmOps).
         With ``journal``, each record is also appended to the JSONL journal
         as it lands — the same format the online adaptive tuner emits, so an
-        offline sweep and a serving run can share one warm-start artifact."""
+        offline sweep and a serving run can share one warm-start artifact.
+
+        ``shard=(i, n)`` restricts the sweep to worker ``i``'s slice of the
+        target list (see :func:`shard_targets`): n workers each tune their
+        own slice — journaling to their own shard file — and
+        :func:`repro.core.federate.merge_journal_shards` reassembles the
+        exact database the unsharded sweep would have produced."""
+        if shard is not None:
+            sizes = shard_targets(sizes, *shard)
         db = TuningDatabase()
         for i, size in enumerate(sizes):
             rec, per_policy = self.tune_size(size)

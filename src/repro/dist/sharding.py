@@ -104,6 +104,31 @@ class ShardingPlan:
             (self.mesh.shape[a] for a in self._mesh_axes_for(logical)), start=1
         )
 
+    def gemm_div(self) -> Dict[str, int]:
+        """Per-shard GEMM divisor table for this mesh — the ``div`` dict
+        model layers thread into dispatch (``div.get("batch")`` /
+        ``div.get("model")``). Tokens shard over the batch axes (``pod`` x
+        ``data``); tensor-parallel weight dims (heads/ffn/vocab/experts)
+        ride the mesh's ``model`` axis. Dividing the global MNK by these is
+        what makes a :class:`~repro.core.op.GemmOp` fingerprint the *local*
+        per-device problem the Pallas kernel actually sees under
+        ``shard_map`` — so a tuning record produced on one host is an exact
+        database hit on every identically-sharded host, which is the
+        invariant federated tuning (``repro.core.federate``) relies on.
+
+        Caveat: this is the mesh-level table the model layers already
+        thread by hand; like those hand-built tables it does not see
+        :meth:`spec_for`'s per-array divisibility demotion. A weight dim
+        the solver demotes to replication (e.g. an odd vocab on a model=4
+        mesh) executes at its global size while the fingerprint still
+        divides — the same approximation every existing ``div`` consumer
+        makes. Exact per-dim divisors need the array's logical axes, which
+        only the call site knows."""
+        return {
+            "batch": self.axis_divisor("batch"),
+            "model": int(self.mesh.shape.get("model", 1)),
+        }
+
     def spec_for(self, spec: ArraySpec, *, uneven: bool = False) -> P:
         """PartitionSpec for one array, with demotion (see module doc)."""
         used: set = set()
@@ -159,6 +184,15 @@ def _constrain(x: jax.Array, axes: Sequence[Optional[str]], uneven: bool):
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(plan.mesh, pspec)
     )
+
+
+def ambient_gemm_div() -> Dict[str, int]:
+    """GEMM divisor table of the installed plan (see
+    :meth:`ShardingPlan.gemm_div`); empty — every divisor 1, fingerprints
+    key on global shapes — when no plan is installed, so single-device
+    tests and examples run unchanged."""
+    plan = current_plan()
+    return plan.gemm_div() if plan is not None else {}
 
 
 def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:

@@ -12,12 +12,27 @@ Online adaptation (miss-driven autotuning in the decode loop):
 ``--db`` warm-starts the selector from an offline snapshot; ``--journal`` is
 replayed on top at startup and appended to as serving traffic teaches the
 tuner new fingerprints, so the next run starts where this one left off.
+
+Federated serving (simulated K-process fleet):
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --requests 32 \
+      --adapt --workers 4 --merge-journals --journal artifacts/tuning_journal.jsonl
+
+``--workers K`` serves the request stream through K engines with fully
+separate selector/tuner/database state (what K serving processes would
+hold), each appending to its own journal shard ``<journal>.shard<i>``;
+``--merge-journals`` federates every existing shard into each worker's
+warm-start database (``repro.core.federate``), so a fingerprint one worker
+tuned yesterday is a database hit in every worker today. ``--mesh-model N``
+installs a host-mesh sharding plan so dispatch fingerprints key on the
+per-shard local MNK (mesh-aware federation across identically-sharded
+hosts).
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import glob
 import os
 import time
 
@@ -26,16 +41,33 @@ import numpy as np
 
 from repro.configs import list_archs
 from repro.core.adaptive import AdaptiveConfig, AdaptiveTuner
+from repro.core.federate import apply_journal_db, merge_journal_shards
 from repro.core.gemm import gemm_context
 from repro.core.selector import KernelSelector
 from repro.core.tuner import TuningDatabase
-from repro.dist.sharding import materialize_tree
+from repro.dist.sharding import ShardingPlan, materialize_tree, use_plan
+from repro.launch.mesh import make_host_mesh
 from repro.launch.train import preset_config
 from repro.models import build_model
 from repro.serve import ServeConfig, ServeEngine
 from repro.utils.logging import get_logger
 
 log = get_logger("launch.serve")
+
+
+def shard_journal_path(journal: str, worker: int, n_workers: int) -> str:
+    """Worker ``worker``'s private journal shard (the base path itself for a
+    single-worker run, preserving the PR-2 CLI contract)."""
+    return journal if n_workers <= 1 else f"{journal}.shard{worker}"
+
+
+def existing_journal_shards(journal: str) -> list:
+    """Every journal shard a previous (possibly differently-sized) fleet
+    left behind, base journal included."""
+    paths = sorted(glob.glob(f"{journal}.shard*"))
+    if os.path.exists(journal):
+        paths.insert(0, journal)
+    return paths
 
 
 def main() -> int:
@@ -90,9 +122,34 @@ def main() -> int:
         "--journal",
         default=None,
         help="append-only tuning journal: replayed on start, appended to by "
-        "--adapt commits",
+        "--adapt commits (per-worker shards <journal>.shard<i> when "
+        "--workers > 1)",
+    )
+    ap.add_argument(
+        "--workers",
+        type=int,
+        default=1,
+        help="simulate K serving processes with fully separate "
+        "selector/tuner state, each journaling to its own shard",
+    )
+    ap.add_argument(
+        "--merge-journals",
+        action="store_true",
+        help="federate every existing journal shard (<journal> + "
+        "<journal>.shard*) into each worker's warm-start database",
+    )
+    ap.add_argument(
+        "--mesh-model",
+        type=int,
+        default=0,
+        help="install a (data, model=N) host-mesh sharding plan so dispatch "
+        "fingerprints key on per-shard local MNK (0: no plan)",
     )
     args = ap.parse_args()
+    if args.workers < 1:
+        raise SystemExit(f"--workers must be >= 1, got {args.workers}")
+    if args.merge_journals and not args.journal:
+        raise SystemExit("--merge-journals requires --journal")
 
     cfg = preset_config(args.arch, args.preset)
     if args.dtype:
@@ -112,79 +169,176 @@ def main() -> int:
             raise SystemExit(f"bad --grid-sweep {args.grid_sweep!r}") from None
         if not grid_sizes or min(grid_sizes) < 1:
             raise SystemExit(f"bad --grid-sweep {args.grid_sweep!r}")
-    if args.db or args.journal or args.adapt:
+    use_artifacts = bool(args.db or args.journal or args.adapt)
+
+    def warm_db(w: int) -> TuningDatabase:
+        """Worker ``w``'s warm-start database — each simulated process
+        loads its own copy, exactly as K real processes would: the snapshot,
+        then (without --merge-journals) the base journal plus the worker's
+        OWN shard from the previous fleet run, or (with --merge-journals)
+        the federation of every shard the whole fleet ever wrote."""
         if args.db and os.path.exists(args.db):
-            db = TuningDatabase.load(args.db, journal=args.journal)
+            db = TuningDatabase.load(args.db)
         else:
             db = TuningDatabase()
-            if args.journal:
+        if args.journal:
+            if args.merge_journals:
+                shards = existing_journal_shards(args.journal)
+                if shards:
+                    # last-writer-wins among the peer shards, then applied
+                    # ON TOP of the snapshot (journals post-date it; their
+                    # producer clocks are not comparable to the snapshot's)
+                    merged, rep = merge_journal_shards(shards, missing_ok=True)
+                    apply_journal_db(db, merged)
+                    log.info(
+                        "federated warm start: %d shards -> %d records "
+                        "(%d conflicts, %d superseded, %d load errors)",
+                        rep.sources,
+                        len(db.records),
+                        rep.conflicts,
+                        rep.superseded,
+                        rep.load_errors,
+                    )
+            else:
                 db.replay_journal(args.journal, missing_ok=True)
-        sieve = db.build_sieve() if db.records else None
-        selector = KernelSelector(sieve=sieve, db=db, grid_sizes=grid_sizes)
-        log.info(
-            "selector warm-start: %d tuned records (%d dropped at load)",
-            len(db.records),
-            db.load_errors,
-        )
-    else:
-        selector = KernelSelector(grid_sizes=grid_sizes)
-    adaptive = None
-    if args.adapt:
-        adaptive = AdaptiveTuner(
-            selector,
-            config=AdaptiveConfig(
-                budget_s=args.adapt_budget,
-                hot_threshold=args.adapt_threshold,
-            ),
-            journal=args.journal,
-        )
-    with gemm_context(selector=selector) as ctx:
-        engine = ServeEngine(
-            model,
-            params,
-            ServeConfig(n_slots=args.slots, max_seq=args.max_seq, eos=-1),
-            adaptive=adaptive,
-            adapt_every=args.adapt_every if args.adapt else 0,
-        )
-        rng = np.random.default_rng(args.seed)
-        # prompt lengths must respect the engine's cache bound: submit()
-        # rejects len > max_seq
-        p_hi = min(64, args.max_seq + 1)
-        p_lo = min(8, p_hi - 1)
-        for _ in range(args.requests):
-            engine.submit(
-                rng.integers(1, cfg.vocab_size, size=int(rng.integers(p_lo, p_hi))),
-                max_new_tokens=args.max_new_tokens,
-                temperature=args.temperature,
+                own = shard_journal_path(args.journal, w, args.workers)
+                if own != args.journal:
+                    # a repeat fleet run must not silently cold-start: each
+                    # worker at least replays what IT learned last time
+                    db.replay_journal(own, missing_ok=True)
+                    siblings = [
+                        p
+                        for p in existing_journal_shards(args.journal)
+                        if p not in (args.journal, own)
+                    ]
+                    if siblings:
+                        log.info(
+                            "worker %d: %d sibling journal shards exist but "
+                            "--merge-journals is off; pass it to warm-start "
+                            "from the whole fleet",
+                            w,
+                            len(siblings),
+                        )
+        return db
+
+    def build_worker(w: int):
+        if use_artifacts:
+            db = warm_db(w)
+            sieve = db.build_sieve() if db.records else None
+            selector = KernelSelector(sieve=sieve, db=db, grid_sizes=grid_sizes)
+            log.info(
+                "worker %d warm-start: %d tuned records (%d dropped at load)",
+                w,
+                len(db.records),
+                db.load_errors,
             )
-        t0 = time.time()
-        done = engine.run()
-        dt = time.time() - t0
+        else:
+            selector = KernelSelector(grid_sizes=grid_sizes)
+        adaptive = None
+        if args.adapt:
+            adaptive = AdaptiveTuner(
+                selector,
+                config=AdaptiveConfig(
+                    budget_s=args.adapt_budget,
+                    hot_threshold=args.adapt_threshold,
+                ),
+                journal=shard_journal_path(args.journal, w, args.workers)
+                if args.journal
+                else None,
+            )
+        return selector, adaptive
+
+    plan = None
+    if args.mesh_model:
+        mesh = make_host_mesh(model=args.mesh_model)
+        plan = ShardingPlan(mesh)
+        log.info(
+            "mesh plan installed: %s -> gemm divisors %s",
+            dict(mesh.shape),
+            plan.gemm_div(),
+        )
+
+    # deterministic request stream, dealt round-robin across the workers
+    rng = np.random.default_rng(args.seed)
+    # prompt lengths must respect the engine's cache bound: submit()
+    # rejects len > max_seq
+    p_hi = min(64, args.max_seq + 1)
+    p_lo = min(8, p_hi - 1)
+    prompts = [
+        rng.integers(1, cfg.vocab_size, size=int(rng.integers(p_lo, p_hi)))
+        for _ in range(args.requests)
+    ]
+
+    done = []
+    engines = []
+    # build every worker's state BEFORE any engine serves: a real fleet's
+    # processes all start from the pre-run artifacts, so worker 1 must not
+    # warm-start from what worker 0 journaled moments ago in this same run
+    worker_state = [build_worker(w) for w in range(args.workers)]
+    t0 = time.time()
+    with use_plan(plan):
+        for w in range(args.workers):
+            selector, adaptive = worker_state[w]
+            with gemm_context(selector=selector) as ctx:
+                engine = ServeEngine(
+                    model,
+                    params,
+                    ServeConfig(n_slots=args.slots, max_seq=args.max_seq, eos=-1),
+                    adaptive=adaptive,
+                    adapt_every=args.adapt_every if args.adapt else 0,
+                )
+                for prompt in prompts[w :: args.workers]:
+                    engine.submit(
+                        prompt,
+                        max_new_tokens=args.max_new_tokens,
+                        temperature=args.temperature,
+                    )
+                done.extend(engine.run())
+                engines.append((w, engine, adaptive, ctx))
+    dt = time.time() - t0
     ntok = sum(len(r.out_tokens) for r in done)
     log.info(
-        "served %d requests, %d tokens in %.2fs (%.1f tok/s)",
+        "served %d requests, %d tokens in %.2fs (%.1f tok/s) across %d worker(s)",
         len(done),
         ntok,
         dt,
         ntok / max(dt, 1e-9),
+        args.workers,
     )
-    if adaptive is not None:
-        st = engine.dispatch_stats
+    for w, engine, adaptive, _ in engines:
+        if adaptive is not None:
+            st = engine.dispatch_stats
+            log.info(
+                "worker %d adaptation: %d misses -> %d records committed "
+                "(sieve generation %d, %d pending, db=%d records)",
+                w,
+                st.misses,
+                st.adaptations,
+                st.sieve_generation,
+                st.pending_hot,
+                st.db_records,
+            )
+    if args.workers > 1 and args.journal:
+        # federation summary: what the fleet collectively learned this run
+        shard_paths = [
+            shard_journal_path(args.journal, w, args.workers)
+            for w in range(args.workers)
+        ]
+        merged, rep = merge_journal_shards(shard_paths, missing_ok=True)
         log.info(
-            "online adaptation: %d misses -> %d records committed "
-            "(sieve generation %d, %d pending, db=%d records)",
-            st.misses,
-            st.adaptations,
-            st.sieve_generation,
-            st.pending_hot,
-            st.db_records,
+            "fleet journals federate to %d records (%d shards, %d conflicts); "
+            "re-run with --merge-journals to warm-start every worker from them",
+            len(merged.records),
+            rep.sources,
+            rep.conflicts,
         )
     # show the Stream-K++ dispatch decisions the decode GEMMs triggered
-    # (the engine mirrors its traces' selections whether it served under
+    # (each engine mirrors its traces' selections whether it served under
     # the ambient context or its own selector-scoped one)
     seen = {}
-    for e in engine.selection_log or ctx.log:
-        seen.setdefault((e.tag, e.local_mnk), e.selection)
+    for _, engine, _, ctx in engines:
+        for e in engine.selection_log or ctx.log:
+            seen.setdefault((e.tag, e.local_mnk), e.selection)
     log.info("distinct GEMM dispatches: %d", len(seen))
     for (tag, mnk), sel in sorted(seen.items())[:20]:
         log.info(

@@ -28,6 +28,7 @@ from contextlib import contextmanager
 from repro.core.adaptive import AdaptiveTuner
 from repro.core.gemm import current_log, current_selector, gemm_context
 from repro.core.selector import KernelSelector, SelectorStats
+from repro.dist.sharding import ambient_gemm_div
 from repro.utils.logging import get_logger
 
 log = get_logger("serve")
@@ -85,7 +86,12 @@ class ServeEngine:
         self.model = model
         self.params = params
         self.cfg = cfg
-        self.div = div or {}
+        # Mesh-aware dispatch fingerprints: when the caller installed a
+        # ShardingPlan (dist.sharding.use_plan) but passed no explicit div,
+        # derive the per-shard GEMM divisors from the plan — every decode
+        # GEMM then fingerprints the *local* per-device MNK, so tuning
+        # records federate across identically-sharded serving processes.
+        self.div = div if div is not None else ambient_gemm_div()
         # Online adaptation: an AdaptiveTuner rides the decode loop — every
         # ``adapt_every`` engine steps it gets one budgeted round to tune the
         # hottest untuned fingerprints the serving traffic produced. The
