@@ -25,7 +25,10 @@ from typing import Dict, List, Optional
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 N_SHAPES = 32
-DTYPES = ("float32", "bfloat16")
+#: per-shape dtype profiles: dense f32/bf16 plus the quantized-serving
+#: mixed profile (f32 activations x int8 weights, fused dequant) — the
+#: trajectory tracks whether the 1-byte B operand keeps flipping winners
+DTYPES = ("float32", "bfloat16", "float32*int8")
 
 
 def _sample_shapes(n: int = N_SHAPES) -> List[tuple]:
@@ -66,8 +69,13 @@ def _modeled_suite() -> Dict[str, dict]:
     for m, n, k in _sample_shapes():
         entry = {}
         for dt_name in DTYPES:
-            s = sel.select_op(GemmOp.plain(m, n, k, in_dtype=dt_name))
-            dt = costmodel.profile_for(dt_name, dt_name)
+            # mixed "a*w" profiles output at the activation dtype (the
+            # quantized-serving contract); uniform profiles at themselves
+            out_dt = dt_name.split("*", 1)[0]
+            s = sel.select_op(
+                GemmOp.plain(m, n, k, in_dtype=dt_name, out_dtype=out_dt)
+            )
+            dt = costmodel.profile_for(dt_name, out_dt)
             tflops = costmodel.gemm_tflops(
                 GemmShape(m, n, k), s.cfg, s.policy, g=s.g, dt=dt
             )

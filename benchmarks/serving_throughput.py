@@ -1,12 +1,18 @@
 """Wall-clock serving throughput (the one benchmark this CPU-only box can
 measure for real): tokens/s of the continuous-batching engine vs slot count
-on a ~10M-param model, with Stream-K++ dispatch active.
+on a ~10M-param model, with Stream-K++ dispatch active — plus the
+quantized-vs-f32 decode delta (int8 weights through the fused-dequant
+path, dispatching under mixed ``float32*int8`` fingerprints).
 
 The paper positions FP16 GEMM tuning for inference engines (§5.1); this is
 the engine-level view of the same workload. Absolute numbers are CPU-bound
-and meaningless for TPU; the *scaling shape* (throughput vs concurrency) and
-the dispatch-path overhead (selection happens at trace time — zero per-token
-cost) are the claims under test.
+and meaningless for TPU; the *scaling shape* (throughput vs concurrency),
+the dispatch-path overhead (selection happens at trace time — zero
+per-token cost), and the quantized path actually serving are the claims
+under test. The int8 B-operand traffic halving that motivates quantized
+decode is a TPU/HBM property the modeled-TFLOP/s trajectory
+(perf_trajectory.py) tracks; here the delta row only proves the quantized
+engine serves the same stream end to end.
 """
 
 from __future__ import annotations
@@ -43,19 +49,21 @@ def run() -> List[str]:
     )
     model = build_model(cfg)
     params = materialize_tree(model.param_specs(), jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
 
     rows = []
     sel = default_selector()
-    for slots in (1, 2, 4, 8):
-        with gemm_context(selector=sel):
+
+    def serve_stream(run_params, slots, selector):
+        with gemm_context(selector=selector):
             eng = ServeEngine(
-                model, params, ServeConfig(n_slots=slots, max_seq=128, eos=-1)
+                model, run_params, ServeConfig(n_slots=slots, max_seq=128, eos=-1)
             )
             n_req = slots * 3
+            stream_rng = np.random.default_rng(0)
             for _ in range(n_req):
                 eng.submit(
-                    rng.integers(1, cfg.vocab_size, size=8), max_new_tokens=16
+                    stream_rng.integers(1, cfg.vocab_size, size=8),
+                    max_new_tokens=16,
                 )
             # warm the jit caches with one step
             eng.step()
@@ -63,6 +71,10 @@ def run() -> List[str]:
             done = eng.run()
             dt = time.perf_counter() - t0
         ntok = sum(len(r.out_tokens) for r in done) or 1
+        return ntok, dt, n_req
+
+    for slots in (1, 2, 4, 8):
+        ntok, dt, n_req = serve_stream(params, slots, sel)
         rows.append(
             csv_row(
                 f"serve.throughput_slots{slots}",
@@ -75,6 +87,24 @@ def run() -> List[str]:
             "serve.dispatch_trace_time_only",
             0.0,
             f"{sel.stats.lookups} selections, all at trace time (0 per-token)",
+        )
+    )
+
+    # quantized-vs-f32 decode delta: same request stream, int8 weights with
+    # fused dequant epilogues, dispatching under float32*int8 fingerprints
+    qparams, n_quant = model.quantize_weights(params)
+    slots = 4
+    ntok_f, dt_f, _ = serve_stream(params, slots, default_selector())
+    qsel = default_selector()
+    ntok_q, dt_q, _ = serve_stream(qparams, slots, qsel)
+    f32_tps = ntok_f / dt_f
+    q_tps = ntok_q / dt_q
+    rows.append(
+        csv_row(
+            f"serve.throughput_int8_slots{slots}",
+            dt_q / ntok_q * 1e6,
+            f"{q_tps:.1f} tok/s int8 vs {f32_tps:.1f} f32 "
+            f"({q_tps / f32_tps:.2f}x, {n_quant} quantized leaves)",
         )
     )
     return rows

@@ -4,6 +4,11 @@ are the skinny-M regime where the paper's policies matter most — the script
 prints the dispatch decisions).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
+
+Extra flags pass through to the launcher, e.g. int8-weight serving with
+fused dequant epilogues (decode GEMMs fingerprint as ``float32*int8``):
+
+  PYTHONPATH=src python examples/serve_lm.py --quantize int8
 """
 
 import sys
@@ -20,7 +25,7 @@ def main():
         "--slots", "4",
         "--max-seq", "256",
         "--max-new-tokens", "16",
-    ]
+    ] + sys.argv[1:]
     return serve_main()
 
 

@@ -61,6 +61,12 @@ from repro.core.federate import (
     merge_journal_shards,
     merge_sieves,
 )
+from repro.core.quant import (
+    QuantizedTensor,
+    is_quantized,
+    quantize_lm_params,
+    quantize_weight,
+)
 from repro.core.selector import KernelSelector, Selection, default_selector
 from repro.core.adaptive import AdaptiveConfig, AdaptiveStats, AdaptiveTuner
 from repro.core.gemm import (
@@ -119,6 +125,10 @@ __all__ = [
     "merge_databases",
     "merge_journal_shards",
     "merge_sieves",
+    "QuantizedTensor",
+    "is_quantized",
+    "quantize_lm_params",
+    "quantize_weight",
     "KernelSelector",
     "Selection",
     "default_selector",

@@ -11,24 +11,28 @@ union instead of re-discovering what a sibling already tuned.
 Merge semantics:
 
   * **Records** — last-writer-wins per fingerprint key on the record's
-    ``version`` (the producer's commit clock). A version tie between
-    *differing* payloads is a real conflict (two workers tuned the same
-    fingerprint independently): it is counted in ``MergeReport.conflicts``
-    and resolved deterministically — higher measured tflops, then policy /
-    cfg / g name order — so the merged database is identical whatever order
-    the shards arrive in. Records that lose are counted in ``superseded``.
-    Sharded sweeps partition fingerprints disjointly, so an offline
-    federated sweep merges with zero conflicts and is record-identical
-    (modulo local commit clocks) to the single-worker full sweep.
+    hybrid ``(wall, version)`` commit stamp: the wall clock orders commits
+    *across* producers (a true time order, up to host clock sync), the
+    producer's ``version`` counter breaks sub-resolution ties *within*
+    one. A full stamp tie between *differing* payloads is a real conflict
+    (two workers tuned the same fingerprint at indistinguishable times):
+    it is counted in ``MergeReport.conflicts`` and resolved
+    deterministically — higher measured tflops, then policy / cfg / g name
+    order — so the merged database is identical whatever order the shards
+    arrive in. Records that lose are counted in ``superseded``. Sharded
+    sweeps partition fingerprints disjointly, so an offline federated
+    sweep merges with zero conflicts and is record-identical (modulo local
+    commit stamps) to the single-worker full sweep.
 
-    Clock caveat: ``version`` is a *per-producer* counter, not a global
-    wall clock — comparing stamps from unrelated producers is a
-    deterministic heuristic, not a time ordering. Where a genuine
-    precedence exists, express it structurally instead: journals replay
-    *on top of* the snapshot they post-date (``apply_journal_db`` /
-    ``TuningDatabase.load(path, journal=...)`` overwrite unconditionally),
-    and ``federate_selector`` merges into the worker's live database, whose
-    records stand unless a sibling's strictly outranks them.
+    Clock caveat: the wall half of the stamp is only as good as host clock
+    sync; where a *structural* precedence exists it still wins outright —
+    journals replay *on top of* the snapshot they post-date
+    (``apply_journal_db`` / ``TuningDatabase.load(path, journal=...)``
+    overwrite unconditionally, whatever either side's stamps say), and
+    ``federate_selector`` merges into the worker's live database, whose
+    records stand unless a sibling's strictly outranks them. Artifacts
+    written before the hybrid stamp parse with ``wall = 0.0`` and lose to
+    any wall-stamped record.
   * **Sieves** — :meth:`OpenSieve.merge` bitwise-ORs the per-policy Bloom
     filters (inserting a key sets the same bits whichever worker's filter it
     landed in, so the union is bit-identical to rebuilding from the merged
@@ -84,26 +88,35 @@ class MergeReport:
 
 
 def record_payload(rec: TuningRecord) -> TuningRecord:
-    """The record with its producer clock zeroed — what two workers must
-    agree on for their records to count as the *same* result. Sharded
-    sweeps of one suite produce per-shard clocks, so equality checks (and
-    conflict detection) must ignore ``version``."""
-    return dataclasses.replace(rec, version=0)
+    """The record with its hybrid commit stamp zeroed — what two workers
+    must agree on for their records to count as the *same* result. Sharded
+    sweeps of one suite produce per-shard clocks and per-run wall stamps,
+    so equality checks (and conflict detection) must ignore both
+    ``version`` and ``wall``."""
+    return dataclasses.replace(rec, version=0, wall=0.0)
+
+
+def _stamp(rec: TuningRecord) -> Tuple[float, int]:
+    """The hybrid commit stamp last-writer-wins orders on: wall clock
+    first (comparable across producers), producer version counter second
+    (breaks sub-resolution ties within one producer; sole order for
+    legacy wall-less artifacts, which all carry wall 0.0)."""
+    return (rec.wall, rec.version)
 
 
 def _wins(challenger: TuningRecord, incumbent: TuningRecord) -> bool:
-    """Deterministic total order for last-writer-wins: version first, then
-    measured tflops, then (policy, cfg, g) name order as the final
-    arbitrary-but-stable tiebreak. Symmetric: merge order never changes the
-    winner."""
+    """Deterministic total order for last-writer-wins: the hybrid
+    (wall, version) stamp first, then measured tflops, then
+    (policy, cfg, g) name order as the final arbitrary-but-stable
+    tiebreak. Symmetric: merge order never changes the winner."""
     return (
-        challenger.version,
+        *_stamp(challenger),
         challenger.tflops,
         challenger.policy,
         challenger.cfg,
         challenger.g,
     ) > (
-        incumbent.version,
+        *_stamp(incumbent),
         incumbent.tflops,
         incumbent.policy,
         incumbent.cfg,
@@ -124,7 +137,7 @@ def merge_records(
         report.examined += 1
         cur = into.records.get(rec.size)
         if cur is not None and record_payload(cur) != record_payload(rec):
-            if cur.version == rec.version:
+            if _stamp(cur) == _stamp(rec):
                 report.conflicts += 1
             report.superseded += 1
         if cur is None or _wins(rec, cur):
@@ -187,11 +200,11 @@ def apply_journal_db(
     """Apply journal-derived records ON TOP of a snapshot database —
     unconditional overwrite, the ``TuningDatabase.load(path, journal=...)``
     contract: a journal post-dates the snapshot it accompanies, so its
-    records win regardless of version stamps (which are per-producer
-    counters and NOT comparable across a snapshot/journal boundary — a
-    923-record snapshot's clock would otherwise permanently outrank a
-    fresh worker's low-numbered online commits). Producer stamps are
-    preserved; the clock fast-forwards."""
+    records win regardless of commit stamps. The structural precedence is
+    deliberate even now that stamps carry a wall clock: a snapshot
+    regenerated on a skewed (or simply later-running) host must never
+    outrank the online commits its own journal recorded after it.
+    Producer stamps are preserved; the clock fast-forwards."""
     for key, rec in journal_db.records.items():
         pp = journal_db.per_policy.get(key)
         if pp is None and key in into.per_policy:

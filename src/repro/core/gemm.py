@@ -44,6 +44,7 @@ import jax.numpy as jnp
 
 from repro.core.op import Epilogue, GemmOp, as_epilogue
 from repro.core.policies import Policy, TileConfig
+from repro.core.quant import QuantizedTensor, is_quantized
 from repro.core.selector import KernelSelector, Selection, default_selector
 from repro.core.tuner import LEGACY_GRID
 
@@ -54,12 +55,17 @@ _state = threading.local()
 # Backend registry
 # ---------------------------------------------------------------------------
 
-#: BackendFn(x, w, *, op, policy, cfg, g, bias, operand) -> out
+#: BackendFn(x, w, *, op, policy, cfg, g, bias, operand, scale) -> out
 #:   x: (G, M, K), w: (G, K, N), bias: (G, N) | None, operand: (G, M, N) | None
 #:   returns (G, M, N) in op.out_dtype. G == 1 for plain 2-D dispatches.
 #:   ``g`` is the selected grid size (persistent-workgroup count) the kernel
 #:   partitions the flattened iteration space over; backends without a grid
-#:   concept (xla) may ignore it.
+#:   concept (xla) may ignore it. ``scale``: (G, N) f32 — the
+#:   per-output-channel dequant vector of an int8-weight op (``w`` is then
+#:   the raw int8 values); backends must apply it to the f32 accumulator
+#:   BEFORE the op's epilogue stages (see ``QuantizedTensor``). The
+#:   dispatcher passes ``scale`` only for quantized ops, so backends that
+#:   predate it keep serving dense traffic and fail loudly on quantized.
 BackendFn = Callable[..., jax.Array]
 
 _BACKENDS: Dict[str, BackendFn] = {}
@@ -89,8 +95,15 @@ def get_backend(name: str) -> BackendFn:
         ) from None
 
 
-def _xla_backend(x, w, *, op: GemmOp, policy, cfg, g, bias, operand):
+def _xla_backend(x, w, *, op: GemmOp, policy, cfg, g, bias, operand, scale=None):
+    if w.dtype != x.dtype and not jnp.issubdtype(w.dtype, jnp.floating):
+        # int8-weight op: contract in f32 (conversion from int8 is exact),
+        # mirroring the kernels' mixed_dot widening
+        x = x.astype(jnp.float32)
+        w = w.astype(jnp.float32)
     acc = jnp.einsum("gmk,gkn->gmn", x, w, preferred_element_type=jnp.float32)
+    if scale is not None:
+        acc = acc * scale[:, None, :].astype(jnp.float32)
     acc = op.epilogue.apply(
         acc,
         bias=None if bias is None else bias[:, None, :],
@@ -100,7 +113,7 @@ def _xla_backend(x, w, *, op: GemmOp, policy, cfg, g, bias, operand):
 
 
 def _make_pallas_backend(interpret: bool) -> BackendFn:
-    def backend(x, w, *, op: GemmOp, policy, cfg, g, bias, operand):
+    def backend(x, w, *, op: GemmOp, policy, cfg, g, bias, operand, scale=None):
         from repro.kernels.streamk import ops as sk_ops
 
         # One pallas_call per group: trace cost grows with G (tracked by
@@ -121,6 +134,7 @@ def _make_pallas_backend(interpret: bool) -> BackendFn:
                     epilogue=op.epilogue,
                     bias=None if bias is None else bias[i],
                     operand=None if operand is None else operand[i],
+                    scale=None if scale is None else scale[i],
                 )
             )
         return jnp.stack(outs)
@@ -215,6 +229,7 @@ def _dispatch(
     g: Optional[int],
     bias: Optional[jax.Array],
     operand: Optional[jax.Array],
+    scale: Optional[jax.Array] = None,
 ) -> jax.Array:
     ctx = _ctx()
     if policy is None and cfg is None and g is None:
@@ -231,9 +246,15 @@ def _dispatch(
     policy, cfg, grid = sel.policy, sel.cfg, sel.g
     ctx.log.append(SelectionLogEntry(op, sel, tag))
     backend = get_backend(ctx.backend)
-    return backend(
-        x, w, op=op, policy=policy, cfg=cfg, g=grid, bias=bias, operand=operand
-    )
+    kwargs = dict(op=op, policy=policy, cfg=cfg, g=grid, bias=bias, operand=operand)
+    if scale is not None:
+        # only quantized ops pass the dequant operand: backends registered
+        # against the pre-quantization BackendFn signature keep serving
+        # dense traffic unchanged, and a quantized dispatch through one
+        # fails loudly (unexpected 'scale') instead of silently skipping
+        # the dequant stage
+        kwargs["scale"] = scale
+    return backend(x, w, **kwargs)
 
 
 def _check_epilogue(epilogue: Epilogue, bias, operand) -> None:
@@ -256,7 +277,7 @@ def _check_epilogue(epilogue: Epilogue, bias, operand) -> None:
 
 def gemm(
     x: jax.Array,
-    w: jax.Array,
+    w: Union[jax.Array, QuantizedTensor],
     *,
     divisors: Tuple[int, int, int] = (1, 1, 1),
     out_dtype=None,
@@ -276,7 +297,17 @@ def gemm(
     (``bias``: (N,), ``operand``: (..., N) matching the output).
     ``policy``/``cfg``/``g`` override selection (used by the tuner itself);
     otherwise the selector chooses all three jointly.
+
+    ``w`` may be a :class:`~repro.core.quant.QuantizedTensor` (int8 values +
+    per-output-channel scales): the op then fingerprints with the mixed
+    ``"<x_dtype>*int8"`` in_dtype — tuning/pruning independently of the
+    dense op at the same MNK — and the scales ride into the kernel's
+    flush/fix-up as a fused dequant epilogue stage.
     """
+    scale = None
+    if is_quantized(w):
+        scale = w.scales
+        w = w.values
     if x.shape[-1] != w.shape[0]:
         raise ValueError(f"gemm contraction mismatch: {x.shape} @ {w.shape}")
     epilogue = _infer_epilogue(epilogue, bias, operand)
@@ -305,6 +336,7 @@ def gemm(
         g=g,
         bias=None if bias is None else bias.reshape(1, n_global),
         operand=None if operand is None else operand.reshape(1, m_global, n_global),
+        scale=None if scale is None else scale.reshape(1, n_global),
     )
     return out.reshape(*lead, n_global)
 
@@ -325,6 +357,10 @@ def _gemm_stacked(
     bias: Optional[jax.Array],
     operand: Optional[jax.Array],
 ) -> jax.Array:
+    scale = None
+    if is_quantized(w):
+        scale = w.scales
+        w = w.values
     if x.ndim != 3 or w.ndim != 3:
         raise ValueError(
             f"gemm_{kind} expects x (G, M, K) and w (G, K, N); got "
@@ -351,13 +387,22 @@ def _gemm_stacked(
     if bias is not None and bias.ndim == 1:
         bias = jnp.broadcast_to(bias[None], (g, n))
     return _dispatch(
-        x, w, op, tag=tag, policy=policy, cfg=cfg, g=grid, bias=bias, operand=operand
+        x,
+        w,
+        op,
+        tag=tag,
+        policy=policy,
+        cfg=cfg,
+        g=grid,
+        bias=bias,
+        operand=operand,
+        scale=scale,
     )
 
 
 def gemm_grouped(
     x: jax.Array,
-    w: jax.Array,
+    w: Union[jax.Array, QuantizedTensor],
     *,
     divisors: Tuple[int, int, int] = (1, 1, 1),
     g_divisor: int = 1,
@@ -378,7 +423,10 @@ def gemm_grouped(
     expert-parallel sharding factor) so grouped shapes tune and prune
     independently of the plain 2-D path. ``bias``: (G, N) or (N,);
     ``operand``: (G, M, N). ``grid`` overrides the selected grid size
-    (named to avoid clashing with the group count ``G``).
+    (named to avoid clashing with the group count ``G``). ``w`` may be a
+    stacked :class:`~repro.core.quant.QuantizedTensor` (int8 values
+    (G, K, N) + scales (G, N)) — the MoE expert weights of the quantized
+    serving path.
     """
     return _gemm_stacked(
         "grouped",
@@ -399,7 +447,7 @@ def gemm_grouped(
 
 def gemm_batched(
     x: jax.Array,
-    w: jax.Array,
+    w: Union[jax.Array, QuantizedTensor],
     *,
     divisors: Tuple[int, int, int] = (1, 1, 1),
     g_divisor: int = 1,

@@ -1,0 +1,183 @@
+"""Quantized weight tensors for the int8-weight serving path.
+
+The cost model has scored mixed activation x weight profiles (``"a*w"``
+dtype fingerprints) since the dtype-aware PR, but until now no kernel could
+*execute* them: every low-precision fingerprint the selector could reason
+about was a scenario the system could not serve. :class:`QuantizedTensor`
+closes that gap — a weight matrix stored as int8 values plus per-output-
+channel f32 scales (symmetric, zero-point-free), dequantized inside the
+GEMM kernels as a fused epilogue stage:
+
+    C = (A @ V) * s        # s broadcast over the N (output-channel) axis
+
+which is exact algebra for per-output-channel scales — ``A @ (V * s)``
+factors column-wise — so the kernel accumulates the raw int8 weights (B
+operand moves 1 byte/element through HBM, the actual serving win in the
+skinny-M decode regime) and applies ``s`` once per output tile at the
+DP-flush / Stream-K fix-up, composing in front of the existing
+bias/activation/binary epilogues.
+
+Layout contract: weights are stored ``(..., K, N)`` — contraction axis
+second-to-last — matching every projection in ``repro.models`` (attention
+``(d, h*dh)``, MLP ``(d, f)``/``(f, d)``, stacked MoE experts ``(E, d, f)``
+and scan-stacked ``(L, ..., K, N)``). Scales drop exactly the K axis:
+``scales.shape == values.shape[:-2] + values.shape[-1:]``.
+
+``QuantizedTensor`` is a registered JAX pytree whose leading axes slice
+consistently across both leaves, so scan-stacked layer parameters, pytree
+donation, and ``jax.tree.map``-based cache/parameter surgery all work
+unchanged — a quantized weight leaf is a drop-in replacement for the dense
+array anywhere it feeds :func:`repro.core.gemm.gemm`.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+#: int8 symmetric range: +-127 (the -128 code is unused so the range is
+#: symmetric and negation is exact).
+_QMAX = 127.0
+
+#: parameter-tree keys :func:`quantize_lm_params` converts: the dense
+#: projection weights every ``repro.models`` architecture routes through
+#: ``repro.core.gemm`` with a (..., K, N) layout. Routers, norms and the
+#: embedding table stay full precision (tiny, precision-critical, or used
+#: as a gather table / transposed tied head rather than a GEMM B operand).
+QUANT_WEIGHT_NAMES = frozenset(
+    {"wq", "wk", "wv", "wo", "w_in", "w_out", "w_gate", "lm_head"}
+)
+
+
+@jax.tree_util.register_pytree_node_class
+class QuantizedTensor:
+    """Symmetric per-output-channel int8 weight: ``values`` (..., K, N) int8
+    + ``scales`` (..., N) f32. ``dequantize()`` reconstructs the dense
+    weight; the GEMM kernels never do — they fuse the scale into their
+    flush/fix-up epilogue instead."""
+
+    def __init__(self, values: jax.Array, scales: jax.Array):
+        values_shape = jnp.shape(values)
+        scales_shape = jnp.shape(scales)
+        if len(values_shape) < 2:
+            raise ValueError(
+                f"QuantizedTensor values must be at least 2-D (..., K, N); "
+                f"got shape {values_shape}"
+            )
+        want = values_shape[:-2] + values_shape[-1:]
+        if tuple(scales_shape) != tuple(want):
+            raise ValueError(
+                f"scale shape {scales_shape} does not match values "
+                f"{values_shape}: per-output-channel scales must drop "
+                f"exactly the contraction axis -> expected {want}"
+            )
+        self.values = values
+        self.scales = scales
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.values, self.scales), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        values, scales = children
+        # jit/scan internals flatten through with tracers/placeholder leaves
+        # whose shapes may be unavailable mid-transform: rebuild without
+        # re-validating (construction already validated the concrete tree)
+        obj = cls.__new__(cls)
+        obj.values = values
+        obj.scales = scales
+        return obj
+
+    # -- array-like surface (what gemm/model plumbing touches) -------------
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return tuple(self.values.shape)
+
+    @property
+    def ndim(self) -> int:
+        return self.values.ndim
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    def __repr__(self) -> str:
+        return (
+            f"QuantizedTensor(values={self.values.shape}:{self.values.dtype}, "
+            f"scales={self.scales.shape})"
+        )
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        """Dense reconstruction ``V * s`` — the reference the differential
+        numerics harness compares the fused kernels against."""
+        w = self.values.astype(jnp.float32) * self.scales[..., None, :].astype(
+            jnp.float32
+        )
+        return w.astype(dtype)
+
+
+def is_quantized(x: Any) -> bool:
+    return isinstance(x, QuantizedTensor)
+
+
+def quantize_weight(w: jax.Array, *, axis: int = -2) -> QuantizedTensor:
+    """Symmetric per-output-channel int8 quantization of a (..., K, N)
+    weight; ``axis`` is the contraction axis the scale reduces over.
+
+    Round-to-nearest: the worst-case elementwise reconstruction error is
+    ``scale / 2`` where ``scale = amax / 127`` per output channel — the
+    bound the property tests assert and the differential tolerances build
+    on."""
+    if w.ndim < 2:
+        raise ValueError(f"quantize_weight expects a matrix, got shape {w.shape}")
+    axis = axis % w.ndim
+    if axis != w.ndim - 2:
+        raise ValueError(
+            f"contraction axis must be -2 in the (..., K, N) layout; got "
+            f"axis {axis} for shape {w.shape}"
+        )
+    wf = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=axis)
+    scales = jnp.maximum(amax, 1e-8) / _QMAX
+    q = jnp.clip(
+        jnp.round(wf / scales[..., None, :]), -_QMAX, _QMAX
+    ).astype(jnp.int8)
+    return QuantizedTensor(q, scales)
+
+
+def quantize_lm_params(
+    params: Dict[str, Any], names: frozenset = QUANT_WEIGHT_NAMES
+) -> Tuple[Dict[str, Any], int]:
+    """One-shot weight quantization at model load (the serve CLI's
+    ``--quantize int8``): every dense float leaf under a key in ``names``
+    becomes a :class:`QuantizedTensor`; everything else is untouched.
+    Returns (new tree, number of leaves quantized). Scan-stacked leaves
+    ``(L, ..., K, N)`` quantize per layer per output channel — the leading
+    axes ride along in the scale shape, so ``lax.scan`` slices both leaves
+    coherently."""
+    n_quantized = 0
+
+    def walk(node):
+        nonlocal n_quantized
+        if isinstance(node, dict):
+            out = {}
+            for key, sub in node.items():
+                if (
+                    key in names
+                    and not isinstance(sub, dict)
+                    and not is_quantized(sub)
+                    and hasattr(sub, "ndim")
+                    and sub.ndim >= 2
+                    and jnp.issubdtype(jnp.asarray(sub).dtype, jnp.floating)
+                ):
+                    out[key] = quantize_weight(sub)
+                    n_quantized += 1
+                else:
+                    out[key] = walk(sub)
+            return out
+        return node
+
+    return walk(params), n_quantized

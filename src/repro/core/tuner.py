@@ -29,8 +29,9 @@ Backward compatibility: records/journal lines written before ``g`` became a
 tuning axis carry no ``g`` field — they parse with ``g = LEGACY_GRID`` (8,
 the grid every legacy kernel launch used), so old artifacts load and
 dispatch identically. Likewise records written before federation carry no
-``version`` — they parse with ``version = 0`` and lose last-writer-wins
-merges against any stamped record (see :mod:`repro.core.federate`).
+``version``/``wall`` hybrid stamp — they parse with ``version = 0`` /
+``wall = 0.0`` and lose last-writer-wins merges against any stamped record
+(see :mod:`repro.core.federate`).
 
 Federated sweeps: ``Tuner.tune(shard=(i, n))`` tunes only the ``i``-th of
 ``n`` deterministic, disjoint slices of the target list (strided, so the
@@ -120,6 +121,14 @@ class TuningRecord:
     #: journals/snapshots, so federated merges can apply last-writer-wins
     #: per key. Pre-federation artifacts parse with 0 (always superseded).
     version: int = 0
+    #: wall-clock half of the hybrid commit stamp (unix seconds, stamped by
+    #: ``add_record`` alongside ``version``): per-producer version counters
+    #: are not comparable across producers, so cross-producer
+    #: last-writer-wins orders on ``(wall, version)`` — the wall clock
+    #: makes it a true time order between producers, the producer clock
+    #: breaks sub-resolution ties within one. Artifacts written before this
+    #: field parse with 0.0 and lose to any wall-stamped record.
+    wall: float = 0.0
 
     @property
     def gain_over_runner_up(self) -> float:
@@ -170,16 +179,19 @@ class TuningDatabase:
         Overwrites any existing record for the same key and bumps
         ``version`` so sieve-generation machinery sees the change.
 
-        ``stamp`` controls the commit clock: fresh local commits (the
-        default) arriving unstamped get ``version = clock + 1``; replay
-        paths pass ``stamp=False`` so a record keeps exactly the version
-        its producer wrote — in particular a legacy version-less journal
-        line stays at 0 and always loses a federated last-writer-wins
+        ``stamp`` controls the hybrid commit stamp: fresh local commits
+        (the default) arriving unstamped get ``version = clock + 1`` plus
+        the current wall clock in ``wall``; replay paths pass
+        ``stamp=False`` so a record keeps exactly the (wall, version) its
+        producer wrote — in particular a legacy stamp-less journal line
+        stays at (0.0, 0) and always loses a federated last-writer-wins
         merge, the same as legacy snapshot records. Already-stamped records
         keep their stamp either way and fast-forward the local clock, so a
         later local commit always outranks them."""
         if stamp and rec.version <= 0:
             rec.version = self.version + 1
+            if rec.wall <= 0.0:
+                rec.wall = time.time()
         self.records[rec.size] = rec
         if per_policy is not None:
             self.per_policy[rec.size] = per_policy

@@ -39,7 +39,7 @@ import jax
 from repro.core.op import Epilogue, as_epilogue
 
 
-def apply_epilogue(acc, epilogue, bias=None, operand=None):
+def apply_epilogue(acc, epilogue, bias=None, operand=None, scale=None):
     """Epilogue applied to the f32 accumulator before the final cast/store —
     the Composable-Kernel-style fusion the paper's library is built from (CK
     composes GEMM + epilogue functors; ours compose the same way on the
@@ -48,7 +48,38 @@ def apply_epilogue(acc, epilogue, bias=None, operand=None):
     ``epilogue`` is an :class:`repro.core.op.Epilogue` (legacy bare
     activation strings still accepted). ``bias``/``operand`` are the already
     block-sliced extra inputs for bias-add and binary (swiglu-mul /
-    residual-add) epilogues.
+    residual-add) epilogues. ``scale`` is the per-output-channel dequant
+    row vector of an int8-weight op (see :mod:`repro.core.quant`): it
+    multiplies the raw accumulator FIRST — restoring the real-valued
+    product ``(A @ V) * s == A @ (V * s)`` — so bias/activation/binary
+    stages compose on dequantized values exactly as they do for dense
+    weights.
     """
     spec: Epilogue = as_epilogue(epilogue)
+    if scale is not None:
+        acc = acc * scale.astype(jnp.float32)
     return spec.apply(acc, bias=bias, operand=operand)
+
+
+def prep_scale(scale, n, bn):
+    """Per-output-channel dequant vector -> the padded (1, Np) f32 row the
+    flush/fix-up kernels block-slice (one definition of the layout for all
+    three kernel families). ``scale``: (N,) or (1, N)."""
+    if scale is None:
+        return None
+    return pad_to(scale.reshape(1, n).astype(jnp.float32), (1, bn))
+
+
+def mixed_dot(a_blk, b_blk):
+    """One k-iteration MAC handling mixed activation x weight dtypes.
+
+    Same-dtype blocks keep the legacy MXU path (bf16 x bf16 / f32 x f32,
+    f32 accumulation) bit-for-bit. Mixed blocks — f32/bf16 activations
+    against int8 weight tiles — widen both operands to f32 in VMEM before
+    the dot: the int8 tile already paid its 1-byte HBM fare (the point of
+    weight quantization), and int8 -> f32 conversion is exact, so the MAC
+    is numerically the dense f32 MAC on dequant-without-scale values."""
+    if a_blk.dtype != b_blk.dtype:
+        a_blk = a_blk.astype(jnp.float32)
+        b_blk = b_blk.astype(jnp.float32)
+    return jnp.dot(a_blk, b_blk, preferred_element_type=jnp.float32)

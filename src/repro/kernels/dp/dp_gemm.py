@@ -28,7 +28,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.policies import TileConfig
 from repro.core.workpart import cdiv
-from repro.kernels.common import CompilerParams, apply_epilogue
+from repro.kernels.common import CompilerParams, apply_epilogue, mixed_dot
 
 
 def _dp_kernel(
@@ -37,15 +37,17 @@ def _dp_kernel(
     *rest,
     ipt: int,
     epilogue="none",
+    has_scale: bool = False,
     has_bias: bool = False,
     has_operand: bool = False,
 ):
-    """rest = [bias_ref?, operand_ref?, c_in_ref?] + (c_ref, acc_ref).
+    """rest = [scale_ref?, bias_ref?, operand_ref?, c_in_ref?] + (c_ref, acc_ref).
 
     ``c_in_ref`` (the aliased C input under ``tile_offset > 0``) is never
     read — aliasing alone preserves unvisited tiles."""
     c_ref, acc_ref = rest[-2], rest[-1]
     extras = list(rest[:-2])
+    scale_ref = extras.pop(0) if has_scale else None
     bias_ref = extras.pop(0) if has_bias else None
     operand_ref = extras.pop(0) if has_operand else None
 
@@ -55,7 +57,7 @@ def _dp_kernel(
     def _init():
         acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
 
-    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+    acc_ref[...] += mixed_dot(a_ref[...], b_ref[...])
 
     @pl.when(k == ipt - 1)
     def _flush():
@@ -64,6 +66,7 @@ def _dp_kernel(
             epilogue,
             bias=None if bias_ref is None else bias_ref[...],
             operand=None if operand_ref is None else operand_ref[...],
+            scale=None if scale_ref is None else scale_ref[...],
         )
         c_ref[...] = out.astype(c_ref.dtype)
 
@@ -80,12 +83,15 @@ def dp_gemm_region(
     epilogue="none",
     bias=None,
     operand=None,
+    scale=None,
     g: int = 0,
 ):
     """Tiled GEMM over output tiles [tile_offset, m_tiles*n_tiles).
 
     a: (Mp, Kp), b: (Kp, Np) — already padded to tile multiples; so are the
-    optional epilogue operands ``bias`` (1, Np) and ``operand`` (Mp, Np).
+    optional epilogue operands ``bias`` (1, Np), ``operand`` (Mp, Np) and
+    the int8-weight dequant row vector ``scale`` (1, Np), applied to the
+    accumulator at the flush before the other epilogue stages.
     ``c_init``: existing C buffer whose tiles < tile_offset must be kept
     (required iff tile_offset > 0).
 
@@ -139,6 +145,9 @@ def dp_gemm_region(
 
     operands = [a, b]
     in_specs = [a_spec, b_spec]
+    if scale is not None:
+        operands.append(scale)
+        in_specs.append(pl.BlockSpec((1, cfg.bn), lambda i, k: (0, tn(i))))
     if bias is not None:
         operands.append(bias)
         in_specs.append(pl.BlockSpec((1, cfg.bn), lambda i, k: (0, tn(i))))
@@ -149,6 +158,7 @@ def dp_gemm_region(
         _dp_kernel,
         ipt=ipt,
         epilogue=epilogue,
+        has_scale=scale is not None,
         has_bias=bias is not None,
         has_operand=operand is not None,
     )

@@ -7,7 +7,7 @@ import functools
 import jax
 
 from repro.core.policies import TileConfig
-from repro.kernels.common import pad_to, unpad
+from repro.kernels.common import pad_to, prep_scale, unpad
 from repro.kernels.dp.dp_gemm import dp_gemm_region
 
 
@@ -20,11 +20,13 @@ def gemm(
     g: int = 0,
     interpret: bool = False,
     out_dtype=None,
+    scale: jax.Array = None,
 ) -> jax.Array:
     """``a @ b`` with the conventional output-tile decomposition.
 
     ``g`` > 0 launches whole waves of ``g`` programs (the tuned grid size);
-    0 keeps the legacy one-program-per-tile grid."""
+    0 keeps the legacy one-program-per-tile grid. ``scale`` (N,) fuses an
+    int8-weight op's per-output-channel dequant into the tile flush."""
     if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
         raise ValueError(f"bad gemm operands {a.shape} @ {b.shape}")
     m, _ = a.shape
@@ -32,5 +34,8 @@ def gemm(
     out_dtype = out_dtype or a.dtype
     ap = pad_to(a, (cfg.bm, cfg.bk))
     bp = pad_to(b, (cfg.bk, cfg.bn))
-    cp = dp_gemm_region(ap, bp, cfg, out_dtype=out_dtype, interpret=interpret, g=g)
+    scalep = prep_scale(scale, n, cfg.bn)
+    cp = dp_gemm_region(
+        ap, bp, cfg, out_dtype=out_dtype, interpret=interpret, g=g, scale=scalep
+    )
     return unpad(cp, (m, n))

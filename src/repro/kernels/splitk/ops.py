@@ -9,7 +9,7 @@ import jax.numpy as jnp
 
 from repro.core.policies import TileConfig
 from repro.core.workpart import cdiv
-from repro.kernels.common import pad_to, unpad
+from repro.kernels.common import pad_to, prep_scale, unpad
 from repro.kernels.splitk.splitk_gemm import splitk_partials
 
 
@@ -25,9 +25,14 @@ def gemm(
     g: int = 0,
     interpret: bool = False,
     out_dtype=None,
+    scale: jax.Array = None,
 ) -> jax.Array:
     """``a @ b`` with a fixed split-K factor ``s``. ``g`` > 0 launches the
-    tile dimension in whole waves of ``g`` programs (the tuned grid size)."""
+    tile dimension in whole waves of ``g`` programs (the tuned grid size).
+    ``scale`` (N,) is an int8-weight op's per-output-channel dequant vector;
+    split-K's epilogue IS the partial-sum reduction, so the scale applies
+    there — once, after the splits combine (linearity makes per-split
+    scaling equivalent but ``s`` times the multiplies)."""
     if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
         raise ValueError(f"bad gemm operands {a.shape} @ {b.shape}")
     m, k = a.shape
@@ -38,5 +43,8 @@ def gemm(
     ap = pad_to(a, (cfg.bm, k_unit))
     bp = pad_to(b, (k_unit, cfg.bn))
     parts = splitk_partials(ap, bp, cfg, s, interpret=interpret, g=g)
-    cp = jnp.sum(parts, axis=0).astype(out_dtype)
-    return unpad(cp, (m, n))
+    cp = jnp.sum(parts, axis=0)
+    scalep = prep_scale(scale, n, cfg.bn)
+    if scalep is not None:
+        cp = cp * scalep
+    return unpad(cp.astype(out_dtype), (m, n))

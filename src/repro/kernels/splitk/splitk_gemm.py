@@ -21,7 +21,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.policies import TileConfig
 from repro.core.workpart import cdiv
-from repro.kernels.common import CompilerParams
+from repro.kernels.common import CompilerParams, mixed_dot
 
 
 def _splitk_kernel(a_ref, b_ref, p_ref, acc_ref, *, kps: int):
@@ -31,7 +31,7 @@ def _splitk_kernel(a_ref, b_ref, p_ref, acc_ref, *, kps: int):
     def _init():
         acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
 
-    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+    acc_ref[...] += mixed_dot(a_ref[...], b_ref[...])
 
     @pl.when(k == kps - 1)
     def _flush():

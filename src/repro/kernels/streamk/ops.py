@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from repro.core.policies import DP, Policy, PolicyKind, TileConfig
 from repro.core.workpart import GemmShape, cdiv, partition
-from repro.kernels.common import pad_to, unpad
+from repro.kernels.common import pad_to, prep_scale, unpad
 from repro.kernels.dp.dp_gemm import dp_gemm_region
 from repro.kernels.streamk.streamk_gemm import streamk_fixup, streamk_phase1
 
@@ -60,6 +60,7 @@ def gemm(
     epilogue="none",
     bias: jax.Array = None,
     operand: jax.Array = None,
+    scale: jax.Array = None,
 ) -> jax.Array:
     """``a @ b`` under a Stream-K++ scheduling policy, with an optional fused
     epilogue (Composable-Kernel style: applied post-accumulation in the
@@ -68,6 +69,11 @@ def gemm(
     a: (M, K), b: (K, N) -> (M, N). Accumulation is always f32. ``epilogue``
     is an :class:`repro.core.op.Epilogue` or legacy activation string;
     ``bias`` (N,) and ``operand`` (M, N) feed its bias-add / binary stages.
+    ``scale`` (N,) is the per-output-channel dequant vector of an
+    int8-weight op (``b`` int8): it enters every policy's flush/fix-up as
+    an extra blocked operand ahead of the other epilogue stages, so the
+    kernels accumulate raw int8 weights and never materialise a dense
+    dequantized B.
     """
     if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
         raise ValueError(f"bad gemm operands {a.shape} @ {b.shape}")
@@ -79,8 +85,9 @@ def gemm(
     bp = pad_to(b, (cfg.bk, cfg.bn))
     biasp = None if bias is None else pad_to(bias.reshape(1, n), (1, cfg.bn))
     operandp = None if operand is None else pad_to(operand, (cfg.bm, cfg.bn))
+    scalep = prep_scale(scale, n, cfg.bn)
     part = partition(GemmShape(m, n, k), cfg, g, policy)
-    epi = dict(epilogue=epilogue, bias=biasp, operand=operandp)
+    epi = dict(epilogue=epilogue, bias=biasp, operand=operandp, scale=scalep)
 
     if part.sk_tiles == 0:
         # policy degraded to pure DP (DP itself, or a HYBRID whose remainder

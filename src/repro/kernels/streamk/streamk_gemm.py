@@ -46,7 +46,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.workpart import Partition, cdiv
-from repro.kernels.common import CompilerParams, apply_epilogue
+from repro.kernels.common import CompilerParams, apply_epilogue, mixed_dot
 
 
 def _range_math(part: Partition):
@@ -91,9 +91,7 @@ def _streamk_kernel(a_ref, b_ref, partials_ref, *, part: Partition):
 
     @pl.when(valid)
     def _mac():
-        acc = jnp.dot(
-            a_ref[...], b_ref[...], preferred_element_type=jnp.float32
-        )
+        acc = mixed_dot(a_ref[...], b_ref[...])
         partials_ref[...] += acc[None, None]
 
 
@@ -168,12 +166,14 @@ def _fixup_kernel(
     *rest,
     part: Partition,
     epilogue="none",
+    has_scale: bool = False,
     has_bias: bool = False,
     has_operand: bool = False,
 ):
-    """rest = [bias_ref?, operand_ref?] + (c_ref,)."""
+    """rest = [scale_ref?, bias_ref?, operand_ref?] + (c_ref,)."""
     c_ref = rest[-1]
     extras = list(rest[:-1])
+    scale_ref = extras.pop(0) if has_scale else None
     bias_ref = extras.pop(0) if has_bias else None
     operand_ref = extras.pop(0) if has_operand else None
     ipt, total, ipw, mc = _range_math(part)
@@ -194,26 +194,30 @@ def _fixup_kernel(
         epilogue,
         bias=None if bias_ref is None else bias_ref[...],
         operand=None if operand_ref is None else operand_ref[...],
+        scale=None if scale_ref is None else scale_ref[...],
     )
     c_ref[0] = out.astype(c_ref.dtype)
 
 
 def streamk_fixup(
     partials, part: Partition, out_dtype, *, interpret: bool = False,
-    epilogue="none", bias=None, operand=None,
+    epilogue="none", bias=None, operand=None, scale=None,
 ):
     """Reduce contributor slots per SK tile -> C tiles, shaped
     (sk_tiles, bm, bn). The epilogue (activation, bias-add, swiglu-mul /
     residual operand) fuses here — after the full accumulation — so it costs
-    no extra HBM pass. ``bias`` (1, Np) / ``operand`` (Mp, Np) are padded
-    full-size arrays; their blocks are gathered per SK tile in row-major
-    tile order (matching ``_scatter_sk_tiles``)."""
+    no extra HBM pass; an int8-weight op's dequant ``scale`` (1, Np) applies
+    to the reduced accumulator first (see ``apply_epilogue``). ``bias``
+    (1, Np) / ``operand`` (Mp, Np) are padded full-size arrays; their
+    blocks are gathered per SK tile in row-major tile order (matching
+    ``_scatter_sk_tiles``)."""
     cfg = part.cfg
     nt = part.n_tiles
     kernel = functools.partial(
         _fixup_kernel,
         part=part,
         epilogue=epilogue,
+        has_scale=scale is not None,
         has_bias=bias is not None,
         has_operand=operand is not None,
     )
@@ -223,6 +227,9 @@ def streamk_fixup(
             (1, partials.shape[1], cfg.bm, cfg.bn), lambda t: (t, 0, 0, 0)
         )
     ]
+    if scale is not None:
+        operands.append(scale)
+        in_specs.append(pl.BlockSpec((1, cfg.bn), lambda t: (0, t % nt)))
     if bias is not None:
         operands.append(bias)
         in_specs.append(pl.BlockSpec((1, cfg.bn), lambda t: (0, t % nt)))

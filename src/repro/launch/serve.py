@@ -4,6 +4,14 @@ Example:
   PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --preset 100m \
       --requests 16 --max-new-tokens 32
 
+Quantized serving (int8 weights, fused dequant epilogues):
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --requests 16 \
+      --quantize int8 --adapt --journal artifacts/tuning_journal.jsonl
+
+``--quantize int8`` converts every projection weight to a QuantizedTensor at
+load; decode GEMMs dispatch under mixed ``'<act>*int8'`` fingerprints, so
+they tune/journal/warm-start independently of the f32 ops at the same MNK.
+
 Online adaptation (miss-driven autotuning in the decode loop):
   PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --requests 16 \
       --adapt --adapt-every 4 --adapt-budget 0.05 \
@@ -82,6 +90,15 @@ def main() -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dtype", default="float32")
     ap.add_argument(
+        "--quantize",
+        default="none",
+        choices=["none", "int8"],
+        help="one-shot weight quantization at load: projection weights "
+        "become int8 QuantizedTensors (per-output-channel symmetric "
+        "scales, dequant fused into the GEMM kernels) — decode GEMMs then "
+        "fingerprint/tune under the mixed '<act>*int8' dtype profile",
+    )
+    ap.add_argument(
         "--adapt",
         action="store_true",
         help="enable online miss-driven autotuning in the decode loop",
@@ -158,6 +175,14 @@ def main() -> int:
         raise SystemExit("serve CLI drives decoder-only archs; see examples/ for enc-dec")
     model = build_model(cfg)
     params = materialize_tree(model.param_specs(), jax.random.PRNGKey(args.seed))
+    if args.quantize == "int8":
+        # every decoder-only arch serves through LM, which owns the
+        # quantization entry point (enc-dec was rejected above)
+        params, n_quant = model.quantize_weights(params)
+        log.info(
+            "quantized %d weight leaves to int8 (per-output-channel scales)",
+            n_quant,
+        )
 
     grid_sizes = None
     if args.grid_sweep:

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.core.gemm import gemm, gemm_grouped
 from repro.core.op import Epilogue
+from repro.core.quant import is_quantized
 from repro.dist.sharding import ArraySpec, constrain, constrain_uneven
 from repro.models.config import ModelConfig
 
@@ -477,7 +478,11 @@ def moe_apply(
     if cfg.moe_impl in ("shard_map", "shard_map_bf16"):
         from repro.dist.sharding import current_plan
 
-        if current_plan() is not None:
+        # quantized expert weights fall through to the capacity-dispatch
+        # path: shard_map in_specs are rank-pinned P(...) specs for dense
+        # (E, K, N) arrays and cannot describe a QuantizedTensor's
+        # (values, scales) leaf pair — semantics are identical either way
+        if current_plan() is not None and not is_quantized(p["w_in"]):
             return moe_apply_shard_map(p, x, cfg, div=div)
         # no mesh installed (CPU tests): fall through — semantics identical
     hinted = cfg.moe_impl == "hinted"

@@ -47,6 +47,19 @@ class LM:
         assert cfg.family in ("dense", "moe", "ssm", "hybrid", "vlm")
         self.cfg = cfg
 
+    # -- weight quantization ------------------------------------------------
+    def quantize_weights(self, params: Params) -> Tuple[Params, int]:
+        """One-shot int8 weight quantization for serving: every dense
+        projection leaf (attention/MLP/MoE-expert weights, the untied
+        lm_head, the shared hybrid block) becomes a
+        :class:`~repro.core.quant.QuantizedTensor`; embeddings, routers and
+        norms stay full precision. Scan-stacked leaves quantize per layer
+        per output channel, so the stacked decode scan slices values and
+        scales coherently. Returns (quantized tree, leaves converted)."""
+        from repro.core.quant import quantize_lm_params
+
+        return quantize_lm_params(params)
+
     # -- layer metadata ------------------------------------------------------
     def layer_flags(self) -> Dict[str, jnp.ndarray]:
         """Per-layer scanned flags: ``is_global`` (gemma3 local:global),

@@ -57,7 +57,7 @@ def _key(t):
     return t.key if isinstance(t, GemmOp) else tuple(t)
 
 
-def _rec(size=(64, 512, 256), policy="dp", tflops=1.0, version=0, g=8):
+def _rec(size=(64, 512, 256), policy="dp", tflops=1.0, version=0, g=8, wall=0.0):
     return TuningRecord(
         size=size,
         policy=policy,
@@ -68,6 +68,7 @@ def _rec(size=(64, 512, 256), policy="dp", tflops=1.0, version=0, g=8):
         dp_best_tflops=tflops,
         g=g,
         version=version,
+        wall=wall,
     )
 
 
@@ -277,6 +278,115 @@ def test_add_record_preserves_producer_stamp_on_replay():
     db.add_record(stamped)
     assert db.records[stamped.size].version == 9
     assert db.version == 9  # clock fast-forwarded, not reset
+
+
+# -- hybrid (wall, version) commit stamp -------------------------------------
+
+
+def test_add_record_stamps_hybrid_wall_clock():
+    """Fresh commits get both halves of the hybrid stamp; replay
+    (stamp=False) preserves whatever the producer wrote — including the
+    legacy wall-less 0.0."""
+    db = TuningDatabase()
+    db.add_record(_rec())
+    fresh = db.records[(64, 512, 256)]
+    assert fresh.version == 1 and fresh.wall > 0.0
+    replayed = TuningDatabase()
+    legacy = _rec(size=(1, 2, 3), version=0, wall=0.0)
+    replayed.add_record(legacy, stamp=False)
+    assert replayed.records[(1, 2, 3)].wall == 0.0
+    carried = _rec(size=(4, 5, 6), version=7, wall=123.5)
+    replayed.add_record(carried, stamp=False)
+    assert replayed.records[(4, 5, 6)].wall == 123.5
+
+
+def test_lww_newer_wall_beats_higher_version_either_order():
+    """The ROADMAP follow-up this stamp exists for: version is a
+    per-producer counter, so a long-lived producer's huge clock must not
+    outrank a sibling's genuinely newer commit. Wall time orders
+    cross-producer merges; merge order never changes the winner."""
+    long_lived = _rec(policy="dp", tflops=9.0, version=500, wall=100.0)
+    fresh = _rec(policy="all_sk", tflops=3.0, version=3, wall=200.0)
+    for order in ([long_lived, fresh], [fresh, long_lived]):
+        db = TuningDatabase()
+        report = merge_records(db, [(r, None) for r in order])
+        assert db.records[fresh.size].policy == "all_sk"
+        assert report.conflicts == 0  # stamps differ: ordinary supersede
+        assert report.superseded == 1
+
+
+def test_lww_wall_tie_falls_back_to_producer_version():
+    a = _rec(policy="dp", tflops=9.0, version=2, wall=150.0)
+    b = _rec(policy="all_sk", tflops=3.0, version=5, wall=150.0)
+    for order in ([a, b], [b, a]):
+        db = TuningDatabase()
+        merge_records(db, [(r, None) for r in order])
+        assert db.records[b.size].policy == "all_sk"  # higher version wins
+
+
+def test_legacy_wall_less_records_lose_to_any_wall_stamped():
+    legacy = _rec(policy="dp", tflops=9.0, version=10**6, wall=0.0)
+    stamped = _rec(policy="all_sk", tflops=0.5, version=1, wall=1.0)
+    for order in ([legacy, stamped], [stamped, legacy]):
+        db = TuningDatabase()
+        merge_records(db, [(r, None) for r in order])
+        assert db.records[stamped.size].policy == "all_sk"
+
+
+def test_full_stamp_tie_counts_conflict_and_is_deterministic():
+    a = _rec(policy="dp", tflops=5.0, version=3, wall=42.0)
+    b = _rec(policy="sk_one_tile", tflops=6.0, version=3, wall=42.0)
+    winners = set()
+    for order in ([a, b], [b, a]):
+        db = TuningDatabase()
+        report = merge_records(db, [(r, None) for r in order])
+        assert report.conflicts == 1
+        winners.add(db.records[a.size].policy)
+    assert winners == {"sk_one_tile"}  # higher tflops, whatever the order
+
+
+def test_record_payload_ignores_hybrid_stamp():
+    """Sharded-sweep identity: the same tuning result committed by two
+    workers at different times is the SAME record — differing stamps must
+    not read as a conflict."""
+    a = _rec(version=1, wall=10.0)
+    b = _rec(version=4, wall=99.0)
+    assert record_payload(a) == record_payload(b)
+    db = TuningDatabase()
+    report = merge_records(db, [(a, None), (b, None)])
+    assert report.conflicts == 0
+
+
+def test_journal_beats_snapshot_with_newer_wall_stamp(tmp_path):
+    """Merge-ordering regression at the snapshot/journal boundary: the
+    precedence is structural — a snapshot regenerated later (newer wall,
+    bigger producer clock) must still lose to the journal records that
+    post-date it logically, via both apply_journal_db and the
+    load(path, journal=...) path."""
+    key = (64, 512, 256)
+    snap_rec = _rec(size=key, policy="dp", tflops=9.0, version=500, wall=2e9)
+    journal_rec = _rec(size=key, policy="all_sk", tflops=3.0, version=3, wall=1.0)
+
+    snapshot = TuningDatabase()
+    snapshot.add_record(snap_rec, stamp=False)
+    journal_db = TuningDatabase()
+    journal_db.add_record(journal_rec, stamp=False)
+    apply_journal_db(snapshot, journal_db)
+    assert snapshot.records[key].policy == "all_sk"
+    assert snapshot.records[key].wall == 1.0  # producer stamp preserved
+
+    snap_path = tmp_path / "db.json"
+    journal_path = tmp_path / "journal.jsonl"
+    fresh = TuningDatabase()
+    fresh.add_record(snap_rec, stamp=False)
+    fresh.save(str(snap_path))
+    journal_path.write_text(journal_entry(journal_rec) + "\n")
+    loaded = TuningDatabase.load(str(snap_path), journal=str(journal_path))
+    assert loaded.records[key].policy == "all_sk"
+    # but a *federated* merge of unrelated producers DOES order on wall
+    db = TuningDatabase()
+    merge_records(db, [(snap_rec, None), (journal_rec, None)])
+    assert db.records[key].policy == "dp"
 
 
 # -- cross-worker federation (the serving-path acceptance criterion) ---------

@@ -1,0 +1,344 @@
+"""Differential numerics sweep for the quantized-weight serving path.
+
+Every fused int8-weight kernel is compared against the *dequantize-then-
+``jnp.dot``* reference — the dense f32 GEMM on ``QuantizedTensor.
+dequantize()`` — across all 8 policies x grid sizes x operand-dtype modes
+x epilogues, extending the ``test_policy_degenerate`` pattern to the
+quantized path. The kernels compute ``(A @ V) * s`` where the reference
+computes ``A @ (V * s)``: exact algebra for per-output-channel scales, so
+the only divergence is floating-point reassociation (plus bf16 MAC
+rounding when activations are bf16).
+
+Tolerances (documented per dtype mode, asserted below):
+
+  ==================  =====================================  ==============
+  mode                what runs in the kernel                rtol / atol
+  ==================  =====================================  ==============
+  f32                 dense f32 x f32, f32 accumulation      1e-4 / 1e-4
+  int8 (f32 acts)     f32 x int8 widened to f32, f32 acc     1e-4 / 1e-4
+  bf16                dense bf16 x bf16, f32 accumulation    2e-2 / 2e-2
+  int8 (bf16 acts)    bf16 acts widened to f32 x int8        2e-2 / 2e-2
+  ==================  =====================================  ==============
+
+f32-act modes see only reassociation error; bf16-act modes inherit the
+bf16 input-rounding noise of the dense bf16 path (the quantized kernel is
+never *worse* than dense bf16, because the int8->f32 weight conversion is
+exact).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.gemm import gemm, gemm_context, gemm_grouped
+from repro.core.op import Epilogue, GemmOp
+from repro.core.policies import ALL_POLICIES, ALL_SK, DP, HYBRIDS, TileConfig
+from repro.core.quant import quantize_weight
+from repro.core.selector import KernelSelector, default_selector
+from repro.core.tuner import Tuner, TuningDatabase
+from repro.kernels.dp import ops as dp_ops
+from repro.kernels.splitk import ops as splitk_ops
+from repro.kernels.streamk import ops as sk_ops
+
+CFG = TileConfig(8, 128, 128)
+ODD = (17, 200, 300)  # ragged on every dim: padding on M, N and K
+
+#: the dtype-mode axis of the sweep: (activation dtype, weights quantized?)
+MODES = {
+    "f32": (jnp.float32, False),
+    "bf16": (jnp.bfloat16, False),
+    "int8": (jnp.float32, True),
+    "int8_bf16act": (jnp.bfloat16, True),
+}
+
+#: documented per-dtype-mode tolerances (see module docstring)
+TOLS = {
+    "f32": dict(rtol=1e-4, atol=1e-4),
+    "bf16": dict(rtol=2e-2, atol=2e-2),
+    "int8": dict(rtol=1e-4, atol=1e-4),
+    "int8_bf16act": dict(rtol=2e-2, atol=2e-2),
+}
+
+
+def _problem(m, n, k, mode, seed=0):
+    """(a, b_operand, scale, reference-weight) for one dtype mode: the
+    kernel runs (a, b_operand, scale); the oracle contracts a against the
+    reference weight (the dequantized master for quantized modes)."""
+    act_dtype, quantized = MODES[mode]
+    r = np.random.default_rng(seed)
+    a = jnp.asarray(r.normal(size=(m, k)), act_dtype)
+    w = jnp.asarray(r.normal(size=(k, n)), jnp.float32)
+    if quantized:
+        q = quantize_weight(w)
+        return a, q.values, q.scales, q.dequantize()
+    w = w.astype(act_dtype)
+    return a, w, None, w
+
+
+def _oracle(a, w_ref, epilogue=None, bias=None, operand=None):
+    acc = jnp.dot(
+        a.astype(jnp.float32),
+        w_ref.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    if epilogue is not None:
+        acc = epilogue.apply(acc, bias=bias, operand=operand)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# all policies x grid sizes x dtype modes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", list(MODES), ids=list(MODES))
+@pytest.mark.parametrize("g", [4, 16])
+@pytest.mark.parametrize("policy", ALL_POLICIES, ids=lambda p: p.name)
+def test_all_policies_grids_dtypes_match_dequant_reference(policy, g, mode):
+    m, n, k = ODD
+    a, b, scale, w_ref = _problem(m, n, k, mode)
+    want = _oracle(a, w_ref)
+    got = sk_ops.gemm(
+        a,
+        b,
+        policy=policy,
+        cfg=CFG,
+        g=g,
+        interpret=True,
+        out_dtype=jnp.float32,
+        scale=scale,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOLS[mode])
+
+
+# ---------------------------------------------------------------------------
+# dequant composes in front of the bias/activation/binary epilogues
+# ---------------------------------------------------------------------------
+
+EPILOGUES = [
+    Epilogue(bias=True, activation="gelu"),
+    Epilogue(binary="mul_silu"),
+    Epilogue(bias=True, activation="silu", binary="add"),
+]
+
+
+@pytest.mark.parametrize("g", [4, 16])
+@pytest.mark.parametrize("epi", EPILOGUES, ids=lambda e: e.name)
+@pytest.mark.parametrize(
+    "policy", [DP, ALL_SK, HYBRIDS[0], HYBRIDS[3]], ids=lambda p: p.name
+)
+def test_int8_dequant_composes_with_epilogues(policy, epi, g):
+    m, n, k = 24, 384, 640  # 3x3 tiles over g=4: quantized remainder wave
+    a, b, scale, w_ref = _problem(m, n, k, "int8", seed=2)
+    r = np.random.default_rng(3)
+    bias = jnp.asarray(r.normal(size=(n,)), jnp.float32) if epi.bias else None
+    operand = (
+        jnp.asarray(r.normal(size=(m, n)), jnp.float32)
+        if epi.binary != "none"
+        else None
+    )
+    want = _oracle(a, w_ref, epilogue=epi, bias=bias, operand=operand)
+    got = sk_ops.gemm(
+        a,
+        b,
+        policy=policy,
+        cfg=CFG,
+        g=g,
+        interpret=True,
+        out_dtype=jnp.float32,
+        epilogue=epi,
+        bias=bias,
+        operand=operand,
+        scale=scale,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), **TOLS["int8"]
+    )
+
+
+# ---------------------------------------------------------------------------
+# the dp / splitk baseline families fuse the same dequant stage
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("g", [0, 3, 16])
+def test_dp_ops_int8_scale_matches_reference(g):
+    a, b, scale, w_ref = _problem(*ODD, "int8", seed=4)
+    got = dp_ops.gemm(
+        a, b, cfg=CFG, g=g, interpret=True, out_dtype=jnp.float32, scale=scale
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(_oracle(a, w_ref)), **TOLS["int8"]
+    )
+
+
+@pytest.mark.parametrize("g", [0, 3, 8])
+def test_splitk_ops_int8_scale_matches_reference(g):
+    a, b, scale, w_ref = _problem(24, 256, 512, "int8", seed=5)
+    got = splitk_ops.gemm(
+        a, b, cfg=CFG, s=2, g=g, interpret=True, out_dtype=jnp.float32,
+        scale=scale,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(_oracle(a, w_ref)), **TOLS["int8"]
+    )
+
+
+# ---------------------------------------------------------------------------
+# dispatch layer: QuantizedTensor weights through both backends
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+def test_dispatch_quantized_weight_matches_reference(backend):
+    r = np.random.default_rng(7)
+    x = jnp.asarray(r.normal(size=(2, 9, 96)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(96, 64)), jnp.float32)
+    q = quantize_weight(w)
+    want = jnp.einsum("bsk,kn->bsn", x, q.dequantize())
+    with gemm_context(backend=backend) as ctx:
+        got = gemm(x, q, tag="q")
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), **TOLS["int8"]
+    )
+    op = ctx.log[-1].op
+    # the mixed a*w fingerprint keys the quantized op away from the dense
+    # f32 op at the same MNK (own tuning records, own Bloom pruning)
+    assert op.in_dtype == "float32*int8"
+    assert op.key != (18, 64, 96)
+
+
+def test_dispatch_grouped_quantized_with_epilogue():
+    r = np.random.default_rng(8)
+    x = jnp.asarray(r.normal(size=(3, 4, 32)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(3, 32, 48)), jnp.float32)
+    q = quantize_weight(w)
+    want = jax.nn.gelu(jnp.einsum("gmk,gkn->gmn", x, q.dequantize()))
+    with gemm_context(backend="xla") as ctx:
+        got = gemm_grouped(x, q, epilogue="gelu")
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), **TOLS["int8"]
+    )
+    assert ctx.log[-1].op.in_dtype == "float32*int8"
+    assert ctx.log[-1].op.g == 3
+
+
+def test_dispatch_backends_agree_on_quantized_weight():
+    """xla and pallas_interpret must implement the same dequant contract."""
+    r = np.random.default_rng(9)
+    x = jnp.asarray(r.normal(size=(5, 40)), jnp.float32)
+    q = quantize_weight(jnp.asarray(r.normal(size=(40, 56)), jnp.float32))
+    outs = {}
+    for backend in ("xla", "pallas_interpret"):
+        with gemm_context(backend=backend):
+            outs[backend] = np.asarray(gemm(x, q))
+    np.testing.assert_allclose(
+        outs["xla"], outs["pallas_interpret"], rtol=1e-5, atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# selection + tuning: quantized fingerprints are first-class tuning targets
+# ---------------------------------------------------------------------------
+
+
+def _quant_op(m, n, k):
+    return GemmOp.plain(
+        m, n, k, in_dtype="float32*int8", out_dtype="float32"
+    )
+
+
+def test_some_suite_shape_selects_differently_for_int8_weight():
+    """Acceptance: the cost model scores the 1-byte B operand for real —
+    at least one suite shape must pick a different (policy, cfg, g) for
+    the int8-weight profile than for f32 at the same MNK."""
+    from repro.configs.gemm_suite import suite
+
+    sel = default_selector()
+    diverged = 0
+    for m, n, k in suite()[::12][:80]:
+        s_f = sel.select_op(GemmOp.plain(m, n, k))
+        s_q = sel.select_op(_quant_op(m, n, k))
+        if (s_f.policy, s_f.cfg, s_f.g) != (s_q.policy, s_q.cfg, s_q.g):
+            diverged += 1
+    assert diverged > 0
+
+
+def test_serving_stack_quantized_vs_dequantized_dense_model():
+    """End-to-end model-level differential: an LM with QuantizedTensor
+    weight leaves must decode within f32-reassociation tolerance of the
+    SAME model holding the dequantized dense weights — the fused in-kernel
+    dequant is the only difference between the two parameter trees."""
+    from conftest import tiny
+
+    from repro.core.quant import QuantizedTensor
+    from repro.dist.sharding import materialize_tree
+    from repro.models import build_model
+    from repro.serve import ServeConfig, ServeEngine
+
+    cfg = tiny("granite-8b")
+    model = build_model(cfg)
+    params = materialize_tree(model.param_specs(), jax.random.PRNGKey(0))
+    qparams, n_quant = model.quantize_weights(params)
+    assert n_quant > 0
+    dense = jax.tree.map(
+        lambda leaf: leaf.dequantize(cfg.dtype) if isinstance(leaf, QuantizedTensor) else leaf,
+        qparams,
+        is_leaf=lambda x: isinstance(x, QuantizedTensor),
+    )
+
+    tokens = jnp.asarray([[5, 9, 2, 7, 1, 3]], jnp.int32)
+    lq, cache_q = model.prefill(qparams, tokens, max_seq=16)
+    ld, cache_d = model.prefill(dense, tokens, max_seq=16)
+    np.testing.assert_allclose(
+        np.asarray(lq), np.asarray(ld), rtol=1e-4, atol=1e-4
+    )
+    step = jnp.asarray([[int(jnp.argmax(lq[0, -1]))]], jnp.int32)
+    pos = jnp.asarray([tokens.shape[1]])
+    lq2, _ = model.decode_step(qparams, cache_q, step, pos)
+    ld2, _ = model.decode_step(dense, cache_d, step, pos)
+    np.testing.assert_allclose(
+        np.asarray(lq2), np.asarray(ld2), rtol=1e-4, atol=1e-4
+    )
+
+    # and the engine serves the quantized tree, dispatching every decode
+    # projection under the mixed float32*int8 fingerprint
+    with gemm_context(selector=default_selector()):
+        eng = ServeEngine(
+            model, qparams, ServeConfig(n_slots=2, max_seq=32, eos=-1)
+        )
+        eng.submit(np.array([5, 9, 2, 7], np.int32), max_new_tokens=3)
+        done = eng.run()
+    assert len(done) == 1 and len(done[0].out_tokens) == 3
+    quant_tags = {
+        e.tag for e in eng.selection_log if e.op.in_dtype == "float32*int8"
+    }
+    assert {"attn.q", "mlp.in", "lm_head"} <= quant_tags
+
+
+def test_quantized_fingerprint_tunes_journals_and_warm_starts(tmp_path):
+    """A mixed-dtype op tunes under its own key, journals, and replays to
+    an exact database hit — the serve-path warm-start contract."""
+    journal = str(tmp_path / "j.jsonl")
+    op = _quant_op(64, 512, 256)
+    db = Tuner().tune([op], journal=journal)
+    assert op.key in db.records
+    # measured at the real widths: the record differs from the same-MNK
+    # f32 sweep in at least one of (policy, cfg, g, tflops)
+    f32_rec = Tuner().tune_size((64, 512, 256))[0]
+    q_rec = db.records[op.key]
+    assert (q_rec.policy, q_rec.cfg, q_rec.g, q_rec.tflops) != (
+        f32_rec.policy,
+        f32_rec.cfg,
+        f32_rec.g,
+        f32_rec.tflops,
+    )
+    # warm-start replay: a fresh selector resolves the quantized op from
+    # the replayed journal as a tuned hit, not a fallback
+    warm = TuningDatabase()
+    warm.replay_journal(journal)
+    sel = KernelSelector(sieve=warm.build_sieve(), db=warm)
+    s = sel.select_op(op)
+    assert s.source == "tuned"
+    assert (s.policy.name, s.cfg.name, s.g) == (q_rec.policy, q_rec.cfg, q_rec.g)

@@ -1,0 +1,234 @@
+"""Property-based coverage (via tests/hypothesis_compat) for the quantized
+serving path and the tuning-journal format:
+
+  * quantize -> dequantize roundtrip error bounds: round-to-nearest
+    symmetric per-output-channel quantization reconstructs within
+    ``scale / 2`` elementwise (``scale = amax / 127`` per channel);
+  * scale-shape validation: ``QuantizedTensor`` rejects scales that do not
+    drop exactly the contraction axis;
+  * ``TuningRecord`` journal encode/decode roundtrip, including the
+    quantized-dtype op keys (``"<a>*<w>"`` in_dtype forms) and the hybrid
+    ``(wall, version)`` commit stamp — with legacy stamp-less / g-less
+    lines still parsing unchanged.
+
+Deterministic spot-checks of each invariant run even without hypothesis
+installed (the property tests then skip via the compat shim).
+"""
+
+import dataclasses
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quant import QuantizedTensor, quantize_lm_params, quantize_weight
+from repro.core.tuner import (
+    LEGACY_GRID,
+    TuningRecord,
+    journal_entry,
+    parse_journal_line,
+)
+
+from tests.hypothesis_compat import given, settings, st
+
+
+# ---------------------------------------------------------------------------
+# roundtrip error bounds
+# ---------------------------------------------------------------------------
+
+
+def _assert_roundtrip_bound(w: np.ndarray):
+    q = quantize_weight(jnp.asarray(w, jnp.float32))
+    err = np.abs(np.asarray(q.dequantize()) - w)
+    # round-to-nearest: |x - s*round(x/s)| <= s/2 per element, channelwise
+    bound = np.asarray(q.scales)[..., None, :] / 2.0
+    assert np.all(err <= bound + 1e-7), (err.max(), bound.max())
+    assert np.asarray(q.values).dtype == np.int8
+    assert np.abs(np.asarray(q.values)).max() <= 127
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=9),
+    st.integers(min_value=1, max_value=9),
+    st.floats(min_value=1e-3, max_value=1e3),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_roundtrip_error_bound_property(k, n, amp, seed):
+    r = np.random.default_rng(seed)
+    _assert_roundtrip_bound(amp * r.normal(size=(k, n)))
+
+
+def test_roundtrip_error_bound_spot():
+    r = np.random.default_rng(0)
+    _assert_roundtrip_bound(r.normal(size=(64, 48)))
+    _assert_roundtrip_bound(1e-4 * r.normal(size=(8, 8)))  # tiny magnitudes
+    _assert_roundtrip_bound(r.normal(size=(3, 16, 8)))  # stacked (G, K, N)
+
+
+def test_roundtrip_zero_and_constant_channels():
+    # all-zero channels must not divide by zero; constant channels land
+    # exactly on a code point (amax -> code +-127)
+    w = np.zeros((16, 4), np.float32)
+    w[:, 1] = 2.5
+    w[:, 2] = -1.25
+    q = quantize_weight(jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(q.dequantize()), w, rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# scale-shape validation
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=6),
+    st.integers(min_value=1, max_value=6),
+    st.integers(min_value=0, max_value=3),
+)
+def test_scale_shape_validation_property(k, n, extra):
+    values = jnp.zeros((k, n), jnp.int8)
+    good = jnp.ones((n,), jnp.float32)
+    QuantizedTensor(values, good)  # the contract shape constructs
+    bad_shape = (n + extra + 1,)
+    with pytest.raises(ValueError):
+        QuantizedTensor(values, jnp.ones(bad_shape, jnp.float32))
+
+
+def test_scale_shape_validation_spot():
+    values = jnp.zeros((4, 32, 8), jnp.int8)
+    QuantizedTensor(values, jnp.ones((4, 8), jnp.float32))
+    for bad in ((8,), (4, 32), (4, 8, 1), (32, 8)):
+        with pytest.raises(ValueError, match="scale shape"):
+            QuantizedTensor(values, jnp.ones(bad, jnp.float32))
+    with pytest.raises(ValueError, match="at least 2-D"):
+        QuantizedTensor(jnp.zeros((8,), jnp.int8), jnp.ones((8,), jnp.float32))
+    with pytest.raises(ValueError, match="contraction axis"):
+        quantize_weight(jnp.ones((4, 4), jnp.float32), axis=-1)
+
+
+def test_quantize_lm_params_converts_only_projection_leaves():
+    params = {
+        "embed": jnp.ones((32, 8), jnp.float32),
+        "layers": {
+            "attn": {"wq": jnp.ones((2, 8, 8), jnp.float32)},
+            "mlp": {
+                "w_in": jnp.ones((2, 8, 16), jnp.float32),
+                "w_out": jnp.ones((2, 16, 8), jnp.float32),
+            },
+            "norm1": {"scale": jnp.ones((8,), jnp.float32)},
+            "moe": {"router": jnp.ones((8, 4), jnp.float32)},
+        },
+    }
+    out, n = quantize_lm_params(params)
+    assert n == 3
+    assert isinstance(out["layers"]["attn"]["wq"], QuantizedTensor)
+    assert isinstance(out["layers"]["mlp"]["w_in"], QuantizedTensor)
+    # embeddings / norms / routers stay dense
+    assert not isinstance(out["embed"], QuantizedTensor)
+    assert not isinstance(out["layers"]["norm1"]["scale"], QuantizedTensor)
+    assert not isinstance(out["layers"]["moe"]["router"], QuantizedTensor)
+    # stacked leaves carry the leading axis into the scales, so lax.scan
+    # slices both leaves coherently
+    assert out["layers"]["attn"]["wq"].scales.shape == (2, 8)
+
+
+# ---------------------------------------------------------------------------
+# journal encode/decode roundtrip (quantized-dtype keys + hybrid stamp)
+# ---------------------------------------------------------------------------
+
+_DTYPES = ("float32", "bfloat16", "int8", "float16")
+_POLICIES = ("dp", "all_sk", "sk1dp", "sk4dp")
+
+
+def _roundtrip(rec: TuningRecord, per_policy=None):
+    parsed, pp = parse_journal_line(journal_entry(rec, per_policy))
+    assert parsed == rec
+    assert pp == per_policy
+    return parsed
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=8192),
+    st.integers(min_value=1, max_value=8192),
+    st.integers(min_value=1, max_value=8192),
+    st.integers(min_value=1, max_value=64),
+    st.sampled_from(_DTYPES),
+    st.sampled_from(_DTYPES),
+    st.sampled_from(_POLICIES),
+    st.integers(min_value=0, max_value=10**6),
+    st.floats(min_value=0.0, max_value=2e9, allow_nan=False),
+)
+def test_journal_roundtrip_property(m, n, k, g, a_dt, w_dt, policy, version, wall):
+    in_dt = a_dt if a_dt == w_dt else f"{a_dt}*{w_dt}"
+    key = (m, n, k, 1, in_dt, a_dt, "none")
+    rec = TuningRecord(
+        size=key,
+        policy=policy,
+        cfg="8x128x512",
+        tflops=1.5,
+        runner_up_policy="dp",
+        runner_up_tflops=1.0,
+        dp_best_tflops=1.0,
+        g=g,
+        version=version,
+        wall=wall,
+    )
+    _roundtrip(rec, {"dp": 1.0, policy: 1.5})
+
+
+def test_journal_roundtrip_quantized_key_spot():
+    rec = TuningRecord(
+        size=(55, 512, 512, 1, "float32*int8", "float32", "bias+gelu"),
+        policy="all_sk",
+        cfg="64x128x256",
+        tflops=7.1,
+        runner_up_policy="dp",
+        runner_up_tflops=7.0,
+        dp_best_tflops=7.0,
+        g=4,
+        version=3,
+        wall=1.7e9,
+    )
+    parsed = _roundtrip(rec)
+    assert parsed.size[4] == "float32*int8"
+    assert parsed.wall == 1.7e9
+
+
+def test_legacy_journal_lines_parse_unchanged():
+    """Lines written before g / version / wall existed must parse with the
+    documented defaults and an unchanged dispatch payload."""
+    rec = TuningRecord(
+        size=(64, 512, 256),
+        policy="sk1dp",
+        cfg="256x128x128",
+        tflops=2.0,
+        runner_up_policy="dp",
+        runner_up_tflops=1.5,
+        dp_best_tflops=1.5,
+        g=7,
+        version=9,
+        wall=123.0,
+    )
+    entry = json.loads(journal_entry(rec, {"dp": 1.5}))
+    for legacy_field in ("g", "version", "wall"):
+        stripped = json.loads(json.dumps(entry))
+        del stripped["record"][legacy_field]
+        parsed, pp = parse_journal_line(json.dumps(stripped))
+        defaults = {"g": LEGACY_GRID, "version": 0, "wall": 0.0}
+        assert getattr(parsed, legacy_field) == defaults[legacy_field]
+        # every other field roundtrips untouched
+        restored = dataclasses.replace(
+            parsed, **{legacy_field: getattr(rec, legacy_field)}
+        )
+        assert restored == rec
+        assert pp == {"dp": 1.5}
+    # fully legacy line: all three fields absent at once
+    for f in ("g", "version", "wall"):
+        del entry["record"][f]
+    parsed, _ = parse_journal_line(json.dumps(entry))
+    assert (parsed.g, parsed.version, parsed.wall) == (LEGACY_GRID, 0, 0.0)
+    assert (parsed.policy, parsed.cfg, parsed.tflops) == ("sk1dp", "256x128x128", 2.0)
