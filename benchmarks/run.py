@@ -42,6 +42,7 @@ def main() -> None:
         roofline,
         sensitivity,
         serving_throughput,
+        traffic_replay,
     )
 
     print("name,us_per_call,derived")
@@ -58,6 +59,7 @@ def main() -> None:
         production_suite,
         sensitivity,
         serving_throughput,
+        traffic_replay,
         online_adaptation,
         roofline,
     ):

@@ -107,6 +107,51 @@ def run() -> List[str]:
             f"({q_tps / f32_tps:.2f}x, {n_quant} quantized leaves)",
         )
     )
+
+    # paged-vs-dense: the same request stream through the paged engine at
+    # equal KV memory (n_slots * max_seq rows == max_pages * page_size).
+    # Decode runs at the same fixed batch width, so dispatch fingerprints
+    # match the dense engine's; traffic_replay.py measures the concurrency
+    # headroom the paging actually buys under realistic arrivals.
+    from repro.serve import PagedServeConfig, PagedServeEngine
+
+    def serve_stream_paged(run_params, slots, selector):
+        with gemm_context(selector=selector):
+            eng = PagedServeEngine(
+                model,
+                run_params,
+                PagedServeConfig(
+                    page_size=16,
+                    max_pages=slots * 128 // 16,
+                    max_active=slots,
+                    max_seq=128,
+                    eos=-1,
+                ),
+            )
+            n_req = slots * 3
+            stream_rng = np.random.default_rng(0)
+            for _ in range(n_req):
+                eng.submit(
+                    stream_rng.integers(1, cfg.vocab_size, size=8),
+                    max_new_tokens=16,
+                )
+            eng.step()
+            t0 = time.perf_counter()
+            done = eng.run()
+            dt = time.perf_counter() - t0
+        ntok = sum(len(r.out_tokens) for r in done) or 1
+        return ntok, dt, n_req
+
+    ntok_p, dt_p, _ = serve_stream_paged(params, slots, default_selector())
+    p_tps = ntok_p / dt_p
+    rows.append(
+        csv_row(
+            f"serve.throughput_paged_slots{slots}",
+            dt_p / ntok_p * 1e6,
+            f"{p_tps:.1f} tok/s paged vs {f32_tps:.1f} dense "
+            f"({p_tps / f32_tps:.2f}x at equal KV rows)",
+        )
+    )
     return rows
 
 

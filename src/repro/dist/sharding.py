@@ -121,13 +121,42 @@ class ShardingPlan:
         :meth:`spec_for`'s per-array divisibility demotion. A weight dim
         the solver demotes to replication (e.g. an odd vocab on a model=4
         mesh) executes at its global size while the fingerprint still
-        divides — the same approximation every existing ``div`` consumer
-        makes. Exact per-dim divisors need the array's logical axes, which
-        only the call site knows."""
+        divides. Call sites that know the concrete arrays should probe
+        :meth:`demoted_dims` and demote the table accordingly — the serve
+        engine does (``repro.serve.engine.serve_gemm_div``), so serving
+        fingerprints never claim a split the weights don't execute."""
         return {
             "batch": self.axis_divisor("batch"),
             "model": int(self.mesh.shape.get("model", 1)),
         }
+
+    def demoted_dims(self, specs, mesh_axis: str = "model"):
+        """Per-array divisibility probe: every (shape, axes, dim_index, dim)
+        in the ArraySpec tree whose logical axis maps onto ``mesh_axis``
+        but which :meth:`spec_for`'s solver would demote to replication
+        (non-divisible dim, same demotion rule, non-uneven path). Empty
+        means the mesh-level :meth:`gemm_div` entry for that axis is exact
+        for every array in the tree."""
+        out = []
+
+        def visit(s: ArraySpec):
+            used: set = set()
+            for i, (dim, logical) in enumerate(zip(s.shape, s.axes)):
+                axes = tuple(
+                    a for a in self._mesh_axes_for(logical) if a not in used
+                )
+                if not axes:
+                    continue
+                div = math.prod(self.mesh.shape[a] for a in axes)
+                if dim % div:
+                    if mesh_axis in axes:
+                        out.append((s.shape, s.axes, i, dim))
+                else:
+                    used.update(axes)
+            return s
+
+        jax.tree.map(visit, specs, is_leaf=_is_spec)
+        return out
 
     def spec_for(self, spec: ArraySpec, *, uneven: bool = False) -> P:
         """PartitionSpec for one array, with demotion (see module doc)."""

@@ -34,6 +34,20 @@ tuned yesterday is a database hit in every worker today. ``--mesh-model N``
 installs a host-mesh sharding plan so dispatch fingerprints key on the
 per-shard local MNK (mesh-aware federation across identically-sharded
 hosts).
+
+Paged serving with admission control and traffic replay:
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --requests 32 \
+      --paged --page-size 16 --max-pages 64 --replay poisson
+
+``--paged`` swaps in the block/paged-KV engine (``repro.serve.scheduler``):
+KV memory is a page pool, residency is bounded by actual sequence lengths,
+and admission is oldest-first under a watermark reserve. ``--max-pages 0``
+(the default) sizes the pool to exactly the dense engine's KV rows
+(``slots * max_seq / page_size``) so the two modes compare at equal memory.
+``--replay poisson|bursty`` schedules submissions on a synthetic arrival
+process (one engine step per clock tick) instead of enqueueing everything
+up front, and logs the SLO summary (p50/p99 latency, TTFT, page occupancy,
+admission counters) the paged engine tracks per request.
 """
 
 from __future__ import annotations
@@ -57,7 +71,13 @@ from repro.dist.sharding import ShardingPlan, materialize_tree, use_plan
 from repro.launch.mesh import make_host_mesh
 from repro.launch.train import preset_config
 from repro.models import build_model
-from repro.serve import ServeConfig, ServeEngine
+from repro.serve import (
+    AdmissionError,
+    PagedServeConfig,
+    PagedServeEngine,
+    ServeConfig,
+    ServeEngine,
+)
 from repro.utils.logging import get_logger
 
 log = get_logger("launch.serve")
@@ -78,6 +98,46 @@ def existing_journal_shards(journal: str) -> list:
     return paths
 
 
+def replay_arrivals(n: int, pattern: str, rate: float, seed: int) -> list:
+    """Arrival step index per request: ``poisson`` draws exponential
+    inter-arrival gaps at ``rate`` requests/step; ``bursty`` emits
+    back-to-back bursts of 4-12 separated by long idle gaps."""
+    rng = np.random.default_rng(seed + 1)
+    if pattern == "poisson":
+        return [int(t) for t in np.floor(np.cumsum(rng.exponential(1.0 / rate, n)))]
+    steps: list = []
+    t = 0.0
+    while len(steps) < n:
+        burst = int(rng.integers(4, 13))
+        steps.extend(int(t) for _ in range(min(burst, n - len(steps))))
+        t += rng.exponential(burst / rate) + 1.0
+    return steps
+
+
+def replay_stream(engine, prompts, *, pattern, rate, seed, max_new, temperature):
+    """Drive ``engine`` on a synthetic arrival process: one engine step per
+    clock tick, submissions offered as they come due, queue backpressure
+    (:class:`~repro.serve.AdmissionError`) re-offered next tick. Returns the
+    finished request objects."""
+    arrivals = replay_arrivals(len(prompts), pattern, rate, seed)
+    tracked = []
+    i = 0
+    step = 0
+    while i < len(prompts) or engine.outstanding():
+        while i < len(prompts) and arrivals[i] <= step:
+            try:
+                engine.submit(
+                    prompts[i], max_new_tokens=max_new, temperature=temperature
+                )
+            except AdmissionError:
+                break  # queue full: this and younger requests wait a tick
+            tracked.append(engine._queue[-1])
+            i += 1
+        engine.step()
+        step += 1
+    return [r for r in tracked if r.done]
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list_archs())
@@ -89,6 +149,47 @@ def main() -> int:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dtype", default="float32")
+    ap.add_argument(
+        "--paged",
+        action="store_true",
+        help="serve through the paged-KV engine (page-pool memory, "
+        "admission control, optional chunked prefill) instead of the "
+        "dense slot engine",
+    )
+    ap.add_argument(
+        "--page-size",
+        type=int,
+        default=16,
+        help="KV rows per page (with --paged)",
+    )
+    ap.add_argument(
+        "--max-pages",
+        type=int,
+        default=0,
+        help="page-pool size; 0 sizes it to the dense engine's KV rows "
+        "(slots * max-seq / page-size) for an equal-memory comparison",
+    )
+    ap.add_argument(
+        "--prefill-chunk",
+        type=int,
+        default=0,
+        help="prefill long prompts in chunks of this many tokens, one "
+        "chunk per engine step (0: whole-prompt prefill; with --paged)",
+    )
+    ap.add_argument(
+        "--replay",
+        default="off",
+        choices=["off", "poisson", "bursty"],
+        help="schedule submissions on a synthetic arrival process instead "
+        "of enqueueing everything up front, and log the per-request SLO "
+        "summary",
+    )
+    ap.add_argument(
+        "--replay-rate",
+        type=float,
+        default=1.0,
+        help="mean arrivals per engine step for --replay",
+    )
     ap.add_argument(
         "--quantize",
         default="none",
@@ -305,20 +406,60 @@ def main() -> int:
         for w in range(args.workers):
             selector, adaptive = worker_state[w]
             with gemm_context(selector=selector) as ctx:
-                engine = ServeEngine(
-                    model,
-                    params,
-                    ServeConfig(n_slots=args.slots, max_seq=args.max_seq, eos=-1),
-                    adaptive=adaptive,
-                    adapt_every=args.adapt_every if args.adapt else 0,
-                )
-                for prompt in prompts[w :: args.workers]:
-                    engine.submit(
-                        prompt,
-                        max_new_tokens=args.max_new_tokens,
-                        temperature=args.temperature,
+                if args.paged:
+                    max_pages = args.max_pages or (
+                        args.slots * args.max_seq // args.page_size
                     )
-                done.extend(engine.run())
+                    engine = PagedServeEngine(
+                        model,
+                        params,
+                        PagedServeConfig(
+                            page_size=args.page_size,
+                            max_pages=max_pages,
+                            max_active=args.slots,
+                            max_seq=args.max_seq,
+                            prefill_chunk=args.prefill_chunk,
+                            eos=-1,
+                            seed=args.seed,
+                        ),
+                        adaptive=adaptive,
+                        adapt_every=args.adapt_every if args.adapt else 0,
+                    )
+                else:
+                    engine = ServeEngine(
+                        model,
+                        params,
+                        ServeConfig(
+                            n_slots=args.slots, max_seq=args.max_seq, eos=-1
+                        ),
+                        adaptive=adaptive,
+                        adapt_every=args.adapt_every if args.adapt else 0,
+                    )
+                wprompts = prompts[w :: args.workers]
+                if args.replay != "off":
+                    done.extend(
+                        replay_stream(
+                            engine,
+                            wprompts,
+                            pattern=args.replay,
+                            rate=args.replay_rate,
+                            seed=args.seed + w,
+                            max_new=args.max_new_tokens,
+                            temperature=args.temperature,
+                        )
+                    )
+                    if adaptive is not None:
+                        # replay drives step() directly; flush what run()
+                        # would have committed at end of drain
+                        adaptive.drain()
+                else:
+                    for prompt in wprompts:
+                        engine.submit(
+                            prompt,
+                            max_new_tokens=args.max_new_tokens,
+                            temperature=args.temperature,
+                        )
+                    done.extend(engine.run())
                 engines.append((w, engine, adaptive, ctx))
     dt = time.time() - t0
     ntok = sum(len(r.out_tokens) for r in done)
@@ -330,6 +471,34 @@ def main() -> int:
         ntok / max(dt, 1e-9),
         args.workers,
     )
+    if args.paged:
+        for w, engine, _, _ in engines:
+            m = engine.metrics()
+            log.info(
+                "worker %d paged pool: peak %d/%d pages, peak %d resident, "
+                "%d admitted / %d rejected / %d truncated, %d stall events",
+                w,
+                m["peak_used_pages"],
+                m["n_pages"],
+                m["peak_resident"],
+                m["admitted"],
+                m["rejected"],
+                m["truncated"],
+                m["stall_events"],
+            )
+        if args.replay != "off" and done:
+            lat = sorted(r.done_step - r.submit_step for r in done)
+            ttft = sorted(r.first_token_step - r.submit_step for r in done)
+            pct = lambda a, q: a[min(len(a) - 1, int(q / 100 * len(a)))]  # noqa: E731
+            log.info(
+                "SLO (steps): latency p50=%d p99=%d, ttft p50=%d p99=%d "
+                "over %d completed requests",
+                pct(lat, 50),
+                pct(lat, 99),
+                pct(ttft, 50),
+                pct(ttft, 99),
+                len(done),
+            )
     for w, engine, adaptive, _ in engines:
         if adaptive is not None:
             st = engine.dispatch_stats

@@ -198,30 +198,50 @@ def chunked_attention(
 
 
 def decode_attention(
-    q: jax.Array,  # (B, 1, H, dh)
+    q: jax.Array,  # (B, Sq, H, dh) — Sq == 1 for token decode, > 1 for chunks
     k_cache: jax.Array,  # (B, S, KV, dh)
     v_cache: jax.Array,
-    cur_pos: jax.Array,  # (B,) current position (index of the new token)
+    cur_pos: jax.Array,  # (B,) position of the (single) new token, or
+    #                      (B, Sq) absolute position of every query row
     *,
     window: int = 0,
 ) -> jax.Array:
-    """Single-token attention against the full cache (O(S) work)."""
-    b, _, h, dh = q.shape
+    """Attention of Sq query tokens against the full cache (O(Sq*S) work).
+
+    The single-token decode case (Sq == 1) keeps its historical einsum so
+    existing decode traces stay bit-identical; the Sq > 1 case serves
+    *chunked prefill*: a prompt chunk whose KV rows were just scattered
+    into the cache attends causally over everything at positions
+    <= its own (cache prefix + intra-chunk causal, one mask)."""
+    b, sq, h, dh = q.shape
     _, s, kvh, _ = k_cache.shape
     groups = h // kvh
     scale = 1.0 / math.sqrt(dh)
-    qg = q.reshape(b, kvh, groups, dh).astype(jnp.float32)
+    qpos = cur_pos if cur_pos.ndim == 2 else cur_pos[:, None]  # (B, Sq)
+    kpos = jnp.arange(s)  # (S,)
+    if sq == 1:
+        qg = q.reshape(b, kvh, groups, dh).astype(jnp.float32)
+        scores = jnp.einsum(
+            "bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32)
+        ) * scale
+        valid = kpos[None, :] <= qpos[:, 0][:, None]
+        if not _is_static_nowindow(window):
+            valid = jnp.logical_and(valid, qpos[:, 0][:, None] - kpos < window)
+        scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+        p = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+        return out.reshape(b, 1, h, dh).astype(q.dtype)
+    qg = q.reshape(b, sq, kvh, groups, dh).astype(jnp.float32)
     scores = jnp.einsum(
-        "bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32)
+        "bqkgd,bskd->bqkgs", qg, k_cache.astype(jnp.float32)
     ) * scale
-    kpos = jnp.arange(s)[None, :]  # (1, S)
-    valid = kpos <= cur_pos[:, None]
+    valid = kpos[None, None, :] <= qpos[:, :, None]  # (B, Sq, S)
     if not _is_static_nowindow(window):
-        valid = jnp.logical_and(valid, cur_pos[:, None] - kpos < window)
-    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+        valid = jnp.logical_and(valid, qpos[:, :, None] - kpos[None, None, :] < window)
+    scores = jnp.where(valid[:, :, None, None, :], scores, -1e30)
     p = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
-    return out.reshape(b, 1, h, dh).astype(q.dtype)
+    out = jnp.einsum("bqkgs,bskd->bqkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
 
 
 def decode_attention_ring(
@@ -332,7 +352,36 @@ def attn_apply(
         q = rope(q, positions, cfg.rope_theta)
 
     new_cache = None
-    if cache is not None and cur_pos is not None:
+    if cache is not None and cur_pos is not None and s > 1:
+        # chunked prefill: scatter the chunk's KV rows at absolute positions
+        # cur_pos..cur_pos+s-1, then attend each query row over the cache
+        # prefix plus the intra-chunk causal span — one decode_attention
+        # mask covers both. (kv_cache_dtype == "int8" quantizes the whole
+        # chunk at once; kv_quantize is shape-generic over leading axes.)
+        bidx = jnp.arange(b)[:, None]
+        pos_block = cur_pos[:, None] + jnp.arange(s)[None, :]  # (B, S)
+        if cfg.kv_cache_dtype == "int8":
+            kq, ks = kv_quantize(knew)
+            vq, vs = kv_quantize(vnew)
+            k_cache = cache["k"].at[bidx, pos_block].set(kq)
+            v_cache = cache["v"].at[bidx, pos_block].set(vq)
+            k_scale = cache["k_scale"].at[bidx, pos_block].set(ks)
+            v_scale = cache["v_scale"].at[bidx, pos_block].set(vs)
+            new_cache = {
+                "k": k_cache,
+                "v": v_cache,
+                "k_scale": k_scale,
+                "v_scale": v_scale,
+            }
+            k_full = kv_dequantize(k_cache, k_scale, cfg.dtype)
+            v_full = kv_dequantize(v_cache, v_scale, cfg.dtype)
+            out = decode_attention(q, k_full, v_full, pos_block, window=window)
+        else:
+            k_cache = cache["k"].at[bidx, pos_block].set(knew)
+            v_cache = cache["v"].at[bidx, pos_block].set(vnew)
+            new_cache = {"k": k_cache, "v": v_cache}
+            out = decode_attention(q, k_cache, v_cache, pos_block, window=window)
+    elif cache is not None and cur_pos is not None:
         # decode: scatter the new token into the cache, attend over it all
         bidx = jnp.arange(b)
         if cfg.kv_cache_dtype == "int8":

@@ -588,6 +588,55 @@ class LM:
             cache["ssm"] = prefill_caches["ssm"]
         return logits, cache
 
+    def prefill_chunk(
+        self,
+        params: Params,
+        cache,
+        tokens: jax.Array,  # (B, C) one prompt chunk
+        cur_pos: jax.Array,  # (B,) absolute position of the chunk's first token
+        *,
+        div: Optional[Dict[str, int]] = None,
+    ):
+        """Process one prompt chunk against an existing decode cache: the
+        chunk's KV rows scatter at absolute positions ``cur_pos..cur_pos+C-1``
+        and every query row attends over the cache prefix plus the
+        intra-chunk causal span. Chaining ``prefill_chunk`` over a split
+        prompt is the incremental equivalent of one :meth:`prefill` — it is
+        what lets a serving scheduler interleave long-prompt prefill with
+        decode steps instead of head-of-line-blocking the decode batch.
+
+        Returns (last-position logits (B, 1, V), updated cache). Supported
+        for the attention-cache families (dense/vlm/moe, uniform cache);
+        SSM/hybrid decode state is O(1) per sequence and has no incremental
+        multi-token scatter path, and windowed ring caches lose the
+        positions a later chunk would need."""
+        cfg = self.cfg
+        if cfg.family not in ("dense", "vlm", "moe"):
+            raise ValueError(
+                f"prefill_chunk supports attention-cache families, not "
+                f"{cfg.family!r} (SSM state has no incremental chunk scatter)"
+            )
+        if cfg.window_cache:
+            raise ValueError(
+                "prefill_chunk requires the uniform decode cache; ring "
+                "caches drop positions later chunks must attend over"
+            )
+        div = div or {}
+        x = self._embed(params, tokens)
+        c = tokens.shape[1]
+        positions = cur_pos[:, None] + jnp.arange(c)[None, :]  # (B, C)
+        x, new_caches, _ = self._scan_layers(
+            params,
+            x,
+            div=div,
+            positions=positions,
+            caches=cache,
+            cur_pos=cur_pos,
+            want_cache=True,
+        )
+        x = L.norm_apply(params["final_norm"], x, cfg)
+        return self._head(params, x[:, -1:], div), new_caches
+
     def decode_step(
         self,
         params: Params,

@@ -1,3 +1,31 @@
-from repro.serve.engine import DispatchStats, Request, ServeConfig, ServeEngine
+from repro.serve.engine import (
+    DispatchStats,
+    EngineCore,
+    Request,
+    ServeConfig,
+    ServeEngine,
+    serve_gemm_div,
+)
+from repro.serve.paged_kv import PagedKVCache, PageExhausted, PageTable
+from repro.serve.scheduler import (
+    AdmissionError,
+    PagedRequest,
+    PagedServeConfig,
+    PagedServeEngine,
+)
 
-__all__ = ["DispatchStats", "Request", "ServeConfig", "ServeEngine"]
+__all__ = [
+    "AdmissionError",
+    "DispatchStats",
+    "EngineCore",
+    "PagedKVCache",
+    "PagedRequest",
+    "PagedServeConfig",
+    "PagedServeEngine",
+    "PageExhausted",
+    "PageTable",
+    "Request",
+    "ServeConfig",
+    "ServeEngine",
+    "serve_gemm_div",
+]

@@ -28,10 +28,59 @@ from contextlib import contextmanager
 from repro.core.adaptive import AdaptiveTuner
 from repro.core.gemm import current_log, current_selector, gemm_context
 from repro.core.selector import KernelSelector, SelectorStats
-from repro.dist.sharding import ambient_gemm_div
+from repro.dist.sharding import current_plan
 from repro.utils.logging import get_logger
 
 log = get_logger("serve")
+
+
+def serve_gemm_div(model, batch: Optional[int] = None) -> Dict[str, int]:
+    """Per-array-aware ambient GEMM divisor table for the serve path.
+
+    ``ShardingPlan.gemm_div`` is mesh-level: it cannot see the per-array
+    divisibility demotion ``spec_for`` applies (an odd vocab on a model=4
+    mesh executes replicated while the mesh table still claims the split).
+    The engine call site is where both halves are known — the installed
+    plan AND the concrete model whose weights it will shard — so this probes
+    every parameter spec through the plan's own solver
+    (:meth:`ShardingPlan.demoted_dims`) and demotes the table's ``model``
+    entry to 1 when any tensor-parallel weight dim would be demoted to
+    replication. Likewise ``batch`` is demoted when the engine's decode
+    width is not divisible by the data-parallel factor. The result: dispatch
+    fingerprints never claim a local shape the arrays don't execute, in
+    either regime — the resolution of ROADMAP item 6 for serving.
+    """
+    plan = current_plan()
+    if plan is None:
+        return {}
+    div = dict(plan.gemm_div())
+    tp = div.get("model", 1)
+    if tp > 1:
+        offenders = plan.demoted_dims(model.param_specs(), mesh_axis="model")
+        if offenders:
+            shown = ", ".join(
+                f"dim {d} ({ax or '?'}) of {sh}" for sh, ax, _, d in offenders[:3]
+            )
+            log.warning(
+                "serve fingerprints demote model divisor %d -> 1: %d weight "
+                "dim(s) fail the plan's divisibility solver and execute "
+                "replicated (e.g. %s); a mesh-level divisor would fingerprint "
+                "local shapes the kernels never see",
+                tp,
+                len(offenders),
+                shown,
+            )
+            div["model"] = 1
+    db = div.get("batch", 1)
+    if batch is not None and db > 1 and batch % db:
+        log.warning(
+            "serve fingerprints demote batch divisor %d -> 1: decode width "
+            "%d is not divisible, so decode activations execute replicated",
+            db,
+            batch,
+        )
+        div["batch"] = 1
+    return div
 
 
 @dataclass(frozen=True)
@@ -60,6 +109,7 @@ class Request:
     temperature: float = 0.0
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
+    truncated: bool = False  # retired early (e.g. paged-pool anti-deadlock)
 
 
 @dataclass
@@ -70,14 +120,23 @@ class ServeConfig:
     seed: int = 0
 
 
-class ServeEngine:
+class EngineCore:
+    """Shared substrate of the serving engines: dispatch-context threading
+    (selector/backend scoping + selection-log mirroring), adaptive-tuner
+    hooks, sampling, request admission validation, and the run() drain loop
+    with exhaustion accounting. Subclasses implement :meth:`step` (one
+    scheduling quantum) and :meth:`outstanding` (requests still queued or
+    resident)."""
+
     def __init__(
         self,
         model,
         params,
-        cfg: ServeConfig,
         *,
+        max_seq: int,
+        seed: int = 0,
         div=None,
+        batch_hint: Optional[int] = None,
         selector: Optional[KernelSelector] = None,
         backend: Optional[str] = None,
         adaptive: Optional[AdaptiveTuner] = None,
@@ -85,13 +144,16 @@ class ServeEngine:
     ):
         self.model = model
         self.params = params
-        self.cfg = cfg
         # Mesh-aware dispatch fingerprints: when the caller installed a
         # ShardingPlan (dist.sharding.use_plan) but passed no explicit div,
         # derive the per-shard GEMM divisors from the plan — every decode
         # GEMM then fingerprints the *local* per-device MNK, so tuning
         # records federate across identically-sharded serving processes.
-        self.div = div if div is not None else ambient_gemm_div()
+        # serve_gemm_div additionally demotes the table's tensor-parallel
+        # divisor when any serve-path weight dim would be demoted to
+        # replication by the plan's own solver (per-array divisibility),
+        # so fingerprints never claim a split the arrays don't execute.
+        self.div = div if div is not None else serve_gemm_div(model, batch_hint)
         # Online adaptation: an AdaptiveTuner rides the decode loop — every
         # ``adapt_every`` engine steps it gets one budgeted round to tune the
         # hottest untuned fingerprints the serving traffic produced. The
@@ -102,6 +164,7 @@ class ServeEngine:
         self.adaptive = adaptive
         self.adapt_every = adapt_every
         self._steps = 0
+        self._max_seq = max_seq
         # Dispatch threading: when the caller hands the engine a selector
         # and/or backend, every prefill/decode trace runs under that
         # dedicated context; otherwise traces use the ambient context (so
@@ -111,16 +174,13 @@ class ServeEngine:
         self.selector = selector
         self.backend = backend
         self.selection_log: List = []
-        self.cache = model.init_cache(cfg.n_slots, cfg.max_seq)
-        self.pos = np.zeros((cfg.n_slots,), np.int32)  # next write position
-        self.slot_req: List[Optional[Request]] = [None] * cfg.n_slots
-        self.rng = np.random.default_rng(cfg.seed)
-        self._decode = jax.jit(
-            lambda p, c, t, pos: model.decode_step(p, c, t, pos, div=self.div),
-            donate_argnums=(1,),
-        )
+        self.rng = np.random.default_rng(seed)
         self._queue: List[Request] = []
         self._uid = 0
+        # run()-exhaustion accounting: requests still queued or resident
+        # when the step budget ran out (None until the first run())
+        self.unfinished: List[Request] = []
+        self.exhausted: bool = False
 
     @contextmanager
     def _dispatch_ctx(self):
@@ -175,18 +235,125 @@ class ServeEngine:
             pending_hot=pending,
         )
 
+    def _sample(self, logits: np.ndarray, temperature: float) -> int:
+        if temperature <= 0.0:
+            return int(np.argmax(logits))
+        p = np.exp((logits - logits.max()) / temperature)
+        p /= p.sum()
+        return int(self.rng.choice(len(p), p=p))
+
+    def _validate_prompt(self, prompt) -> np.ndarray:
+        prompt = np.asarray(prompt, np.int32)
+        if len(prompt) == 0:
+            # an empty prefill would scatter a meaningless KV row and
+            # sample from garbage logits — refuse it at the front door
+            raise ValueError("empty prompt (0 tokens) cannot be served")
+        if len(prompt) > self._max_seq:
+            raise ValueError(
+                f"prompt length {len(prompt)} exceeds max_seq {self._max_seq}"
+            )
+        return prompt
+
+    def _maybe_adapt(self):
+        self._steps += 1
+        if (
+            self.adaptive is not None
+            and self.adapt_every > 0
+            and self._steps % self.adapt_every == 0
+        ):
+            self.adaptive.adapt()
+
+    # -- drain loop --------------------------------------------------------
+    def step(self) -> bool:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def outstanding(self) -> List[Request]:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        """Drain queue + resident requests; returns finished requests.
+
+        When ``max_steps`` runs out first, the unserved remainder is NOT
+        silently dropped: it stays queued/resident on the engine, and is
+        additionally flagged on ``self.exhausted`` / listed in
+        ``self.unfinished`` so callers can distinguish "drained" from
+        "budget ran out" without diffing uid sets."""
+        finished: List[Request] = []
+        seen: Dict[int, Request] = {}
+        for _ in range(max_steps):
+            for r in list(self._queue):
+                seen[r.uid] = r
+            for r in self.outstanding():
+                seen[r.uid] = r
+            if not self.step():
+                break
+        if self.adaptive is not None and self.adapt_every > 0:
+            # end-of-run flush: short traces must still commit what they
+            # learned (and journal it) before the process goes away
+            self.adaptive.drain()
+        for r in seen.values():
+            if r.done:
+                finished.append(r)
+        self.unfinished = self.outstanding()
+        self.exhausted = bool(self.unfinished)
+        if self.exhausted:
+            log.warning(
+                "run(max_steps=%d) exhausted with %d request(s) still "
+                "queued/active; they remain resident (see engine.unfinished)",
+                max_steps,
+                len(self.unfinished),
+            )
+        return finished
+
+
+class ServeEngine(EngineCore):
+    """Dense slot engine: ``n_slots`` sequences share one stacked KV cache
+    out to ``max_seq`` (see module doc)."""
+
+    def __init__(
+        self,
+        model,
+        params,
+        cfg: ServeConfig,
+        *,
+        div=None,
+        selector: Optional[KernelSelector] = None,
+        backend: Optional[str] = None,
+        adaptive: Optional[AdaptiveTuner] = None,
+        adapt_every: int = 0,
+    ):
+        super().__init__(
+            model,
+            params,
+            max_seq=cfg.max_seq,
+            seed=cfg.seed,
+            div=div,
+            batch_hint=cfg.n_slots,
+            selector=selector,
+            backend=backend,
+            adaptive=adaptive,
+            adapt_every=adapt_every,
+        )
+        self.cfg = cfg
+        self.cache = model.init_cache(cfg.n_slots, cfg.max_seq)
+        self.pos = np.zeros((cfg.n_slots,), np.int32)  # next write position
+        self.slot_req: List[Optional[Request]] = [None] * cfg.n_slots
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model.decode_step(p, c, t, pos, div=self.div),
+            donate_argnums=(1,),
+        )
+
     # -- request admission -------------------------------------------------
     def submit(self, prompt, max_new_tokens: int = 32, temperature: float = 0.0) -> int:
-        prompt = np.asarray(prompt, np.int32)
-        if len(prompt) > self.cfg.max_seq:
-            raise ValueError(
-                f"prompt length {len(prompt)} exceeds max_seq {self.cfg.max_seq}"
-            )
+        prompt = self._validate_prompt(prompt)
         self._uid += 1
         self._queue.append(
             Request(self._uid, prompt, max_new_tokens, temperature)
         )
         return self._uid
+
+    def outstanding(self) -> List[Request]:
+        return list(self._queue) + [r for r in self.slot_req if r is not None]
 
     def _admit(self):
         for slot in range(self.cfg.n_slots):
@@ -236,13 +403,6 @@ class ServeEngine:
             self.slot_req[slot] = None
             self.pos[slot] = 0
 
-    def _sample(self, logits: np.ndarray, temperature: float) -> int:
-        if temperature <= 0.0:
-            return int(np.argmax(logits))
-        p = np.exp((logits - logits.max()) / temperature)
-        p /= p.sum()
-        return int(self.rng.choice(len(p), p=p))
-
     # -- decode loop ---------------------------------------------------------
     def step(self):
         """One decode step for every active slot."""
@@ -274,32 +434,5 @@ class ServeEngine:
                 req.done = True
                 self.slot_req[i] = None
                 self.pos[i] = 0
-        self._steps += 1
-        if (
-            self.adaptive is not None
-            and self.adapt_every > 0
-            and self._steps % self.adapt_every == 0
-        ):
-            self.adaptive.adapt()
+        self._maybe_adapt()
         return True
-
-    def run(self, max_steps: int = 10_000) -> List[Request]:
-        """Drain queue + slots; returns finished requests."""
-        finished: List[Request] = []
-        seen: Dict[int, Request] = {}
-        for _ in range(max_steps):
-            for r in list(self._queue):
-                seen[r.uid] = r
-            for r in self.slot_req:
-                if r is not None:
-                    seen[r.uid] = r
-            if not self.step():
-                break
-        if self.adaptive is not None and self.adapt_every > 0:
-            # end-of-run flush: short traces must still commit what they
-            # learned (and journal it) before the process goes away
-            self.adaptive.drain()
-        for r in seen.values():
-            if r.done:
-                finished.append(r)
-        return finished

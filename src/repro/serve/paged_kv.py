@@ -1,0 +1,227 @@
+"""Block/paged KV allocation for the serving path.
+
+The dense engine gives every slot a ``max_seq`` stripe of the stacked KV
+cache, so resident concurrency is capped at ``n_slots`` and the memory bill
+is ``n_slots * max_seq`` token rows whether sequences use them or not. Here
+KV lives in a pool of fixed-size *pages* — leaf shape
+``(L, n_pages + 1, page_size, ...)`` — and each sequence holds an ordered
+*page table* mapping logical position ``p`` to row
+``(table[p // page_size], p % page_size)``. Resident concurrency is then
+bounded by the total page budget (the sum of actual sequence lengths,
+rounded up per sequence), not by slots-times-max-capacity: the vLLM-style
+accounting under which a 2x shorter average sequence hosts 2x the users in
+the same memory.
+
+Integration contract: ``model.prefill`` / ``model.decode_step`` and the
+dispatch fingerprints they produce stay untouched. The adapters below
+*gather* a sequence batch's pages into a dense, position-contiguous view —
+page ``i`` of a table holds positions ``i*page_size..(i+1)*page_size - 1``,
+so concatenated pages ARE the dense layout and the decode attention masks
+(``kpos <= cur_pos``) mask the allocated-but-unwritten tail rows exactly as
+they mask the dense cache's — run the unchanged model step on the view, and
+*scatter* only the newly written rows back into the pool. The decode GEMMs
+see a fixed batch width and a (padded) view length, so tuned records keep
+hitting.
+
+The pool carries one extra *scratch* page (index ``n_pages``): padding
+entries of short page tables and the write-back targets of padded batch
+rows point at it, keeping every gather/scatter fully vectorized with no
+host-side masking inside the jitted step.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ArraySpec
+
+
+class PageExhausted(RuntimeError):
+    """The free list cannot cover an allocation request."""
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``n_tokens`` positions (>= 1: even an empty
+    table reserves the page its first decode token will write)."""
+    return max(1, -(-int(n_tokens) // page_size))
+
+
+@dataclass
+class PageTable:
+    """One sequence's ordered page list + how many positions are written."""
+
+    pages: List[int] = field(default_factory=list)
+    length: int = 0
+
+    @property
+    def capacity(self) -> int:
+        return len(self.pages)  # in pages; tokens = capacity * page_size
+
+
+def paged_cache_specs(model, page_size: int) -> Dict[str, Any]:
+    """ArraySpec tree of one *page* of the model's decode cache — the
+    model's own ``cache_specs`` with (batch, seq) -> (1, page_size). Raises
+    for cache layouts that cannot page (SSM/hybrid state, ring caches)."""
+    cfg = model.cfg
+    if cfg.family not in ("dense", "vlm", "moe"):
+        raise ValueError(
+            f"paged KV supports the attention-cache families (dense/vlm/moe); "
+            f"{cfg.family!r} decode state is O(1) per sequence and gains "
+            "nothing from paging"
+        )
+    if cfg.window_cache and cfg.global_every:
+        raise ValueError(
+            "paged KV requires the uniform decode cache; ring caches "
+            "already bound local-layer memory at O(window)"
+        )
+    specs = model.cache_specs(1, page_size)
+    if set(specs) != {"attn"}:
+        raise ValueError(f"unexpected cache layout {sorted(specs)!r}")
+    return specs
+
+
+class PagedKVCache:
+    """Page pool + free-list allocator + gather/scatter adapters.
+
+    The pool is a pytree matching the model's cache tree with the (batch,
+    seq) axes replaced by (n_pages + 1, page_size); page ``n_pages`` is the
+    scratch page (see module doc). Allocation is FIFO-recycled: freed pages
+    go to the back of the free list, so a page's stale contents age out
+    instead of being immediately re-read by the next gather (any stale row
+    is masked regardless — recycling order only aids debugging).
+    """
+
+    def __init__(self, model, *, page_size: int, n_pages: int):
+        if page_size < 1 or n_pages < 1:
+            raise ValueError(f"bad pool geometry {page_size=} {n_pages=}")
+        self.page_size = int(page_size)
+        self.n_pages = int(n_pages)
+        self.scratch = self.n_pages  # reserved page id for padded rows
+        specs = paged_cache_specs(model, page_size)
+
+        def pool_leaf(s: ArraySpec):
+            # (L, 1, page_size, *rest) -> (L, n_pages + 1, page_size, *rest)
+            shape = (s.shape[0], n_pages + 1, *s.shape[2:])
+            return jnp.zeros(shape, s.dtype)
+
+        self.pool = jax.tree.map(
+            pool_leaf, specs, is_leaf=lambda x: isinstance(x, ArraySpec)
+        )
+        self._free: deque = deque(range(self.n_pages))
+        self.peak_used = 0
+
+    # -- allocator --------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return pages_for(n_tokens, self.page_size)
+
+    def try_alloc(self, n: int) -> Optional[List[int]]:
+        """``n`` pages off the free list, or None (state unchanged) if the
+        budget cannot cover them."""
+        if n < 0:
+            raise ValueError(f"cannot allocate {n} pages")
+        if n > len(self._free):
+            return None
+        pages = [self._free.popleft() for _ in range(n)]
+        self.peak_used = max(self.peak_used, self.used_pages)
+        return pages
+
+    def alloc(self, n: int) -> List[int]:
+        pages = self.try_alloc(n)
+        if pages is None:
+            raise PageExhausted(
+                f"need {n} pages, {len(self._free)}/{self.n_pages} free"
+            )
+        return pages
+
+    def free(self, pages: List[int]):
+        for p in pages:
+            if not 0 <= p < self.n_pages:
+                raise ValueError(f"freeing invalid page id {p}")
+            if p in self._free:
+                raise ValueError(f"double free of page {p}")
+        self._free.extend(pages)
+
+    def occupancy(self) -> Dict[str, float]:
+        return {
+            "n_pages": self.n_pages,
+            "used_pages": self.used_pages,
+            "free_pages": self.free_pages,
+            "peak_used_pages": self.peak_used,
+            "utilization": self.used_pages / self.n_pages,
+        }
+
+    # -- jnp adapters ------------------------------------------------------
+    # Pure functions of (pool, indices, values): the scheduler composes and
+    # jits them. Leaf layout: pool (L, NP, PS, *rest), dense cache/view
+    # (L, B, S, *rest).
+
+    def gather_view(self, pool, pages_2d: jax.Array):
+        """Dense position-contiguous view of a batch of page tables.
+        ``pages_2d``: (B, P) page ids, short tables padded with scratch.
+        Leaf: (L, NP, PS, *r) -> (L, B, P*PS, *r)."""
+
+        def leaf(a):
+            g = a[:, pages_2d]  # (L, B, P, PS, *r)
+            return g.reshape(g.shape[0], *pages_2d.shape[:1], -1, *g.shape[4:])
+
+        return jax.tree.map(leaf, pool)
+
+    def scatter_rows(self, pool, page_ids: jax.Array, offsets: jax.Array, rows):
+        """Write one row per batch element: ``rows`` leaf (L, B, *r) lands at
+        ``pool[:, page_ids[b], offsets[b]]``. Padded batch rows must point
+        ``page_ids`` at the scratch page."""
+
+        def leaf(a, r):
+            return a.at[:, page_ids, offsets].set(r)
+
+        return jax.tree.map(leaf, pool, rows)
+
+    def rows_at(self, view, pos: jax.Array):
+        """Extract the per-sequence row at ``pos`` (B,) from a dense view:
+        leaf (L, B, S, *r) -> (L, B, *r)."""
+
+        def leaf(a):
+            bidx = jnp.arange(a.shape[1])
+            return a[:, bidx, pos]
+
+        return jax.tree.map(leaf, view)
+
+    def scatter_prefill(self, pool, pages: jax.Array, fresh):
+        """Write one sequence's freshly prefilled cache into its pages.
+        ``fresh`` leaf (L, 1, S_pad, *r) with S_pad == len(pages)*PS (the
+        caller prefills at the page-padded length); ``pages``: (P,)."""
+
+        def leaf(a, f):
+            p = pages.shape[0]
+            chunks = f[:, 0].reshape(f.shape[0], p, self.page_size, *f.shape[3:])
+            return a.at[:, pages].set(chunks)
+
+        return jax.tree.map(leaf, pool, fresh)
+
+    def padded_tables(self, tables: List[PageTable], min_pages: int = 1):
+        """(B, P) int32 page-id array for a batch of tables, P = the max
+        table length padded up to a power of two (bounds jit recompiles to
+        log2(max_seq/page_size) distinct view shapes); scratch-padded."""
+        import numpy as np
+
+        p = max(min_pages, *(len(t.pages) for t in tables)) if tables else min_pages
+        p_pad = 1
+        while p_pad < p:
+            p_pad *= 2
+        out = np.full((len(tables), p_pad), self.scratch, np.int32)
+        for i, t in enumerate(tables):
+            out[i, : len(t.pages)] = t.pages
+        return jnp.asarray(out)

@@ -1,0 +1,175 @@
+"""Paged KV pool: allocator lifecycle (alloc/free/recycle/exhaustion) and
+the gather/scatter adapters' position mapping — page ``i`` of a table holds
+positions ``i*page_size..(i+1)*page_size - 1``, so a gathered view must BE
+the dense layout of the table's sequence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.dist.sharding import materialize_tree
+from repro.models import build_model
+from repro.serve import PagedKVCache, PageExhausted, PageTable
+from repro.serve.paged_kv import paged_cache_specs, pages_for
+
+
+@pytest.fixture(scope="module")
+def model():
+    return build_model(tiny("granite-8b"))
+
+
+def make_pool(model, page_size=4, n_pages=6):
+    return PagedKVCache(model, page_size=page_size, n_pages=n_pages)
+
+
+# -- allocator ---------------------------------------------------------------
+
+
+def test_pages_for_rounds_up_and_reserves_one():
+    assert pages_for(0, 4) == 1  # even an empty table holds its first page
+    assert pages_for(1, 4) == 1
+    assert pages_for(4, 4) == 1
+    assert pages_for(5, 4) == 2
+    assert pages_for(17, 16) == 2
+
+
+def test_alloc_free_recycle(model):
+    kv = make_pool(model)
+    a = kv.alloc(4)
+    assert len(a) == 4 and len(set(a)) == 4
+    assert all(0 <= p < kv.n_pages for p in a)
+    assert kv.used_pages == 4 and kv.free_pages == 2
+    kv.free(a[:2])
+    assert kv.free_pages == 4
+    b = kv.alloc(4)  # must reuse the freed pages to satisfy this
+    assert set(a[:2]) <= set(b) | set(a[2:]) or kv.free_pages == 0
+    assert kv.used_pages == 6
+    assert kv.peak_used == 6
+
+
+def test_exhaustion_raises_and_try_alloc_is_atomic(model):
+    kv = make_pool(model)
+    kv.alloc(5)
+    assert kv.try_alloc(2) is None  # refused whole: no partial grab
+    assert kv.free_pages == 1  # state unchanged by the failed attempt
+    with pytest.raises(PageExhausted):
+        kv.alloc(2)
+    assert kv.free_pages == 1
+    assert kv.alloc(1)  # the remainder is still allocatable
+
+
+def test_double_free_and_invalid_id_rejected(model):
+    kv = make_pool(model)
+    pages = kv.alloc(2)
+    kv.free(pages)
+    with pytest.raises(ValueError, match="double free"):
+        kv.free([pages[0]])
+    with pytest.raises(ValueError, match="invalid page"):
+        kv.free([kv.n_pages])  # the scratch page is never allocator-owned
+    with pytest.raises(ValueError, match="invalid page"):
+        kv.free([-1])
+
+
+def test_occupancy_metrics(model):
+    kv = make_pool(model)
+    pages = kv.alloc(3)
+    occ = kv.occupancy()
+    assert occ["n_pages"] == 6
+    assert occ["used_pages"] == 3 and occ["free_pages"] == 3
+    assert occ["utilization"] == pytest.approx(0.5)
+    kv.free(pages)
+    assert kv.occupancy()["used_pages"] == 0
+    assert kv.occupancy()["peak_used_pages"] == 3  # high-water persists
+
+
+# -- gather/scatter adapters -------------------------------------------------
+
+
+def test_gather_view_concatenates_pages_in_table_order(model):
+    kv = make_pool(model, page_size=2, n_pages=4)
+    # stamp page p, offset o with value 10*p + o, broadcast over the rest
+    n_layers = jax.tree.leaves(kv.pool)[0].shape[0]
+    stamp = np.zeros((n_layers, 5, 2), np.float32)  # incl. scratch page 4
+    for p in range(5):
+        for o in range(2):
+            stamp[:, p, o] = 10 * p + o
+    kv.pool = jax.tree.map(
+        lambda a: jnp.asarray(
+            np.broadcast_to(
+                stamp.reshape(stamp.shape + (1,) * (a.ndim - 3)), a.shape
+            ).astype(a.dtype)
+        ),
+        kv.pool,
+    )
+    view = kv.gather_view(kv.pool, jnp.asarray([[2, 0, 3]], jnp.int32))
+    got = np.asarray(jax.tree.leaves(view)[0])[0, 0]  # (S=6, *rest)
+    flat = got.reshape(6, -1)[:, 0]
+    assert list(flat) == [20, 21, 0, 1, 30, 31]
+
+
+def test_scatter_rows_then_gather_roundtrip(model):
+    kv = make_pool(model, page_size=4, n_pages=4)
+    tables = [PageTable([1, 3], 0), PageTable([2], 0)]
+    pages_2d = kv.padded_tables(tables)
+    assert pages_2d.shape == (2, 2)
+    assert int(pages_2d[1, 1]) == kv.scratch  # short table scratch-padded
+    # write position 5 of seq 0 (page 3, offset 1) and 2 of seq 1
+    pos = np.array([5, 2], np.int32)
+    pg = pages_2d[np.arange(2), pos // kv.page_size]
+    rows = jax.tree.map(
+        lambda a: jnp.full((a.shape[0], 2, *a.shape[3:]), 7.5, a.dtype), kv.pool
+    )
+    kv.pool = kv.scatter_rows(kv.pool, pg, jnp.asarray(pos % kv.page_size), rows)
+    view = kv.gather_view(kv.pool, pages_2d)
+    got = kv.rows_at(view, jnp.asarray(pos))
+    for leaf in jax.tree.leaves(got):
+        assert np.all(np.asarray(leaf, np.float64) == 7.5)
+    # nothing else was touched: the rest of the view is still zero
+    vleaf = np.asarray(jax.tree.leaves(view)[0], np.float64)
+    assert np.count_nonzero(vleaf[:, 0].reshape(vleaf.shape[0], 8, -1).sum(-1)) \
+        == vleaf.shape[0]
+
+
+def test_scatter_prefill_writes_whole_pages(model):
+    kv = make_pool(model, page_size=2, n_pages=4)
+    pages = kv.alloc(2)
+    fresh = jax.tree.map(
+        lambda a: jnp.broadcast_to(
+            jnp.arange(4, dtype=a.dtype).reshape(1, 1, 4, *(1,) * (a.ndim - 3)),
+            (a.shape[0], 1, 4, *a.shape[3:]),
+        ),
+        kv.pool,
+    )
+    kv.pool = kv.scatter_prefill(kv.pool, jnp.asarray(pages, jnp.int32), fresh)
+    view = kv.gather_view(kv.pool, jnp.asarray([pages], jnp.int32))
+    for leaf in jax.tree.leaves(view):
+        got = np.asarray(leaf)[0, 0].reshape(4, -1)
+        assert np.all(got == np.arange(4)[:, None])
+
+
+def test_padded_tables_pads_to_power_of_two(model):
+    kv = make_pool(model, page_size=4, n_pages=8)
+    t = kv.padded_tables([PageTable([0, 1, 2], 0)])
+    assert t.shape == (1, 4)  # 3 -> 4
+    assert int(t[0, 3]) == kv.scratch
+    assert kv.padded_tables([PageTable([5], 0)]).shape == (1, 1)
+    assert kv.padded_tables([PageTable([], 0)]).shape == (1, 1)
+    five = [PageTable(list(range(5)), 0)]
+    assert kv.padded_tables(five).shape == (1, 8)
+
+
+# -- family gating -----------------------------------------------------------
+
+
+def test_paged_cache_specs_rejects_stateful_families():
+    ssm = build_model(tiny("mamba2-1.3b"))
+    with pytest.raises(ValueError, match="attention-cache families"):
+        paged_cache_specs(ssm, 4)
+
+
+def test_paged_cache_specs_rejects_ring_caches():
+    gemma = build_model(tiny("gemma3-27b", window_cache=True))
+    with pytest.raises(ValueError, match="ring caches"):
+        paged_cache_specs(gemma, 4)
