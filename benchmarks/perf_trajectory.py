@@ -30,6 +30,11 @@ N_SHAPES = 32
 #: trajectory tracks whether the 1-byte B operand keeps flipping winners
 DTYPES = ("float32", "bfloat16", "float32*int8")
 
+#: grouped-GEMM trajectory: expert counts swept for the fused one-kernel
+#: MoE dispatch vs the per-group launch loop
+GROUPED_GS = (4, 8, 16)
+GROUPED_MNK = (64, 256, 256)
+
 
 def _sample_shapes(n: int = N_SHAPES) -> List[tuple]:
     """Deterministic spread over the 923-size suite (every len/n-th shape)."""
@@ -89,6 +94,75 @@ def _modeled_suite() -> Dict[str, dict]:
     return out
 
 
+def _grouped_trajectory() -> Dict[str, dict]:
+    """Fused one-kernel grouped MoE dispatch vs the per-group launch loop.
+
+    Two measurements per expert count G: (a) *real* kernel-launch counts —
+    both op forms dispatched through the interpret backend under
+    ``count_launches`` (the fused form must stay at exactly 1 while the
+    loop scales with G), and (b) the modeled TFLOP/s of each form's
+    selected (policy, cfg, g) — the fused form scored on the concatenated
+    ``GroupedGemmShape`` tile space, the loop on the per-group shape it
+    launches G times."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import costmodel, gemm_context, gemm_grouped
+    from repro.core.op import GemmOp
+    from repro.core.selector import default_selector
+    from repro.core.workpart import GemmShape, GroupedGemmShape
+
+    from repro.kernels.common import count_launches
+
+    m, n, k = GROUPED_MNK
+    sel = default_selector()
+    dt = costmodel.profile_for("float32", "float32")
+    out: Dict[str, dict] = {}
+    for g in GROUPED_GS:
+        ka, kw = jax.random.split(jax.random.PRNGKey(g))
+        x = jax.random.normal(ka, (g, m, k), jnp.float32)
+        w = jax.random.normal(kw, (g, k, n), jnp.float32)
+        launches = {}
+        for label, fused in (("fused", True), ("loop", False)):
+            jax.clear_caches()  # jit-cached traces would hide re-launches
+            with count_launches() as log, gemm_context(backend="pallas_interpret"):
+                gemm_grouped(x, w, fused=fused).block_until_ready()
+            launches[label] = len(log)
+        s_fused = sel.select_op(GemmOp(m, n, k, g=g, kind="grouped", fused=True))
+        s_loop = sel.select_op(GemmOp(m, n, k, g=g, kind="grouped", fused=False))
+        out[f"G{g}"] = {
+            "mnk": f"{m}x{n}x{k}",
+            "launches": launches,
+            "fused": {
+                "policy": s_fused.policy.name,
+                "cfg": s_fused.cfg.name,
+                "g": s_fused.g,
+                "modeled_tflops": round(
+                    costmodel.gemm_tflops(
+                        GroupedGemmShape(m, n, k, groups=g),
+                        s_fused.cfg,
+                        s_fused.policy,
+                        g=s_fused.g,
+                        dt=dt,
+                    ),
+                    4,
+                ),
+            },
+            "loop": {
+                "policy": s_loop.policy.name,
+                "cfg": s_loop.cfg.name,
+                "g": s_loop.g,
+                "modeled_tflops": round(
+                    costmodel.gemm_tflops(
+                        GemmShape(m, n, k), s_loop.cfg, s_loop.policy, g=s_loop.g, dt=dt
+                    ),
+                    4,
+                ),
+            },
+        }
+    return out
+
+
 def _find_indices(out_dir: str) -> List[int]:
     idx = []
     for path in glob.glob(os.path.join(out_dir, "BENCH_*.json")):
@@ -125,6 +199,22 @@ def _deltas(cur: dict, prev: dict) -> dict:
                     "d_tflops": delta_tf,
                     "winner_changed": changed,
                 }
+    prev_grouped = prev.get("grouped", {})
+    for gk, cur_g in cur.get("grouped", {}).items():
+        prev_g = prev_grouped.get(gk)
+        if not prev_g:
+            continue
+        d.setdefault("grouped", {})[gk] = {
+            "d_fused_tflops": round(
+                cur_g["fused"]["modeled_tflops"]
+                - prev_g["fused"]["modeled_tflops"],
+                4,
+            ),
+            "d_launches": {
+                lbl: cur_g["launches"][lbl] - prev_g["launches"].get(lbl, 0)
+                for lbl in cur_g["launches"]
+            },
+        }
     return d
 
 
@@ -145,6 +235,7 @@ def build_snapshot(
         "index": index,
         "dispatch": _dispatch_overhead_us(),
         "suite": _modeled_suite(),
+        "grouped": _grouped_trajectory(),
     }
     prior = [i for i in existing if i < index]
     if prior:
@@ -175,6 +266,13 @@ def main() -> None:
         snap = json.load(f)
     print(f"wrote {path}")
     print(f"dispatch: {snap['dispatch']}")
+    for gk, entry in sorted(snap.get("grouped", {}).items()):
+        print(
+            f"grouped {gk} ({entry['mnk']}): launches "
+            f"fused={entry['launches']['fused']} loop={entry['launches']['loop']}, "
+            f"modeled fused {entry['fused']['modeled_tflops']} vs loop "
+            f"{entry['loop']['modeled_tflops']} TFLOP/s"
+        )
     deltas = snap.get("deltas")
     if deltas:
         print(f"deltas vs BENCH_{deltas['vs']}:")

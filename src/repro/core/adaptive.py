@@ -42,6 +42,8 @@ from repro.core.tuner import Tuner, TuningDatabase, append_journal
 
 @dataclass(frozen=True)
 class AdaptiveConfig:
+    """Knobs of the online adaptation loop (thresholds, bounds, budget)."""
+
     #: misses before a fingerprint is promoted to a tuning candidate
     hot_threshold: int = 3
     #: bound on the miss-frequency table (coldest entries evicted first)
@@ -61,6 +63,8 @@ class AdaptiveConfig:
 
 @dataclass
 class AdaptiveStats:
+    """Lifetime counters of one :class:`AdaptiveTuner` (observability)."""
+
     misses: int = 0  # miss-hook notifications observed
     promoted: int = 0  # fingerprints that crossed hot_threshold
     evicted: int = 0  # cold fingerprints dropped by the bound

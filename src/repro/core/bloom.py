@@ -101,6 +101,7 @@ class BloomFilter:
 
     @classmethod
     def for_capacity(cls, capacity: int = 10_000, fp_rate: float = 0.01, seed: int = 0):
+        """Size a filter for ``capacity`` keys at a target FP rate."""
         n_bits, n_hashes = optimal_params(capacity, fp_rate)
         return cls(n_bits=n_bits, n_hashes=n_hashes, seed=seed)
 
@@ -115,6 +116,7 @@ class BloomFilter:
 
     # -- set ops -------------------------------------------------------------
     def add(self, key: bytes) -> None:
+        """Insert a raw key (sets ``n_hashes`` bits; never fails)."""
         for p in self._probes(key):
             self.bits[p >> 3] |= 1 << (p & 7)
         self.n_items += 1
@@ -123,9 +125,11 @@ class BloomFilter:
         return all(self.bits[p >> 3] & (1 << (p & 7)) for p in self._probes(key))
 
     def add_mnk(self, m: int, n: int, k: int) -> None:
+        """Insert a GEMM problem size under its canonical byte key."""
         self.add(encode_mnk(m, n, k))
 
     def query_mnk(self, m: int, n: int, k: int) -> bool:
+        """Probe a GEMM problem size (True == "possibly present")."""
         return encode_mnk(m, n, k) in self
 
     # -- stats / codec ---------------------------------------------------------
@@ -148,14 +152,17 @@ class BloomFilter:
 
     @property
     def est_fp_rate(self) -> float:
+        """Current false-positive probability estimate (saturation^k)."""
         return self.saturation**self.n_hashes
 
     def to_bytes(self) -> bytes:
+        """Serialise to the versioned ``BLM1`` wire format."""
         head = struct.pack("<4sIIII", b"BLM1", self.n_bits, self.n_hashes, self.seed, self.n_items)
         return head + self.bits.tobytes()
 
     @classmethod
     def from_bytes(cls, blob: bytes) -> "BloomFilter":
+        """Inverse of :meth:`to_bytes`; validates magic and payload length."""
         magic, n_bits, n_hashes, seed, n_items = struct.unpack_from("<4sIIII", blob)
         if magic != b"BLM1":
             raise ValueError("not a serialized BloomFilter")

@@ -66,6 +66,7 @@ from repro.core.policies import (
 )
 from repro.core.workpart import (
     GemmShape,
+    GroupedGemmShape,
     Partition,
     PartitionStats,
     cdiv,
@@ -87,10 +88,12 @@ class Machine:
 
     @property
     def lane_flops(self) -> float:
+        """Peak FLOP/s available to one lane (virtual CU)."""
         return self.peak_flops / self.lanes
 
     @property
     def lane_bw(self) -> float:
+        """HBM bandwidth share of one lane (B/s)."""
         return self.hbm_bw / self.lanes
 
 
@@ -175,6 +178,21 @@ def profile_for(in_dtype: str, out_dtype: Optional[str] = None) -> DtypeBytes:
 def op_dtypes(op) -> DtypeBytes:
     """Profile for a GemmOp (duck-typed: anything with in_dtype/out_dtype)."""
     return profile_for(op.in_dtype, op.out_dtype)
+
+
+def op_shape(op) -> GemmShape:
+    """Shape the cost model should score for an op fingerprint.
+
+    A fused grouped op scores as a :class:`GroupedGemmShape` over the
+    concatenated tile space of its local group count — one launch, one
+    persistent grid, G-independent trace cost. Everything else (plain ops,
+    loop-form grouped/batched ops, whose backend launches per group and
+    whose selection covers one group's local problem) scores the plain
+    per-group shape, exactly as before."""
+    m, n, k = op.local
+    if getattr(op, "fused", False):
+        return GroupedGemmShape(m, n, k, groups=op.g_local)
+    return GemmShape(m, n, k)
 
 
 # ---------------------------------------------------------------------------

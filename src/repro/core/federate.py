@@ -77,6 +77,7 @@ class MergeReport:
     load_errors: int = 0  # malformed/torn journal lines skipped
 
     def combine(self, other: "MergeReport") -> "MergeReport":
+        """Fold two reports (additive counters; ``merged`` takes the max)."""
         return MergeReport(
             sources=self.sources + other.sources,
             examined=self.examined + other.examined,

@@ -24,8 +24,10 @@ strategy without touching this module. Built-ins:
 
 Entry points: :func:`gemm` (2-D weight, the original per-call surface),
 :func:`gemm_grouped` (stacked ``(G, K, N)`` expert weights — each group is
-the same local problem, one selection covers the group), and
-:func:`gemm_batched` (independent per-batch operands of equal shape).
+the same local problem, one selection covers the group; by default all G
+groups execute as ONE fused kernel over the concatenated expert tile
+space, fingerprinted separately via the 8-part ``grouped_fused`` op key),
+and :func:`gemm_batched` (independent per-batch operands of equal shape).
 
 Backend and selector are ambient (context-managed) so model code stays
 declarative. Every decision is appended to the active ``SelectionLog`` for
@@ -82,10 +84,12 @@ def register_backend(name: str, fn: BackendFn, *, overwrite: bool = False) -> No
 
 
 def list_backends() -> Tuple[str, ...]:
+    """Registered backend names, sorted."""
     return tuple(sorted(_BACKENDS))
 
 
 def get_backend(name: str) -> BackendFn:
+    """Resolve a backend by name; raises with the valid names on a miss."""
     try:
         return _BACKENDS[name]
     except KeyError:
@@ -114,14 +118,40 @@ def _xla_backend(x, w, *, op: GemmOp, policy, cfg, g, bias, operand, scale=None)
 
 def _make_pallas_backend(interpret: bool) -> BackendFn:
     def backend(x, w, *, op: GemmOp, policy, cfg, g, bias, operand, scale=None):
+        from repro.kernels.common import record_launch
         from repro.kernels.streamk import ops as sk_ops
+        from repro.kernels.streamk.grouped import gemm_grouped_streamk
 
-        # One pallas_call per group: trace cost grows with G (tracked by
-        # benchmarks/dispatch_overhead.py). Folding G into the kernel grid
-        # (as dp_gemm does for output tiles) would lower once per op; the
-        # partition math is 2-D today, so that is a follow-up.
+        if getattr(op, "fused", False):
+            # Fused grouped form: ONE pallas_call spans the concatenated
+            # tile space of all G expert groups (a scalar-prefetched
+            # row-block -> group table steers the B/bias/scale gathers).
+            # Trace and launch cost are G-independent; the per-group loop
+            # below remains as the differential oracle (fused=False).
+            return gemm_grouped_streamk(
+                x,
+                w,
+                policy=policy,
+                cfg=cfg,
+                g=g,
+                interpret=interpret,
+                out_dtype=jnp.dtype(op.out_dtype),
+                epilogue=op.epilogue,
+                bias=bias,
+                operand=operand,
+                scale=scale,
+            )
+
+        # Loop form: one pallas_call per group, so trace cost grows with G
+        # (tracked by benchmarks/perf_trajectory.py). Grouped dispatches
+        # default to the fused branch above; this path serves batched ops,
+        # explicit fused=False grouped calls, and legacy 7-part journal
+        # entries, and doubles as the fused kernel's numerics oracle.
         outs = []
         for i in range(x.shape[0]):  # static group count
+            # every group is a distinct runtime kernel launch even when the
+            # (identical-shape) trace is jit-cached — count it as one
+            record_launch(f"group[{i}]:{policy.name}_{cfg.name}")
             outs.append(
                 sk_ops.gemm(
                     x[i],
@@ -154,25 +184,33 @@ register_backend("pallas_interpret", _make_pallas_backend(interpret=True))
 
 @dataclass
 class SelectionLogEntry:
+    """One dispatch decision: the op fingerprint, what was selected, and
+    the caller's tag (e.g. ``"moe.in"``) for test/benchmark introspection."""
+
     op: GemmOp
     selection: Selection
     tag: str = ""
 
     @property
     def global_mnk(self) -> Tuple[int, int, int]:
+        """Unsharded problem dims of the logged op."""
         return self.op.global_mnk
 
     @property
     def local_mnk(self) -> Tuple[int, int, int]:
+        """Per-shard local dims of the logged op."""
         return self.op.local
 
     @property
     def g(self) -> int:
+        """Group/batch count of the logged op (1 for plain)."""
         return self.op.g
 
 
 @dataclass
 class GemmContext:
+    """Ambient dispatch state: the selector, backend name, and log."""
+
     selector: KernelSelector
     backend: str = "xla"  # any name in list_backends()
     log: List[SelectionLogEntry] = field(default_factory=list)
@@ -206,10 +244,12 @@ def gemm_context(
 
 
 def current_log() -> List[SelectionLogEntry]:
+    """The active context's selection log (created on first use)."""
     return _ctx().log
 
 
 def current_selector() -> KernelSelector:
+    """The active context's selector (created on first use)."""
     return _ctx().selector
 
 
@@ -356,6 +396,7 @@ def _gemm_stacked(
     epilogue: Union[None, str, Epilogue],
     bias: Optional[jax.Array],
     operand: Optional[jax.Array],
+    fused: bool = False,
 ) -> jax.Array:
     scale = None
     if is_quantized(w):
@@ -383,6 +424,7 @@ def _gemm_stacked(
         divisors=tuple(divisors),
         g_divisor=g_divisor,
         epilogue=epilogue,
+        fused=fused,
     )
     if bias is not None and bias.ndim == 1:
         bias = jnp.broadcast_to(bias[None], (g, n))
@@ -414,6 +456,7 @@ def gemm_grouped(
     epilogue: Union[None, str, Epilogue] = None,
     bias: Optional[jax.Array] = None,
     operand: Optional[jax.Array] = None,
+    fused: bool = True,
 ) -> jax.Array:
     """Grouped GEMM over stacked weights: x (G, M, K) @ w (G, K, N) ->
     (G, M, N) — the MoE expert shape (G experts, M = expert capacity).
@@ -427,6 +470,14 @@ def gemm_grouped(
     stacked :class:`~repro.core.quant.QuantizedTensor` (int8 values
     (G, K, N) + scales (G, N)) — the MoE expert weights of the quantized
     serving path.
+
+    ``fused`` (default True) runs all G groups as ONE kernel over the
+    concatenated expert tile space (``kernels/streamk/grouped``) and
+    fingerprints the op with the 8-part ``grouped_fused`` key so it tunes,
+    journals, prunes and federates independently of the per-group loop.
+    ``fused=False`` keeps the legacy one-launch-per-group path — the
+    differential oracle and the dispatch form of legacy 7-part journal
+    records.
     """
     return _gemm_stacked(
         "grouped",
@@ -442,6 +493,7 @@ def gemm_grouped(
         epilogue=epilogue,
         bias=bias,
         operand=operand,
+        fused=fused,
     )
 
 

@@ -13,6 +13,16 @@ tuning parameters" extension point the paper calls out.
 Key compatibility: a *plain* op (one group, default epilogue) encodes to the
 paper's original ``encode_mnk`` bytes and keys as the legacy ``(M, N, K)``
 tuple, so tuning artifacts produced for the 2-D path keep working unchanged.
+
+Grouped op forms: a grouped op may dispatch as a *per-group loop* (one
+kernel launch per expert group — the original backend) or *fused* (one
+persistent-grid kernel spanning the concatenated tile space of all groups,
+``fused=True``). The two execute differently enough that they must tune,
+journal, Bloom-prune and federate separately, so a fused op keys on the
+8-part extended tuple ending in the :data:`GROUPED_FUSED_MARKER`. Legacy
+journal/database artifacts carry only 3- and 7-part keys: they parse
+unchanged and keep matching exactly the loop-form ops they were tuned for —
+an old G-keyed record never leaks onto the fused path (or vice versa).
 """
 
 from __future__ import annotations
@@ -57,6 +67,7 @@ class Epilogue:
 
     @property
     def is_none(self) -> bool:
+        """True iff every stage is disabled (the identity epilogue)."""
         return self.activation == "none" and not self.bias and self.binary == "none"
 
     @property
@@ -108,6 +119,7 @@ EPILOGUE_NONE = Epilogue()
 
 
 def as_epilogue(epilogue: Union[None, str, Epilogue]) -> Epilogue:
+    """Normalise None / legacy activation string / Epilogue to Epilogue."""
     if epilogue is None:
         return EPILOGUE_NONE
     if isinstance(epilogue, Epilogue):
@@ -115,11 +127,19 @@ def as_epilogue(epilogue: Union[None, str, Epilogue]) -> Epilogue:
     return Epilogue(activation=epilogue)
 
 
-#: selector/db key: legacy (M, N, K) for plain ops, or the extended tuple
-#: (M, N, K, G, in_dtype, out_dtype, epilogue_name).
+#: op-form marker appended to the key of a fused grouped op (single
+#: persistent-grid kernel over the concatenated group tile space); its
+#: presence is what separates fused records from loop-form grouped records.
+GROUPED_FUSED_MARKER = "grouped_fused"
+
+#: selector/db key: legacy (M, N, K) for plain ops, the extended tuple
+#: (M, N, K, G, in_dtype, out_dtype, epilogue_name) for grouped/batched/
+#: fused-epilogue ops, or the 8-part form with the trailing
+#: ``GROUPED_FUSED_MARKER`` for single-kernel fused grouped ops.
 OpKey = Union[
     Tuple[int, int, int],
     Tuple[int, int, int, int, str, str, str],
+    Tuple[int, int, int, int, str, str, str, str],
 ]
 
 
@@ -132,6 +152,13 @@ class GemmOp:
     per-shard problem the MXU actually sees — which is what selection keys
     on. ``g`` counts groups/batches: stacked expert weights ``(G, K, N)``
     dispatch as one op with ``g = G``.
+
+    ``fused`` marks the single-kernel grouped op form: the pallas backend
+    lowers all G groups in ONE persistent-grid ``pallas_call`` over the
+    concatenated tile space instead of one launch per group. It is a real
+    dispatch-behaviour axis, so it is part of the fingerprint (8-part key,
+    see :data:`GROUPED_FUSED_MARKER`); ``fused=False`` (the default for
+    directly constructed ops) keys identically to pre-fusion artifacts.
     """
 
     m: int
@@ -144,20 +171,27 @@ class GemmOp:
     divisors: Tuple[int, int, int] = (1, 1, 1)
     g_divisor: int = 1
     epilogue: Epilogue = field(default_factory=Epilogue)
+    fused: bool = False
 
     def __post_init__(self):
         if self.kind not in ("plain", "grouped", "batched"):
             raise ValueError(f"unknown GemmOp kind {self.kind!r}")
         if self.kind == "plain" and self.g != 1:
             raise ValueError("plain ops have g == 1; use gemm_grouped/batched")
+        if self.fused and self.kind != "grouped":
+            raise ValueError(
+                f"fused is the grouped single-kernel op form; kind={self.kind!r}"
+            )
 
     # -- shapes ------------------------------------------------------------
     @property
     def global_mnk(self) -> Tuple[int, int, int]:
+        """Unsharded logical problem dims."""
         return (self.m, self.n, self.k)
 
     @property
     def local(self) -> Tuple[int, int, int]:
+        """Per-shard dims after dividing out the GSPMD sharding factors."""
         dm, dn, dk = self.divisors
         return (
             max(1, self.m // dm),
@@ -167,6 +201,7 @@ class GemmOp:
 
     @property
     def g_local(self) -> int:
+        """Groups per shard after expert-parallel sharding."""
         return max(1, self.g // self.g_divisor)
 
     @property
@@ -199,12 +234,17 @@ class GemmOp:
     # -- keys --------------------------------------------------------------
     @property
     def key(self) -> OpKey:
+        """Selector/database key: the narrowest form that is still exact."""
         m, n, k = self.local
         if self.is_plain:
             return (m, n, k)
-        return (m, n, k, self.g_local, self.in_dtype, self.out_dtype, self.epilogue.name)
+        base = (m, n, k, self.g_local, self.in_dtype, self.out_dtype, self.epilogue.name)
+        if self.fused:
+            return base + (GROUPED_FUSED_MARKER,)
+        return base
 
     def encode(self) -> bytes:
+        """Canonical byte encoding of :attr:`key` (Bloom-filter probe key)."""
         return encode_key(self.key)
 
     # -- constructors ------------------------------------------------------
@@ -220,6 +260,7 @@ class GemmOp:
         out_dtype: Optional[str] = None,
         epilogue: Union[None, str, Epilogue] = None,
     ) -> "GemmOp":
+        """Build a 2-D (single-group) op — the paper's original surface."""
         return cls(
             int(m),
             int(n),
@@ -236,12 +277,14 @@ def encode_key(key: OpKey) -> bytes:
 
     3-tuples use the paper's original ``encode_mnk`` layout so pre-existing
     filters/databases built from bare problem sizes remain valid; extended
-    keys append group count and dtype/epilogue fingerprints.
+    keys append group count and dtype/epilogue fingerprints, and the fused
+    grouped form additionally appends its op-form marker — so loop and
+    fused records of the same shape never collide in a Bloom filter.
     """
     if len(key) == 3:
         return encode_mnk(*key)
-    m, n, k, g, in_dt, out_dt, epi = key
-    tail = f"{in_dt}|{out_dt}|{epi}".encode()
+    m, n, k, g = key[:4]
+    tail = "|".join(str(part) for part in key[4:]).encode()
     return struct.pack("<4q", m, n, k, g) + tail
 
 
@@ -256,9 +299,16 @@ def key_to_str(key: OpKey) -> str:
 
 
 def key_from_str(s: str) -> OpKey:
+    """Inverse of :func:`key_to_str` for all three key generations.
+
+    Legacy 3-part ``"m,n,k"`` and 7-part grouped/fused-epilogue keys parse
+    exactly as they always did (and so keep dispatching the op forms they
+    were tuned for — the per-group loop path for grouped records); 8-part
+    keys carry the fused-grouped op-form marker."""
     parts = s.split(",")
     if len(parts) == 3:
         return tuple(int(x) for x in parts)  # type: ignore[return-value]
+    if len(parts) not in (7, 8):
+        raise ValueError(f"malformed op key {s!r}")
     m, n, k, g = (int(x) for x in parts[:4])
-    in_dt, out_dt, epi = parts[4], parts[5], parts[6]
-    return (m, n, k, g, in_dt, out_dt, epi)
+    return (m, n, k, g, *parts[4:])

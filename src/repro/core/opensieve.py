@@ -47,6 +47,7 @@ class QueryStats:
 
     @property
     def elimination_rate(self) -> float:
+        """Fraction of policy evaluations the filters pruned away."""
         tot = self.candidate_evals + self.pruned_evals
         return self.pruned_evals / tot if tot else 0.0
 
@@ -86,6 +87,7 @@ class OpenSieve:
         self.filters[policy.name].add(_as_key_bytes(key))
 
     def build_from_winners(self, winners: Mapping) -> "OpenSieve":
+        """Bulk-insert a {key -> winning Policy} map; returns self."""
         for key, pol in winners.items():
             self.insert_winner(key, pol)
         return self
@@ -180,6 +182,7 @@ class OpenSieve:
 
     # -- codec ---------------------------------------------------------------
     def to_bytes(self) -> bytes:
+        """Serialise all per-policy filters to the ``OSV1`` wire format."""
         blobs = [(name.encode(), f.to_bytes()) for name, f in self.filters.items()]
         out = [struct.pack("<4sI", b"OSV1", len(blobs))]
         for name, blob in blobs:
@@ -190,6 +193,7 @@ class OpenSieve:
 
     @classmethod
     def from_bytes(cls, blob: bytes) -> "OpenSieve":
+        """Inverse of :meth:`to_bytes` (generation restored separately)."""
         magic, n = struct.unpack_from("<4sI", blob)
         if magic != b"OSV1":
             raise ValueError("not an OpenSieve blob")

@@ -26,6 +26,8 @@ from typing import Tuple
 
 
 class PolicyKind(enum.Enum):
+    """The three schedule families: DP baseline, ALL_SK, HYBRID."""
+
     DP = "dp"
     ALL_SK = "all_sk"
     HYBRID = "hybrid"
@@ -52,6 +54,7 @@ class Policy:
 
     @property
     def name(self) -> str:
+        """Canonical artifact name: ``dp`` / ``all_sk`` / ``sk{b}dp``."""
         if self.kind == PolicyKind.DP:
             return "dp"
         if self.kind == PolicyKind.ALL_SK:
@@ -60,6 +63,7 @@ class Policy:
 
     @property
     def is_streamk(self) -> bool:
+        """True for the seven Stream-K++ policies (everything but DP)."""
         return self.kind != PolicyKind.DP
 
     def __str__(self) -> str:  # pragma: no cover - repr sugar
@@ -82,6 +86,7 @@ _BY_NAME = {p.name: p for p in ALL_POLICIES}
 
 
 def policy_from_name(name: str) -> Policy:
+    """Inverse of :attr:`Policy.name` (artifact deserialisation)."""
     try:
         return _BY_NAME[name]
     except KeyError:
@@ -107,6 +112,7 @@ class TileConfig:
 
     @property
     def name(self) -> str:
+        """Canonical artifact name, e.g. ``256x128x128``."""
         return f"{self.bm}x{self.bn}x{self.bk}"
 
     def vmem_bytes(

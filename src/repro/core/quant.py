@@ -78,10 +78,12 @@ class QuantizedTensor:
 
     # -- pytree protocol ---------------------------------------------------
     def tree_flatten(self):
+        """Pytree leaves: (values, scales); no static aux data."""
         return (self.values, self.scales), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
+        """Rebuild from pytree leaves without re-validating shapes."""
         values, scales = children
         # jit/scan internals flatten through with tracers/placeholder leaves
         # whose shapes may be unavailable mid-transform: rebuild without
@@ -94,14 +96,17 @@ class QuantizedTensor:
     # -- array-like surface (what gemm/model plumbing touches) -------------
     @property
     def shape(self) -> Tuple[int, ...]:
+        """Shape of the int8 values (what GEMM plumbing sizes against)."""
         return tuple(self.values.shape)
 
     @property
     def ndim(self) -> int:
+        """Rank of the int8 values."""
         return self.values.ndim
 
     @property
     def dtype(self):
+        """Storage dtype of the values (int8) — NOT the compute dtype."""
         return self.values.dtype
 
     def __repr__(self) -> str:
@@ -120,6 +125,7 @@ class QuantizedTensor:
 
 
 def is_quantized(x: Any) -> bool:
+    """True iff ``x`` is a :class:`QuantizedTensor` weight leaf."""
     return isinstance(x, QuantizedTensor)
 
 

@@ -59,6 +59,8 @@ MNK = Tuple[int, int, int]
 
 @dataclass(frozen=True)
 class Selection:
+    """One (policy, tile config, grid size) pick plus its provenance."""
+
     policy: Policy
     cfg: TileConfig
     source: str  # "tuned" | "sieve" | "fallback" | "forced"
@@ -71,6 +73,8 @@ class Selection:
 
 @dataclass
 class SelectorStats:
+    """Per-selector lookup/eval counters (the paper's accounting unit)."""
+
     lookups: int = 0
     tuned_hits: int = 0
     sieve_hits: int = 0
@@ -106,6 +110,10 @@ MissHook = Callable[[GemmOp, Selection], None]
 
 
 class KernelSelector:
+    """The paper's three-stage selection pipeline, memoised per op key:
+    tuned-database exact hit -> Bloom-sieve candidate pruning + cost-model
+    scoring -> unsieved cost-model fallback."""
+
     def __init__(
         self,
         sieve: Optional[OpenSieve] = None,
@@ -172,8 +180,10 @@ class KernelSelector:
         """Best (policy, cfg, g) over the candidate policies, sweeping the
         selector's grid sizes at the op's real byte-widths. ``evals`` counts
         *policies* scored (the unit Bloom pruning removes), whatever the
-        width of the inner cfg x g sweep."""
-        shape = GemmShape(*size)
+        width of the inner cfg x g sweep. ``size`` is a bare local (M, N, K)
+        or an already-built shape (e.g. the GroupedGemmShape of a fused
+        grouped op, whose concatenated tile space the model scores)."""
+        shape = size if isinstance(size, GemmShape) else GemmShape(*size)
         best = None
         evals = 0
         for pol in pols:
@@ -210,7 +220,7 @@ class KernelSelector:
         if key in self._cache:
             return self._cache[key], True
 
-        size = op.local
+        size = costmodel.op_shape(op)
         dt = costmodel.op_dtypes(op)
         sel: Selection
         rec = self._db_record(op)

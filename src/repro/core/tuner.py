@@ -50,7 +50,13 @@ from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core import costmodel
 from repro.core.costmodel import DtypeBytes
-from repro.core.op import GemmOp, OpKey, key_from_str, key_to_str
+from repro.core.op import (
+    GROUPED_FUSED_MARKER,
+    GemmOp,
+    OpKey,
+    key_from_str,
+    key_to_str,
+)
 from repro.core.opensieve import OpenSieve
 from repro.core.policies import (
     ALL_POLICIES,
@@ -60,7 +66,7 @@ from repro.core.policies import (
     TileConfig,
     policy_from_name,
 )
-from repro.core.workpart import GemmShape
+from repro.core.workpart import GemmShape, GroupedGemmShape
 from repro.utils.logging import get_logger
 
 log = get_logger("tuner")
@@ -85,6 +91,19 @@ def _key_local(key: OpKey) -> MNK:
     return (key[0], key[1], key[2])
 
 
+def _key_shape(entry, key: OpKey) -> GemmShape:
+    """Shape a tuning target sweeps. A GemmOp defers to
+    :func:`costmodel.op_shape` (fused grouped ops measure their whole
+    concatenated expert tile space); a raw 8-part ``grouped_fused`` key —
+    e.g. replayed from a journal — reconstructs the same GroupedGemmShape;
+    everything else sweeps the bare local (M, N, K) per group."""
+    if isinstance(entry, GemmOp):
+        return costmodel.op_shape(entry)
+    if len(key) == 8 and key[7] == GROUPED_FUSED_MARKER:
+        return GroupedGemmShape(key[0], key[1], key[2], groups=key[3])
+    return GemmShape(*_key_local(key))
+
+
 #: bare (M, N, K) targets tune under the float32 profile: a bare key is the
 #: *exact-match* dispatch key of float32 plain ops (``GemmOp.is_plain``), so
 #: the record must be honest for that owner — scoring it at 2-byte widths
@@ -106,6 +125,8 @@ def _target_dtypes(entry) -> DtypeBytes:
 
 @dataclass
 class TuningRecord:
+    """One tuned winner: the sweep result the database/journals persist."""
+
     size: OpKey  # legacy (M, N, K) or extended op-fingerprint key
     policy: str  # winner policy name
     cfg: str  # winner tile config name
@@ -132,17 +153,22 @@ class TuningRecord:
 
     @property
     def gain_over_runner_up(self) -> float:
+        """Relative win over the next distinct policy (Fig. 3's quantity)."""
         if self.runner_up_tflops <= 0:
             return 0.0
         return self.tflops / self.runner_up_tflops - 1.0
 
     @property
     def slowdown_vs_dp_of_best_sk(self) -> float:  # pragma: no cover - legacy
+        """Deprecated placeholder kept for old artifact readers."""
         return 0.0
 
 
 @dataclass
 class TuningDatabase:
+    """Keyed store of tuned winners + per-policy sweep results, with
+    snapshot/journal persistence and federation stamps."""
+
     records: Dict[OpKey, TuningRecord] = field(default_factory=dict)
     #: per-key best tflops for every policy (policy name -> tflops); kept so
     #: the Fig-2 tolerance analysis does not need to re-measure.
@@ -156,6 +182,7 @@ class TuningDatabase:
     load_errors: int = 0
 
     def winners(self) -> Dict[OpKey, Policy]:
+        """{key -> winning Policy} — what Bloom sieves are built from."""
         return {s: policy_from_name(r.policy) for s, r in self.records.items()}
 
     def build_sieve(
@@ -164,6 +191,7 @@ class TuningDatabase:
         fp_rate: float = 0.01,
         generation: int = 0,
     ) -> OpenSieve:
+        """Fresh OpenSieve populated with this database's winners."""
         sieve = OpenSieve(
             ALL_POLICIES, capacity=capacity, fp_rate=fp_rate, generation=generation
         )
@@ -199,6 +227,7 @@ class TuningDatabase:
 
     # -- persistence --------------------------------------------------------
     def save(self, path: str) -> None:
+        """Write the full JSON snapshot (string-keyed records + sweeps)."""
         payload = {
             "records": {key_to_str(s): asdict(r) for s, r in self.records.items()},
             "per_policy": {
@@ -398,14 +427,34 @@ def measure_wallclock(
         b_dtype = dtype or _dt_dtype(dt.b)
         out_dtype = dtype or _dt_dtype(dt.out)
         key = jax.random.PRNGKey(0)
-        a = jax.random.normal(key, (shape.m, shape.k)).astype(a_dtype)
-        b = jax.random.normal(key, (shape.k, shape.n)).astype(b_dtype)
-        call = jax.jit(
-            lambda a, b: sk_ops.gemm(
-                a, b, policy=policy, cfg=cfg, g=g, interpret=interpret,
-                out_dtype=out_dtype,
+        groups = getattr(shape, "groups", 1)
+        if groups > 1:
+            # fused grouped target: time the one-kernel concatenated form
+            # with stacked per-expert operands — the kernel the dispatcher
+            # actually launches for this fingerprint
+            from repro.kernels.streamk.grouped import gemm_grouped_streamk
+
+            a = jax.random.normal(
+                key, (groups, shape.m, shape.k)
+            ).astype(a_dtype)
+            b = jax.random.normal(
+                key, (groups, shape.k, shape.n)
+            ).astype(b_dtype)
+            call = jax.jit(
+                lambda a, b: gemm_grouped_streamk(
+                    a, b, policy=policy, cfg=cfg, g=g, interpret=interpret,
+                    out_dtype=out_dtype,
+                )
             )
-        )
+        else:
+            a = jax.random.normal(key, (shape.m, shape.k)).astype(a_dtype)
+            b = jax.random.normal(key, (shape.k, shape.n)).astype(b_dtype)
+            call = jax.jit(
+                lambda a, b: sk_ops.gemm(
+                    a, b, policy=policy, cfg=cfg, g=g, interpret=interpret,
+                    out_dtype=out_dtype,
+                )
+            )
         for _ in range(warmup):
             call(a, b).block_until_ready()
         t0 = time.perf_counter()
@@ -460,7 +509,7 @@ class Tuner:
         under their op-fingerprint key, measured at their real operand
         byte-widths)."""
         key = _as_key(size)
-        shape = GemmShape(*_key_local(key))
+        shape = _key_shape(size, key)
         dt = _target_dtypes(size)
         per_policy: Dict[str, float] = {}
         per_policy_cfg: Dict[str, str] = {}

@@ -25,11 +25,14 @@ from repro.core.policies import ALL_SK, DP, Policy, PolicyKind, TileConfig
 
 
 def cdiv(a: int, b: int) -> int:
+    """Ceiling division (number of size-``b`` tiles covering ``a``)."""
     return -(-a // b)
 
 
 @dataclass(frozen=True)
 class GemmShape:
+    """One GEMM problem size (local / per-shard dims the kernel executes)."""
+
     m: int
     n: int
     k: int
@@ -40,10 +43,38 @@ class GemmShape:
 
     @property
     def flops(self) -> int:
+        """True MAC FLOPs of the problem (2*M*N*K)."""
         return 2 * self.m * self.n * self.k
 
     def key(self) -> Tuple[int, int, int]:
+        """Legacy (M, N, K) tuple form."""
         return (self.m, self.n, self.k)
+
+
+@dataclass(frozen=True)
+class GroupedGemmShape(GemmShape):
+    """``groups`` same-shape GEMMs executed as ONE fused kernel over the
+    concatenated tile space (the grouped Stream-K op form).
+
+    Subclassing :class:`GemmShape` keeps every existing signature —
+    ``partition_stats``, the cost model, ``MeasureFn`` — unchanged: code
+    that does not care about groups sees a plain shape, and groups-aware
+    code reads ``getattr(shape, "groups", 1)``. Distinct type identity
+    (dataclass ``__eq__`` is class-strict) keeps fused and per-group
+    entries separate in the cost model's memo cache.
+    """
+
+    groups: int = 1
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.groups < 1:
+            raise ValueError(f"grouped shape needs groups >= 1, got {self.groups}")
+
+    @property
+    def flops(self) -> int:
+        """True FLOPs across all groups (groups * 2*M*N*K)."""
+        return self.groups * 2 * self.m * self.n * self.k
 
 
 @dataclass(frozen=True)
@@ -56,6 +87,7 @@ class WorkRange:
 
     @property
     def size(self) -> int:
+        """Number of MAC iterations in this range."""
         return self.end - self.start
 
 
@@ -74,10 +106,12 @@ class TileContribution:
 
     @property
     def num_contributors(self) -> int:
+        """How many workgroups write partials for this tile."""
         return self.last_wg - self.first_wg + 1
 
     @property
     def is_split(self) -> bool:
+        """True when the tile needs a fix-up reduction (>1 contributor)."""
         return self.num_contributors > 1
 
 
@@ -98,26 +132,32 @@ class Partition:
 
     @property
     def n_tiles_total(self) -> int:
+        """Total output tiles (SK region + data-parallel region)."""
         return self.m_tiles * self.n_tiles
 
     @property
     def dp_tiles(self) -> int:
+        """Output tiles scheduled conventionally (one workgroup each)."""
         return self.n_tiles_total - self.sk_tiles
 
     @property
     def dp_waves(self) -> int:
+        """Full ``g``-wide waves needed for the data-parallel region."""
         return cdiv(self.dp_tiles, self.g)
 
     @property
     def sk_total_iters(self) -> int:
+        """Flattened MAC iterations in the Stream-K region."""
         return self.sk_tiles * self.iters_per_tile
 
     @property
     def n_split_tiles(self) -> int:
+        """SK tiles with >1 contributor — the fix-up kernel's workload."""
         return sum(1 for c in self.contributions if c.is_split)
 
     @property
     def max_contributors(self) -> int:
+        """Worst-case contributors to any tile (partials workspace depth)."""
         return max((c.num_contributors for c in self.contributions), default=1)
 
     def tile_mn(self, tile: int) -> Tuple[int, int]:
@@ -245,9 +285,39 @@ class PartitionStats:
 def partition_stats(
     shape: GemmShape, cfg: TileConfig, g: int, policy: Policy
 ) -> PartitionStats:
+    """O(g) aggregates for one (shape, cfg, g, policy) schedule.
+
+    A :class:`GroupedGemmShape` with ``groups > 1`` models the fused
+    single-kernel grouped form: the tile space is the *concatenation* of
+    every group's tiles (``groups * m_tiles * n_tiles``), owned by one
+    persistent grid. Under any Stream-K policy the whole concatenated space
+    runs work-centric (HYBRID degenerates to ALL_SK — the single fused
+    launch has no separate data-parallel region to hand tiles to), and the
+    sequential-carry kernel resolves ragged tile boundaries in VMEM, so
+    there is no partials round-trip: ``n_split_tiles`` and
+    ``extra_contributors`` are 0 by construction. What Stream-K buys here
+    is iteration-level (instead of tile-level) wave quantization over the
+    concatenated space — exactly the paper's core claim, applied across
+    expert boundaries."""
+    groups = getattr(shape, "groups", 1)
     m_tiles = cdiv(shape.m, cfg.bm)
     n_tiles = cdiv(shape.n, cfg.bn)
     ipt = cdiv(shape.k, cfg.bk)
+    if groups > 1:
+        n_total = groups * m_tiles * n_tiles
+        sk_tiles = 0 if policy.kind == PolicyKind.DP else n_total
+        return PartitionStats(
+            m_tiles=m_tiles,
+            n_tiles=n_tiles,
+            iters_per_tile=ipt,
+            n_tiles_total=n_total,
+            sk_tiles=sk_tiles,
+            sk_total_iters=sk_tiles * ipt,
+            dp_tiles=n_total - sk_tiles,
+            dp_waves=cdiv(n_total - sk_tiles, g),
+            n_split_tiles=0,
+            extra_contributors=0,
+        )
     n_total = m_tiles * n_tiles
     sk_tiles = sk_tile_count(n_total, g, policy)
     sk_total = sk_tiles * ipt

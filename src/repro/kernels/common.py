@@ -1,11 +1,50 @@
-"""Shared helpers for the Pallas GEMM kernels."""
+"""Shared helpers for the Pallas GEMM kernels: compiler-params compat,
+padding, the fused epilogue applier, mixed-dtype MACs, and trace-time
+``pallas_call`` launch counting (how tests assert the fused grouped path
+really issues ONE kernel for all G expert groups)."""
 
 from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Iterator, List, Optional
 
 import jax.numpy as jnp
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.workpart import cdiv
+
+#: active launch log (None when counting is off); see :func:`count_launches`.
+_launch_log: Optional[List[str]] = None
+
+
+def record_launch(name: str) -> None:
+    """Note one ``pallas_call`` built by a kernel wrapper.
+
+    Called at *trace time* (when the wrapper function body runs under jit
+    tracing), so it counts launches per compiled executable — the trace/
+    launch cost the dispatcher pays — not per device invocation. No-op
+    unless a :func:`count_launches` scope is active. Because jit caches
+    traces, a wrapper re-invoked at an identical static signature does not
+    re-trace: counting tests use fresh shapes or ``jax.clear_caches()``."""
+    if _launch_log is not None:
+        _launch_log.append(name)
+
+
+@contextmanager
+def count_launches() -> Iterator[List[str]]:
+    """Collect kernel-launch names traced within the scope.
+
+    >>> with count_launches() as launches:
+    ...     jax.eval_shape(fn, *args)   # or run fn; tracing records
+    >>> len(launches)
+    """
+    global _launch_log
+    prev = _launch_log
+    _launch_log = log = []
+    try:
+        yield log
+    finally:
+        _launch_log = prev
 
 #: jax renamed TPUCompilerParams -> CompilerParams across 0.4/0.5; resolve
 #: whichever this install ships so the kernels run on both.

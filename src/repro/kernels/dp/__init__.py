@@ -1,3 +1,5 @@
+"""Data-parallel baseline GEMM kernel family (one workgroup per tile)."""
+
 from repro.kernels.dp import ops, ref
 from repro.kernels.dp.dp_gemm import dp_gemm_region
 

@@ -28,7 +28,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.policies import TileConfig
 from repro.core.workpart import cdiv
-from repro.kernels.common import CompilerParams, apply_epilogue, mixed_dot
+from repro.kernels.common import (
+    CompilerParams,
+    apply_epilogue,
+    mixed_dot,
+    record_launch,
+)
 
 
 def _dp_kernel(
@@ -163,6 +168,7 @@ def dp_gemm_region(
         has_operand=operand is not None,
     )
 
+    record_launch(f"dp_gemm_{cfg.name}")
     if tile_offset == 0:
         return pl.pallas_call(
             kernel,

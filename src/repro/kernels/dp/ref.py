@@ -6,5 +6,6 @@ import jax.numpy as jnp
 
 
 def gemm_ref(a, b, out_dtype=None):
+    """f32-accumulated ``a @ b`` cast to ``out_dtype`` (defaults to a.dtype)."""
     out_dtype = out_dtype or a.dtype
     return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)

@@ -1,3 +1,5 @@
+"""Split-K GEMM kernel family (K-sliced partials + reduction pass)."""
+
 from repro.kernels.splitk import ops, ref
 from repro.kernels.splitk.splitk_gemm import splitk_partials
 

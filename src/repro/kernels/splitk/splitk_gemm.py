@@ -21,7 +21,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.policies import TileConfig
 from repro.core.workpart import cdiv
-from repro.kernels.common import CompilerParams, mixed_dot
+from repro.kernels.common import CompilerParams, mixed_dot, record_launch
 
 
 def _splitk_kernel(a_ref, b_ref, p_ref, acc_ref, *, kps: int):
@@ -65,6 +65,7 @@ def splitk_partials(
         i = jnp.minimum(i, n_total - 1) if n_prog != n_total else i
         return i % n_tiles
 
+    record_launch(f"splitk_gemm_{cfg.name}_s{s}")
     return pl.pallas_call(
         functools.partial(_splitk_kernel, kps=kps),
         grid=(n_prog, s, kps),

@@ -1,4 +1,16 @@
-from repro.kernels.streamk import ops, ref
+"""Stream-K kernel family: persistent-grid sweep + fix-up, the jit'd public
+wrapper (:mod:`ops`), the XLA reference (:mod:`ref`), and the one-kernel
+grouped MoE form (:mod:`grouped`)."""
+
+from repro.kernels.streamk import grouped, ops, ref
+from repro.kernels.streamk.grouped import gemm_grouped_streamk
 from repro.kernels.streamk.streamk_gemm import streamk_fixup, streamk_phase1
 
-__all__ = ["ops", "ref", "streamk_fixup", "streamk_phase1"]
+__all__ = [
+    "gemm_grouped_streamk",
+    "grouped",
+    "ops",
+    "ref",
+    "streamk_fixup",
+    "streamk_phase1",
+]

@@ -46,7 +46,12 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.workpart import Partition, cdiv
-from repro.kernels.common import CompilerParams, apply_epilogue, mixed_dot
+from repro.kernels.common import (
+    CompilerParams,
+    apply_epilogue,
+    mixed_dot,
+    record_launch,
+)
 
 
 def _range_math(part: Partition):
@@ -137,6 +142,7 @@ def streamk_phase1(a, b, part: Partition, *, interpret: bool = False):
         (part.sk_tiles, mc + 1, cfg.bm, cfg.bn), jnp.float32
     )
     kernel = functools.partial(_streamk_kernel, part=part)
+    record_launch(f"streamk_p1_{cfg.name}_g{part.g}")
     return pl.pallas_call(
         kernel,
         grid=(part.g, ipw),
@@ -238,6 +244,7 @@ def streamk_fixup(
         in_specs.append(
             pl.BlockSpec((cfg.bm, cfg.bn), lambda t: (t // nt, t % nt))
         )
+    record_launch(f"streamk_fixup_{cfg.name}")
     return pl.pallas_call(
         kernel,
         grid=(part.sk_tiles,),

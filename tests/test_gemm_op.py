@@ -171,8 +171,11 @@ def test_moe_forward_logs_grouped_ops():
     for e in grouped:
         assert e.op.kind == "grouped"
         assert e.op.g == cfg.n_experts
-    # grouped ops key independently of the plain path
-    assert all(len(e.op.key) == 7 for e in grouped)
+    # grouped ops key independently of the plain path, and MoE dispatch
+    # defaults to the fused one-kernel form (8-part grouped_fused key)
+    assert all(len(e.op.key) == 8 for e in grouped)
+    assert all(e.op.key[7] == "grouped_fused" for e in grouped)
+    assert all(e.op.fused for e in grouped)
 
 
 def test_moe_epilogue_fusion_matches_unfused_reference():

@@ -1,0 +1,309 @@
+"""Tests for the one-kernel fused grouped GEMM (`kernels/streamk/grouped`)
+and its dispatch/selection/tuning threading.
+
+The per-group loop backend is the differential oracle throughout: the fused
+kernel must match it within per-dtype tolerances on every policy, ragged
+group-size pattern, and epilogue/quantization combination, while issuing
+exactly ONE pallas_call.
+"""
+
+import importlib
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+gemm_mod = importlib.import_module("repro.core.gemm")
+from repro.core.op import GROUPED_FUSED_MARKER, Epilogue, GemmOp
+from repro.core.policies import ALL_SK, DP, HYBRIDS, TileConfig
+from repro.core.quant import QuantizedTensor
+from repro.core.selector import KernelSelector
+from repro.core.tuner import (
+    Tuner,
+    TuningDatabase,
+    journal_entry,
+    key_from_str,
+    key_to_str,
+    parse_journal_line,
+)
+from repro.core.workpart import GroupedGemmShape, partition_stats
+from repro.kernels.common import count_launches
+from repro.kernels.streamk.grouped import gemm_grouped_streamk
+
+#: per-dtype absolute tolerances for fused-vs-loop differentials: both paths
+#: accumulate f32 in identical k-order, so f32/int8 should agree to float
+#: roundoff of the output store; bf16 outputs round to bf16 precision.
+TOLS = {"float32": 1e-4, "bfloat16": 2e-2, "float32*int8": 1e-4}
+
+CFG = TileConfig(8, 128, 128)
+
+
+def _rand(rng, shape, dtype):
+    x = rng.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x).astype(dtype)
+
+
+def _loop_oracle(a, b, sizes, **kw):
+    """Per-group dense reference with ragged row masking."""
+    outs = []
+    for i in range(a.shape[0]):
+        w = b[i].astype(jnp.float32)
+        acc = a[i].astype(jnp.float32) @ w
+        row = jnp.arange(a.shape[1])[:, None] < sizes[i]
+        outs.append(jnp.where(row, acc, 0.0))
+    return jnp.stack(outs)
+
+
+# ---------------------------------------------------------------------------
+# Kernel-level differentials
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", [DP, ALL_SK, HYBRIDS[0], HYBRIDS[5]])
+@pytest.mark.parametrize("g", [2, 8])
+def test_fused_matches_oracle_across_policies(policy, g):
+    rng = np.random.default_rng(0)
+    a = _rand(rng, (3, 20, 160), jnp.float32)
+    b = _rand(rng, (3, 160, 200), jnp.float32)
+    want = _loop_oracle(a, b, (20, 20, 20))
+    got = gemm_grouped_streamk(
+        a, b, policy=policy, cfg=CFG, g=g, interpret=True
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), atol=TOLS["float32"]
+    )
+
+
+@pytest.mark.parametrize(
+    "sizes",
+    [
+        (17, 3, 20),  # uneven, none tile-aligned
+        (20, 0, 5),  # empty expert in the middle
+        (0, 0, 11),  # single live expert
+    ],
+)
+def test_fused_ragged_group_sizes(sizes):
+    rng = np.random.default_rng(1)
+    a = _rand(rng, (3, 20, 96), jnp.float32)
+    b = _rand(rng, (3, 96, 72), jnp.float32)
+    want = _loop_oracle(a, b, sizes)
+    got = gemm_grouped_streamk(
+        a, b, policy=ALL_SK, cfg=CFG, g=4, interpret=True, group_sizes=sizes
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+    # rows past a group's size are exactly zero
+    for i, s in enumerate(sizes):
+        assert not np.any(np.asarray(got)[i, s:])
+
+
+def test_fused_all_empty_groups_no_launch():
+    a = jnp.zeros((2, 8, 128), jnp.float32)
+    b = jnp.zeros((2, 128, 128), jnp.float32)
+    jax.clear_caches()
+    with count_launches() as log:
+        out = gemm_grouped_streamk(
+            a, b, cfg=CFG, interpret=True, group_sizes=(0, 0)
+        )
+    assert not log
+    assert out.shape == (2, 8, 128) and not np.any(np.asarray(out))
+
+
+@pytest.mark.parametrize("in_dtype", ["float32", "bfloat16", "float32*int8"])
+def test_fused_matches_loop_backend_per_dtype(in_dtype):
+    """Dispatch-level differential: gemm_grouped fused vs fused=False."""
+    rng = np.random.default_rng(2)
+    g_count, m, k, n = 3, 12, 96, 200
+    if in_dtype == "float32*int8":
+        x = _rand(rng, (g_count, m, k), jnp.float32)
+        vals = jnp.asarray(
+            rng.integers(-127, 127, (g_count, k, n)).astype(np.int8)
+        )
+        scales = jnp.asarray(
+            (np.abs(rng.standard_normal((g_count, n))) * 0.05 + 1e-3).astype(
+                np.float32
+            )
+        )
+        w = QuantizedTensor(vals, scales)
+        tol = TOLS[in_dtype]
+    else:
+        dt = jnp.dtype(in_dtype)
+        x = _rand(rng, (g_count, m, k), dt)
+        w = _rand(rng, (g_count, k, n), dt)
+        tol = TOLS[in_dtype]
+    with gemm_mod.gemm_context(backend="pallas_interpret"):
+        out_f = gemm_mod.gemm_grouped(x, w, out_dtype=jnp.float32)
+        out_l = gemm_mod.gemm_grouped(
+            x, w, out_dtype=jnp.float32, fused=False
+        )
+    np.testing.assert_allclose(
+        np.asarray(out_f, np.float32), np.asarray(out_l, np.float32), atol=tol
+    )
+
+
+def test_fused_epilogue_stack_matches_loop():
+    """bias + mul_silu + int8 dequant, fused vs loop backends."""
+    rng = np.random.default_rng(3)
+    g_count, m, k, n = 2, 16, 128, 136
+    x = _rand(rng, (g_count, m, k), jnp.float32)
+    vals = jnp.asarray(rng.integers(-127, 127, (g_count, k, n)).astype(np.int8))
+    scales = jnp.asarray(
+        (np.abs(rng.standard_normal((g_count, n))) * 0.05 + 1e-3).astype(np.float32)
+    )
+    w = QuantizedTensor(vals, scales)
+    bias = _rand(rng, (g_count, n), jnp.float32)
+    operand = _rand(rng, (g_count, m, n), jnp.float32)
+    epi = Epilogue(bias=True, binary="mul_silu")
+    with gemm_mod.gemm_context(backend="pallas_interpret"):
+        out_f = gemm_mod.gemm_grouped(
+            x, w, epilogue=epi, bias=bias, operand=operand
+        )
+        out_l = gemm_mod.gemm_grouped(
+            x, w, epilogue=epi, bias=bias, operand=operand, fused=False
+        )
+    np.testing.assert_allclose(
+        np.asarray(out_f), np.asarray(out_l), atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# Launch counting: the headline claim
+# ---------------------------------------------------------------------------
+
+
+def test_fused_dispatch_issues_exactly_one_pallas_call():
+    rng = np.random.default_rng(4)
+    x = _rand(rng, (6, 16, 128), jnp.float32)
+    w = _rand(rng, (6, 128, 128), jnp.float32)
+    with gemm_mod.gemm_context(backend="pallas_interpret"):
+        jax.clear_caches()
+        with count_launches() as fused_log:
+            gemm_mod.gemm_grouped(x, w)
+        jax.clear_caches()
+        with count_launches() as loop_log:
+            gemm_mod.gemm_grouped(x, w, fused=False)
+    assert len(fused_log) == 1, fused_log
+    assert fused_log[0].startswith("grouped_")
+    assert len(loop_log) >= 6, loop_log  # one launch per group, minimum
+
+
+# ---------------------------------------------------------------------------
+# Fingerprint / key behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_fused_default_and_key_shape():
+    rng = np.random.default_rng(5)
+    x = _rand(rng, (2, 8, 128), jnp.float32)
+    w = _rand(rng, (2, 128, 128), jnp.float32)
+    with gemm_mod.gemm_context(backend="xla") as ctx:
+        gemm_mod.gemm_grouped(x, w)
+        gemm_mod.gemm_grouped(x, w, fused=False)
+    k_fused, k_loop = ctx.log[0].op.key, ctx.log[1].op.key
+    assert len(k_fused) == 8 and k_fused[7] == GROUPED_FUSED_MARKER
+    assert len(k_loop) == 7
+    assert k_fused[:7] == k_loop
+    # string codec roundtrips both
+    assert key_from_str(key_to_str(k_fused)) == k_fused
+    assert key_from_str(key_to_str(k_loop)) == k_loop
+
+
+def test_fused_requires_grouped_kind():
+    with pytest.raises(ValueError):
+        GemmOp(8, 8, 8, g=2, kind="batched", fused=True)
+
+
+def test_batched_dispatch_stays_loop():
+    rng = np.random.default_rng(6)
+    x = _rand(rng, (2, 8, 128), jnp.float32)
+    w = _rand(rng, (2, 128, 128), jnp.float32)
+    with gemm_mod.gemm_context(backend="xla") as ctx:
+        gemm_mod.gemm_batched(x, w)
+    assert len(ctx.log[0].op.key) == 7
+    assert not ctx.log[0].op.fused
+
+
+# ---------------------------------------------------------------------------
+# Cost model: one launch, concatenated tile space
+# ---------------------------------------------------------------------------
+
+
+def test_grouped_shape_partition_stats():
+    shape = GroupedGemmShape(256, 256, 512, groups=4)
+    st_dp = partition_stats(shape, CFG, 8, DP)
+    st_sk = partition_stats(shape, CFG, 8, ALL_SK)
+    per_group = (256 // CFG.bm) * (256 // CFG.bn)
+    assert st_dp.n_tiles_total == 4 * per_group
+    assert st_dp.sk_tiles == 0
+    assert st_sk.sk_tiles == 4 * per_group
+    # sequential-carry fused form: no partials workspace, no split tiles
+    assert st_sk.n_split_tiles == 0 and st_sk.extra_contributors == 0
+    assert shape.flops == 4 * 2 * 256 * 256 * 512
+
+
+def test_costmodel_op_shape_routes_fused():
+    from repro.core import costmodel
+
+    op = GemmOp(
+        64, 64, 128, g=4, kind="grouped", in_dtype="float32",
+        out_dtype="float32", fused=True,
+    )
+    shape = costmodel.op_shape(op)
+    assert isinstance(shape, GroupedGemmShape) and shape.groups == 4
+    assert costmodel.op_shape(replace(op, fused=False)) == shape.__class__.__mro__[1](
+        64, 64, 128
+    )
+
+
+# ---------------------------------------------------------------------------
+# Tune / journal / warm-start roundtrip for the fused op form
+# ---------------------------------------------------------------------------
+
+
+def _fused_op():
+    return GemmOp(
+        24, 72, 96, g=4, kind="grouped", in_dtype="float32",
+        out_dtype="float32", fused=True,
+    )
+
+
+def test_fused_op_tunes_journals_and_warm_starts(tmp_path):
+    op = _fused_op()
+    tuner = Tuner()
+    rec, per = tuner.tune_size(op)
+    assert rec.size == op.key
+
+    journal = tmp_path / "journal.jsonl"
+    journal.write_text(journal_entry(rec, per) + "\n")
+    rec2, per2 = parse_journal_line(journal.read_text().strip())
+    assert rec2.size == op.key and per2 == per
+
+    db = TuningDatabase()
+    db.replay_journal(str(journal))
+    sel = KernelSelector(db=db).select_op(op)
+    assert sel.source == "tuned"
+    assert sel.policy.name == rec.policy and sel.cfg.name == rec.cfg
+    assert sel.g == rec.g
+
+    # the loop-form sibling must not warm-start off the fused record
+    sel_loop = KernelSelector(db=db).select_op(replace(op, fused=False))
+    assert sel_loop.source != "tuned"
+
+
+def test_legacy_7part_journal_still_parses_and_selects(tmp_path):
+    """Old G-keyed (7-part) records parse and keep steering the loop form."""
+    op_loop = replace(_fused_op(), fused=False)
+    rec, per = Tuner().tune_size(op_loop)
+    line = journal_entry(rec, per)
+    rec2, _ = parse_journal_line(line)
+    assert rec2.size == op_loop.key and len(rec2.size) == 7
+    db = TuningDatabase()
+    db.add_record(rec2)
+    sel = KernelSelector(db=db).select_op(op_loop)
+    assert sel.source == "tuned"
+
+
+def test_malformed_key_raises():
+    with pytest.raises(ValueError):
+        key_from_str("1,2,3,4,5")
