@@ -1,0 +1,86 @@
+"""CI gate on the perf-trajectory regret section.
+
+Asserts that the newest ``BENCH_<n>.json`` in a directory (or an explicit
+file) carries the ``regret`` section the analytical-first stack emits, and
+that the calibrated model's median regret stays under a generous threshold
+per dtype profile — the tripwire for calibration drift landing in a PR.
+
+Usage:
+  PYTHONPATH=src:. python benchmarks/check_regret.py bench-results
+  PYTHONPATH=src:. python benchmarks/check_regret.py BENCH_8.json --max-median 2.0
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+
+def latest_bench(path: str) -> str:
+    """``path`` itself when it is a file, else the highest-index
+    ``BENCH_<n>.json`` inside the directory."""
+    if os.path.isfile(path):
+        return path
+    found = []
+    for p in glob.glob(os.path.join(path, "BENCH_*.json")):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", os.path.basename(p))
+        if m:
+            found.append((int(m.group(1)), p))
+    if not found:
+        raise SystemExit(f"no BENCH_<n>.json found under {path!r}")
+    return max(found)[1]
+
+
+def check(path: str, max_median: float) -> int:
+    """Validate one snapshot; returns the number of failures (printed)."""
+    with open(path) as f:
+        snap = json.load(f)
+    failures = []
+    regret = snap.get("regret")
+    if not isinstance(regret, dict):
+        failures.append("snapshot has no 'regret' section")
+    elif "error" in regret:
+        failures.append(f"regret section errored: {regret['error']}")
+    elif not regret.get("profiles"):
+        failures.append("regret section has no per-profile entries")
+    else:
+        for dt_name, entry in sorted(regret["profiles"].items()):
+            med = entry.get("median_regret")
+            if med is None:
+                failures.append(f"{dt_name}: missing median_regret")
+            elif med > max_median:
+                failures.append(
+                    f"{dt_name}: median regret {med} exceeds {max_median}x "
+                    "— the calibrated model's picks drifted from measured "
+                    "reality"
+                )
+            else:
+                print(
+                    f"{path}: {dt_name} median regret {med} "
+                    f"(<= {max_median}x), top-k hit rate "
+                    f"{entry.get('topk_hit_rate')}"
+                )
+    for msg in failures:
+        print(f"FAIL {path}: {msg}", file=sys.stderr)
+    return len(failures)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", help="BENCH_<n>.json file or a directory of them")
+    ap.add_argument(
+        "--max-median",
+        type=float,
+        default=2.0,
+        help="fail when any profile's median regret exceeds this factor",
+    )
+    args = ap.parse_args()
+    return 1 if check(latest_bench(args.path), args.max_median) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

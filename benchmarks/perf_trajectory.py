@@ -163,6 +163,99 @@ def _grouped_trajectory() -> Dict[str, dict]:
     return out
 
 
+#: top-k window the regret section scores hit rate over (the serving
+#: default for budgeted sweeps)
+REGRET_TOP_K = 5
+
+
+def _regret_section() -> Dict[str, dict]:
+    """Analytical-first fidelity: calibrate on the 923-record journal, then
+    score the calibrated model's argmin against the measurement oracle's
+    full-sweep best per suite sample. Regret = oracle wall of the model's
+    pick / oracle wall of the measured best (1.0 = the model's argmin IS
+    the measured winner); ``topk_hit_rate`` = how often the measured best
+    sits inside the model's top-k (what a budgeted sweep would measure).
+    The ``budget`` block runs real ``Tuner`` sweeps (full vs top-k) over
+    the samples — the measurement-count ratio and selected-config quality
+    the acceptance bar reads."""
+    from benchmarks.common import tuned_db
+    from repro.core import costmodel
+    from repro.core.calibrate import CalibrationError, calibrate_db, profile_key
+    from repro.core.tuner import Tuner
+    from repro.core.workpart import GemmShape
+
+    db = tuned_db()
+    try:
+        cm = calibrate_db(db)
+    except CalibrationError as e:
+        return {"error": str(e)}
+    mach_hw = costmodel.V5E  # the measurement oracle's machine
+    samples = _sample_shapes()
+    out: Dict[str, dict] = {
+        "calibration": {
+            "n_records": cm.n_records,
+            "residual": round(cm.residual, 6),
+            "fitted_profiles": list(cm.fitted_profiles),
+        },
+        "top_k": REGRET_TOP_K,
+        "profiles": {},
+    }
+    for dt_name in DTYPES:
+        out_dt = dt_name.split("*", 1)[0]
+        dt = costmodel.profile_for(dt_name, out_dt)
+        mach_cal = cm.machine_for(dt)
+        regrets: List[float] = []
+        hits = 0
+        for m, n, k in samples:
+            shape = GemmShape(m, n, k)
+            ranked_cal = costmodel.rank_candidates(shape, mach_cal, dt=dt)
+            ranked_hw = costmodel.rank_candidates(shape, mach_hw, dt=dt)
+            best = ranked_hw[0]
+            pick = ranked_cal[0]
+            t_pick = costmodel.gemm_time_s(
+                shape, pick[1], pick[0], mach_hw, pick[2], dt
+            )
+            regrets.append(t_pick / best[3])
+            head = {
+                (p.name, c.name, g)
+                for p, c, g, _ in ranked_cal[:REGRET_TOP_K]
+            }
+            if (best[0].name, best[1].name, best[2]) in head:
+                hits += 1
+        regrets.sort()
+        out["profiles"][dt_name] = {
+            "fitted": profile_key(dt) in cm.fitted_profiles,
+            "median_regret": round(regrets[len(regrets) // 2], 4),
+            "max_regret": round(regrets[-1], 4),
+            "topk_hit_rate": round(hits / len(samples), 4),
+            "samples": len(samples),
+        }
+    # the budget block: real sweeps, full-oracle vs top-k, same samples
+    t_full = Tuner()
+    t_topk = Tuner(top_k=REGRET_TOP_K, calibration=cm)
+    within = 0
+    ranks: List[int] = []
+    for m, n, k in samples:
+        rec_full, _ = t_full.tune_size((m, n, k))
+        rec_topk, _ = t_topk.tune_size((m, n, k))
+        # both tflops come from the same measurement oracle: time within
+        # 10% <=> tflops within /1.1
+        if rec_topk.tflops * 1.10 >= rec_full.tflops:
+            within += 1
+        ranks.append(rec_topk.model_rank)
+    out["budget"] = {
+        "samples": len(samples),
+        "full_measurements": t_full.measurements,
+        "topk_measurements": t_topk.measurements,
+        "measure_ratio": round(
+            t_full.measurements / max(t_topk.measurements, 1), 2
+        ),
+        "within_10pct_of_full": round(within / len(samples), 4),
+        "median_winner_model_rank": sorted(ranks)[len(ranks) // 2],
+    }
+    return out
+
+
 def _find_indices(out_dir: str) -> List[int]:
     idx = []
     for path in glob.glob(os.path.join(out_dir, "BENCH_*.json")):
@@ -236,6 +329,7 @@ def build_snapshot(
         "dispatch": _dispatch_overhead_us(),
         "suite": _modeled_suite(),
         "grouped": _grouped_trajectory(),
+        "regret": _regret_section(),
     }
     prior = [i for i in existing if i < index]
     if prior:
@@ -266,6 +360,23 @@ def main() -> None:
         snap = json.load(f)
     print(f"wrote {path}")
     print(f"dispatch: {snap['dispatch']}")
+    regret = snap.get("regret", {})
+    for dt_name, entry in sorted(regret.get("profiles", {}).items()):
+        print(
+            f"regret {dt_name}: median={entry['median_regret']} "
+            f"max={entry['max_regret']} top{regret['top_k']}_hit="
+            f"{entry['topk_hit_rate']}"
+            + ("" if entry["fitted"] else " (base machine: profile unfitted)")
+        )
+    budget = regret.get("budget")
+    if budget:
+        print(
+            f"budget: {budget['topk_measurements']} top-k vs "
+            f"{budget['full_measurements']} full measurements "
+            f"({budget['measure_ratio']}x fewer), "
+            f"{budget['within_10pct_of_full']:.0%} of shapes within 10% of "
+            f"the full-sweep winner"
+        )
     for gk, entry in sorted(snap.get("grouped", {}).items()):
         print(
             f"grouped {gk} ({entry['mnk']}): launches "

@@ -8,15 +8,30 @@ Federated sweep (N workers, each tuning a disjoint shard, merged back into
 the exact single-worker database):
 
   PYTHONPATH=src python examples/tune_gemm.py --workers 4
+
+Analytical-first extras: ``--top-k 5`` measures only the cost model's top-5
+ranked candidates per size (~5-10x fewer measurements than the exhaustive
+sweep), ``--calibrate`` fits a CalibratedMachine from the sweep's records
+(journaled with ``--journal`` so serving runs warm-start model-first
+dispatch from it), and ``--mach-json`` overrides the nominal Machine
+constants from a JSON field dict.
 """
 
 import argparse
+import json
 import os
 import tempfile
 import time
 
 from repro.configs.gemm_suite import suite
 from repro.core import Tuner, merge_journal_shards
+from repro.core import costmodel
+from repro.core.calibrate import (
+    CalibrationError,
+    append_calibration,
+    calibrate_db,
+    machine_from_json,
+)
 
 
 def main():
@@ -29,12 +44,45 @@ def main():
         default=1,
         help="shard the sweep across N simulated workers and merge journals",
     )
+    ap.add_argument(
+        "--journal",
+        default=None,
+        help="append each record (and the --calibrate fit) to this JSONL "
+        "tuning journal",
+    )
+    ap.add_argument(
+        "--top-k",
+        type=int,
+        default=None,
+        help="budgeted sweep: measure only the cost model's top-k ranked "
+        "candidates per size (default: the exhaustive oracle sweep)",
+    )
+    ap.add_argument(
+        "--calibrate",
+        action="store_true",
+        help="fit a CalibratedMachine from the sweep's records and report "
+        "the fitted terms (appended to --journal when set)",
+    )
+    ap.add_argument(
+        "--mach-json",
+        default=None,
+        help="JSON file of Machine field overrides the sweep measures under",
+    )
     args = ap.parse_args()
+
+    mach = costmodel.V5E
+    if args.mach_json:
+        with open(args.mach_json) as f:
+            mach = machine_from_json(json.load(f))
+        print(
+            f"machine overrides: peak={mach.peak_flops / 1e12:.1f} TF/s "
+            f"bw={mach.hbm_bw / 1e9:.0f} GB/s lanes={mach.lanes}"
+        )
 
     sizes = suite()[:: args.stride]
     t0 = time.time()
+    tuner = Tuner(mach=mach, top_k=args.top_k)
     if args.workers > 1:
-        tuner = Tuner()
         with tempfile.TemporaryDirectory() as tmp:
             paths = []
             for i in range(args.workers):
@@ -47,8 +95,34 @@ def main():
             f"{len(db.records)} records ({report.conflicts} conflicts)"
         )
     else:
-        db = Tuner().tune(sizes)
-    print(f"tuned {len(sizes)} sizes in {time.time() - t0:.1f}s")
+        db = tuner.tune(sizes, journal=args.journal)
+    print(
+        f"tuned {len(sizes)} sizes in {time.time() - t0:.1f}s "
+        f"({tuner.measurements} measurements"
+        + (f", top-k={args.top_k} budget)" if args.top_k else ", full sweep)")
+    )
+
+    if args.calibrate:
+        try:
+            db.set_calibration(calibrate_db(db, base=mach))
+        except CalibrationError as e:
+            print(f"calibration skipped: {e}")
+        else:
+            cm = db.calibration
+            for pk, m in cm.profiles:
+                print(
+                    f"calibrated profile {pk}: peak={m.peak_flops / 1e12:.1f} "
+                    f"TF/s bw={m.hbm_bw / 1e9:.0f} GB/s "
+                    f"launch={m.launch_overhead_s * 1e6:.2f}us "
+                    f"fixup={m.fixup_serial_s * 1e6:.2f}us"
+                )
+            print(
+                f"calibration: {cm.n_records} records, median |rel resid| "
+                f"{cm.residual:.4f}"
+            )
+            if args.journal:
+                append_calibration(args.journal, cm)
+                print(f"calibration journaled to {args.journal}")
 
     wins = {}
     for r in db.records.values():

@@ -59,6 +59,12 @@ class AdaptiveConfig:
     #: parameters for rebuilt sieves
     sieve_capacity: int = 10_000
     sieve_fp_rate: float = 0.01
+    #: budgeted adaptation sweeps: measure only the cost model's top-k
+    #: ranked candidates per hot fingerprint (see ``Tuner(top_k=...)``)
+    #: instead of the exhaustive (policy x cfg x grid) oracle sweep.
+    #: ``None`` keeps the full sweep. Only applies to the default-built
+    #: Tuner — an explicitly passed ``tuner`` keeps its own budget.
+    top_k: Optional[int] = None
 
 
 @dataclass
@@ -98,11 +104,12 @@ class AdaptiveTuner:
             # whatever the selector held (memoised picks dropped — they were
             # resolved against the old database)
             selector.hot_swap(db=self.db)
+        self.cfg = config or AdaptiveConfig()
         self.tuner = tuner or Tuner(
             policies=selector.policies, tile_configs=selector.tile_configs,
             mach=selector.mach, grid_sizes=selector.grid_sizes,
+            top_k=self.cfg.top_k, calibration=selector.calibration,
         )
-        self.cfg = config or AdaptiveConfig()
         self.journal = journal
         self.stats = AdaptiveStats()
         self._miss_counts: Dict[OpKey, int] = {}

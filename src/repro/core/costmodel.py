@@ -282,6 +282,46 @@ def gemm_tflops(
     return shape.flops / gemm_time_s(shape, cfg, policy, mach, g, dt) / 1e12
 
 
+@lru_cache(maxsize=50_000)
+def rank_candidates(
+    shape: GemmShape,
+    mach: Machine = V5E,
+    policies: Tuple[Policy, ...] = ALL_POLICIES,
+    tile_configs: Tuple[TileConfig, ...] = DEFAULT_TILE_CONFIGS,
+    grid_sizes: Optional[Tuple[int, ...]] = None,
+    dt: DtypeBytes = DEFAULT_DTYPES,
+) -> Tuple[Tuple[Policy, TileConfig, int, float], ...]:
+    """The full (policy, cfg, g) candidate list ordered by modeled time.
+
+    This is THE ranking primitive of analytical-first selection: the tuner's
+    budgeted top-k sweeps measure a prefix of it, the selector's ``"model"``
+    dispatch source launches its head, and the regret benchmark compares its
+    order against measured reality. Each entry is
+    ``(policy, cfg, g, modeled_time_s)``, ascending (fastest first); VMEM
+    feasibility is checked at the profile's real byte-widths. Exact modeled
+    ties preserve the sweep's (policy, g, cfg) iteration order — the same
+    deterministic order the legacy strict-argmax resolved them in, so
+    refactoring to rank-then-take-head changes no winner.
+
+    The cache keys on every argument *including the (frozen, hashable)
+    ``Machine``* — swapping in a calibrated machine must never read scores
+    memoised under the default ``V5E`` constants.
+    """
+    grids = grid_sizes if grid_sizes is not None else default_grid_sizes(mach)
+    out = []
+    for pol in policies:
+        for g in grids:
+            for cfg in tile_configs:
+                if vmem_working_set(cfg, dt) > mach.vmem_bytes:
+                    continue
+                t = gemm_time_s(shape, cfg, pol, mach, g, dt)
+                out.append((pol, cfg, g, t))
+    if not out:
+        raise AssertionError("no tile config fits VMEM")
+    out.sort(key=lambda c: c[3])  # stable: ties keep iteration order
+    return tuple(out)
+
+
 def best_config(
     shape: GemmShape,
     policy: Policy,
@@ -290,18 +330,20 @@ def best_config(
     g: Optional[int] = None,
     dt: DtypeBytes = DEFAULT_DTYPES,
 ) -> tuple[TileConfig, float]:
-    """Best tile config for a fixed (policy, g) (what ckProfiler sweeps per
-    GEMM instance). VMEM feasibility uses the op's real byte-widths: a config
-    that fits bf16 operands can overflow for f32."""
-    best = None
-    for cfg in tile_configs:
-        if vmem_working_set(cfg, dt) > mach.vmem_bytes:
-            continue
-        tf = gemm_tflops(shape, cfg, policy, mach, g, dt)
-        if best is None or tf > best[1]:
-            best = (cfg, tf)
-    assert best is not None, "no tile config fits VMEM"
-    return best
+    """Best tile config for a fixed (policy, g): the argmin of
+    :func:`rank_candidates` restricted to that policy and grid size. VMEM
+    feasibility uses the op's real byte-widths: a config that fits bf16
+    operands can overflow for f32."""
+    ranked = rank_candidates(
+        shape,
+        mach,
+        (policy,),
+        tuple(tile_configs),
+        (g or mach.lanes,),
+        dt,
+    )
+    _, cfg, g_win, t = ranked[0]
+    return cfg, shape.flops / t / 1e12
 
 
 def dp_baseline_tflops(

@@ -171,6 +171,17 @@ def merge_databases(
             report,
         )
         report.load_errors += db.load_errors
+        if db.calibration is not None:
+            # calibrations LWW-merge under the same hybrid (wall, version)
+            # stamp as records (ties broken deterministically — see
+            # calibrate.better_calibration), so the fleet converges on one
+            # fitted machine whatever order the shards arrive in
+            had = out.calibration
+            out.set_calibration(db.calibration, stamp=False)
+            if had is not None and dataclasses.replace(
+                had, wall=0.0, version=0
+            ) != dataclasses.replace(db.calibration, wall=0.0, version=0):
+                report.superseded += 1  # one of the two differing fits lost
     return out, report
 
 
@@ -213,6 +224,10 @@ def apply_journal_db(
             if cur is None or record_payload(cur) != record_payload(rec):
                 into.per_policy.pop(key, None)  # must not describe the loser
         into.add_record(rec, pp, stamp=False)
+    if journal_db.calibration is not None:
+        # same structural precedence as records: the journal post-dates the
+        # snapshot it accompanies, so its calibration wins outright
+        into.set_calibration(journal_db.calibration, stamp=False, force=True)
     into.load_errors += journal_db.load_errors
     return into
 
@@ -280,7 +295,7 @@ def federate_selector(
         sieve = base.build_sieve(
             capacity=capacity, fp_rate=fp_rate, generation=generation
         )
-    selector.hot_swap(db=base, sieve=sieve, keys=None)
+    selector.hot_swap(db=base, sieve=sieve, keys=None, calibration=base.calibration)
     log.info(
         "federated merge: %d sources, %d records examined -> %d merged "
         "(%d conflicts, %d superseded, %d load errors), sieve generation %d",

@@ -9,9 +9,13 @@ fingerprint — per-shard local shape, group count, dtypes, epilogue):
      the fast analytical model — at the op's *actual* operand byte-widths,
      jointly over the swept grid sizes — and the best wins.
   3. If every filter says absent (a size the tuner never saw and no filter
-     aliases), fall back to the naive single-policy default the original
-     Stream-K paper proposes — data-parallel — scored against ALL_SK for
-     safety.
+     aliases): with a :class:`~repro.core.calibrate.CalibratedMachine`
+     installed, dispatch from the calibrated model's argmin over ALL
+     policies (the ``"model"`` analytical-first warm start — still reported
+     to the miss hook, so online adaptation measures hot shapes and
+     promotes them to real database records); otherwise fall back to the
+     naive single-policy default the original Stream-K paper proposes —
+     data-parallel — scored against ALL_SK for safety.
 
 Plain 2-D ops key as the legacy ``(M, N, K)`` tuple, so tuning databases and
 sieves built from bare problem sizes keep working; grouped / epilogue-fused
@@ -63,7 +67,7 @@ class Selection:
 
     policy: Policy
     cfg: TileConfig
-    source: str  # "tuned" | "sieve" | "fallback" | "forced"
+    source: str  # "tuned" | "sieve" | "model" | "fallback" | "forced"
     evals: int  # how many (policy) evaluations the scorer performed
     pruned: int  # how many the Bloom filters eliminated
     #: grid size the kernel launches with (tuned winner's g, or the scored
@@ -78,6 +82,9 @@ class SelectorStats:
     lookups: int = 0
     tuned_hits: int = 0
     sieve_hits: int = 0
+    #: unseen fingerprints dispatched from the calibrated model's argmin —
+    #: the analytical-first warm start (still misses for online adaptation)
+    model_warm: int = 0
     fallbacks: int = 0
     cache_hits: int = 0  # memoised repeats of an already-selected op
     forced: int = 0  # caller-supplied (policy, cfg) overrides
@@ -123,6 +130,7 @@ class KernelSelector:
         tile_configs: Sequence[TileConfig] = DEFAULT_TILE_CONFIGS,
         on_miss: Optional[MissHook] = None,
         grid_sizes: Optional[Sequence[int]] = None,
+        calibration=None,
     ):
         self.sieve = sieve
         self.db = db
@@ -135,6 +143,11 @@ class KernelSelector:
             if grid_sizes is not None
             else costmodel.default_grid_sizes(mach)
         )
+        #: installed CalibratedMachine (or None): when set, all cost-model
+        #: scoring runs under the fitted per-dtype-profile machine, and
+        #: unseen fingerprints dispatch via the "model" source instead of
+        #: the naive fallback
+        self.calibration = calibration
         self.stats = SelectorStats()
         self._cache: Dict[OpKey, Selection] = {}
 
@@ -153,6 +166,7 @@ class KernelSelector:
         db: Optional[TuningDatabase] = None,
         sieve: Optional[OpenSieve] = None,
         keys: Optional[Iterable[OpKey]] = None,
+        calibration=None,
     ) -> int:
         """Install updated tuning artifacts mid-stream.
 
@@ -167,6 +181,14 @@ class KernelSelector:
             self.db = db
         if sieve is not None:
             self.sieve = sieve
+        if calibration is not None:
+            # the (frozen, hashable) machines inside the calibration key
+            # every scoring cache, so installing one can never read scores
+            # memoised under the previous constants — but a new calibration
+            # re-scores EVERY non-tuned pick, so the per-key memo is dropped
+            # wholesale regardless of ``keys``
+            self.calibration = calibration
+            keys = None
         if keys is None:
             n = len(self._cache)
             self._cache.clear()
@@ -174,27 +196,35 @@ class KernelSelector:
         return sum(1 for k in keys if self._cache.pop(k, None) is not None)
 
     # -- scoring -----------------------------------------------------------
+    def scoring_machine(self, dt: DtypeBytes) -> costmodel.Machine:
+        """Machine the cost model scores under for a byte-width profile:
+        the installed calibration's per-profile fit, else the nominal
+        machine. Frozen/hashable either way — it participates in every
+        scoring-cache key."""
+        if self.calibration is not None:
+            return self.calibration.machine_for(dt)
+        return self.mach
+
     def _score(
         self, size: MNK, pols: Sequence[Policy], dt: DtypeBytes
     ) -> Tuple[Policy, TileConfig, int, int]:
-        """Best (policy, cfg, g) over the candidate policies, sweeping the
-        selector's grid sizes at the op's real byte-widths. ``evals`` counts
+        """Best (policy, cfg, g) over the candidate policies — the argmin of
+        :func:`costmodel.rank_candidates` at the op's real byte-widths,
+        under the (possibly calibrated) scoring machine. ``evals`` counts
         *policies* scored (the unit Bloom pruning removes), whatever the
         width of the inner cfg x g sweep. ``size`` is a bare local (M, N, K)
         or an already-built shape (e.g. the GroupedGemmShape of a fused
         grouped op, whose concatenated tile space the model scores)."""
         shape = size if isinstance(size, GemmShape) else GemmShape(*size)
-        best = None
-        evals = 0
-        for pol in pols:
-            evals += 1
-            for g in self.grid_sizes:
-                cfg, tf = costmodel.best_config(
-                    shape, pol, self.mach, self.tile_configs, g=g, dt=dt
-                )
-                if best is None or tf > best[3]:
-                    best = (pol, cfg, g, tf)
-        return best[0], best[1], best[2], evals
+        pol, cfg, g, _ = costmodel.rank_candidates(
+            shape,
+            self.scoring_machine(dt),
+            tuple(pols),
+            self.tile_configs,
+            self.grid_sizes,
+            dt,
+        )[0]
+        return pol, cfg, g, len(pols)
 
     def _db_record(self, op: GemmOp):
         """Exact op-key hit first; shape-only ops of any dtype then fall
@@ -241,9 +271,19 @@ class KernelSelector:
             if cands:
                 pol, cfg, g, evals = self._score(size, cands, dt)
                 sel = Selection(pol, cfg, "sieve", evals, pruned, g=g)
+            elif self.calibration is not None:
+                # every filter said "definitely absent" — with a calibrated
+                # model installed, the unseen fingerprint dispatches from
+                # the model's argmin over ALL policies (analytical-first
+                # warm start) instead of the naive DP-vs-SK fallback
+                pol, cfg, g, evals = self._score(size, self.policies, dt)
+                sel = Selection(pol, cfg, "model", evals, pruned, g=g)
             else:
                 pol, cfg, g, evals = self._score(size, (DP, ALL_SK), dt)
                 sel = Selection(pol, cfg, "fallback", evals, pruned, g=g)
+        elif self.calibration is not None:
+            pol, cfg, g, evals = self._score(size, self.policies, dt)
+            sel = Selection(pol, cfg, "model", evals, 0, g=g)
         else:
             pol, cfg, g, evals = self._score(size, self.policies, dt)
             sel = Selection(pol, cfg, "fallback", evals, 0, g=g)
@@ -267,6 +307,8 @@ class KernelSelector:
             self.stats.tuned_hits += 1
         elif sel.source == "sieve":
             self.stats.sieve_hits += 1
+        elif sel.source == "model":
+            self.stats.model_warm += 1
         else:
             self.stats.fallbacks += 1
         self.stats.evals += sel.evals

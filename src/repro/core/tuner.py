@@ -45,7 +45,7 @@ from __future__ import annotations
 
 import json
 import time
-from dataclasses import dataclass, field, asdict
+from dataclasses import dataclass, field, asdict, replace
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core import costmodel
@@ -150,6 +150,12 @@ class TuningRecord:
     #: breaks sub-resolution ties within one. Artifacts written before this
     #: field parse with 0.0 and lose to any wall-stamped record.
     wall: float = 0.0
+    #: 1-based rank the cost model gave the measured winner at sweep time
+    #: (1 = the model's own argmin won the measurement). The calibration
+    #: drift signal: a healthy calibration keeps this small, a drifting one
+    #: pushes winners deep into the ranking. ``-1`` on records written
+    #: before top-k sweeps existed (or when the rank was not computed).
+    model_rank: int = -1
 
     @property
     def gain_over_runner_up(self) -> float:
@@ -180,6 +186,11 @@ class TuningDatabase:
     #: records dropped because their key/payload failed to parse (load +
     #: journal replay) — a format skew must be visible, not a silent shrink.
     load_errors: int = 0
+    #: installed :class:`~repro.core.calibrate.CalibratedMachine` (or None):
+    #: the fitted cost-model constants this database's producer learned from
+    #: its journal. Persists through snapshot/journal like records and
+    #: federates under the same hybrid (wall, version) LWW stamp.
+    calibration: Optional[object] = None
 
     def winners(self) -> Dict[OpKey, Policy]:
         """{key -> winning Policy} — what Bloom sieves are built from."""
@@ -225,6 +236,34 @@ class TuningDatabase:
             self.per_policy[rec.size] = per_policy
         self.version = max(self.version + 1, rec.version)
 
+    def set_calibration(self, cm, stamp: bool = True, force: bool = False) -> bool:
+        """Install a :class:`~repro.core.calibrate.CalibratedMachine`.
+
+        Mirrors :meth:`add_record`'s stamp semantics: a fresh unstamped
+        calibration (the local fit-and-commit path) is stamped with this
+        producer's ``(wall, version)`` hybrid clock; replay/merge paths pass
+        ``stamp=False`` so the producer's stamp survives. Unless ``force``,
+        an incumbent calibration only yields under the deterministic LWW
+        order (:func:`repro.core.calibrate.better_calibration`) — the same
+        contract records merge under. Returns True when the installed
+        calibration changed (bumping ``version`` so sieve-generation
+        machinery and adaptive rebuilds see it)."""
+        from repro.core.calibrate import better_calibration
+
+        if stamp and cm.version <= 0:
+            cm = replace(
+                cm,
+                version=self.version + 1,
+                wall=cm.wall if cm.wall > 0.0 else time.time(),
+            )
+        if not force and self.calibration is not None:
+            cm = better_calibration(self.calibration, cm)
+        if cm is self.calibration:
+            return False
+        self.calibration = cm
+        self.version = max(self.version + 1, cm.version)
+        return True
+
     # -- persistence --------------------------------------------------------
     def save(self, path: str) -> None:
         """Write the full JSON snapshot (string-keyed records + sweeps)."""
@@ -234,6 +273,10 @@ class TuningDatabase:
                 key_to_str(s): pp for s, pp in self.per_policy.items()
             },
         }
+        if self.calibration is not None:
+            from repro.core.calibrate import calibration_to_json
+
+            payload["calibration"] = calibration_to_json(self.calibration)
         with open(path, "w") as f:
             json.dump(payload, f)
 
@@ -261,6 +304,14 @@ class TuningDatabase:
             except (ValueError, IndexError) as e:
                 db.load_errors += 1
                 log.warning("dropping unparsable per-policy key %r: %s", key, e)
+        if payload.get("calibration") is not None:
+            from repro.core.calibrate import calibration_from_json
+
+            try:
+                db.calibration = calibration_from_json(payload["calibration"])
+            except (ValueError, KeyError, TypeError) as e:
+                db.load_errors += 1
+                log.warning("dropping unparsable calibration: %s", e)
         if db.load_errors:
             log.warning(
                 "%s: dropped %d unparsable entries (kept %d records) — "
@@ -272,6 +323,8 @@ class TuningDatabase:
         # resume the producer's commit clock so post-load commits outrank
         # every loaded record in a federated merge
         db.version = max((r.version for r in db.records.values()), default=0)
+        if db.calibration is not None:
+            db.version = max(db.version, db.calibration.version)
         if journal is not None:
             db.replay_journal(journal, missing_ok=True)
         return db
@@ -305,11 +358,23 @@ class TuningDatabase:
             if not raw.strip():
                 continue
             try:
-                rec, per_policy = parse_journal_line(raw.decode("utf-8"))
-                # stamp=False: replay reconstructs producer state — legacy
-                # version-less lines must stay 0 (and lose merges), not be
-                # promoted to fresh local commits
-                self.add_record(rec, per_policy, stamp=False)
+                entry = json.loads(raw.decode("utf-8"))
+                if isinstance(entry, dict) and "calibration" in entry:
+                    # the journal's second entry type: a fitted calibration
+                    # (see calibrate.calibration_entry). Replayed under the
+                    # same LWW order as merges, producer stamp preserved.
+                    from repro.core.calibrate import calibration_from_json
+
+                    self.set_calibration(
+                        calibration_from_json(entry["calibration"]),
+                        stamp=False,
+                    )
+                else:
+                    rec, per_policy = _entry_record(entry)
+                    # stamp=False: replay reconstructs producer state —
+                    # legacy version-less lines must stay 0 (and lose
+                    # merges), not be promoted to fresh local commits
+                    self.add_record(rec, per_policy, stamp=False)
                 applied += 1
             except (ValueError, IndexError, TypeError, KeyError) as e:
                 self.load_errors += 1
@@ -331,15 +396,21 @@ class TuningDatabase:
         return applied
 
 
-def parse_journal_line(line: str) -> Tuple[TuningRecord, Optional[Dict[str, float]]]:
-    """Parse one journal line into (record, per_policy). Raises on any
-    malformed input (``replay_journal`` / shard mergers decide whether that
-    is fatal). Legacy lines parse with ``g = LEGACY_GRID``/``version = 0``."""
-    entry = json.loads(line)
+def _entry_record(entry: dict) -> Tuple[TuningRecord, Optional[Dict[str, float]]]:
+    """(record, per_policy) from a decoded record-type journal entry."""
     size = key_from_str(entry["key"])
     rec = dict(entry["record"])
     rec.pop("size", None)
     return TuningRecord(size=size, **rec), entry.get("per_policy")
+
+
+def parse_journal_line(line: str) -> Tuple[TuningRecord, Optional[Dict[str, float]]]:
+    """Parse one record-type journal line into (record, per_policy). Raises
+    on any malformed input (``replay_journal`` / shard mergers decide whether
+    that is fatal). Legacy lines parse with ``g = LEGACY_GRID``/``version =
+    0``. Calibration entries are not records — ``replay_journal`` routes
+    them to :meth:`TuningDatabase.set_calibration` instead."""
+    return _entry_record(json.loads(line))
 
 
 def journal_entry(
@@ -483,7 +554,24 @@ def shard_targets(sizes: Sequence, index: int, n_shards: int) -> List:
 class Tuner:
     """Sweep (policy x tile config x grid size) per problem size; record
     winner and runner-up (runner-up = best configuration of the *second-best
-    policy*, which is what the paper's Fig. 3 violin compares against)."""
+    policy*, which is what the paper's Fig. 3 violin compares against).
+
+    Two sweep budgets:
+
+      * ``top_k=None`` (default) — the exhaustive oracle: every feasible
+        (policy, cfg, g) is measured, exactly the classic ckProfiler sweep.
+      * ``top_k=k`` — the analytical-first budget: only the cost model's
+        top-k ranked candidates (:func:`costmodel.rank_candidates`, under
+        the installed ``calibration``'s machine when one is set) are
+        measured, plus DP's best-ranked candidate (so ``dp_best_tflops``
+        stays honest) and at least one candidate of a second policy (so the
+        runner-up field stays meaningful) — ~k+2 measurements instead of
+        ~|policies| x |cfgs| x |grids|. Each record notes the measured
+        winner's model rank, the drift signal calibration quality is judged
+        by.
+
+    ``measurements`` counts every ``measure_fn`` call across the tuner's
+    lifetime — the budget the top-k acceptance criterion compares."""
 
     def __init__(
         self,
@@ -492,7 +580,11 @@ class Tuner:
         measure_fn: Optional[MeasureFn] = None,
         mach: costmodel.Machine = costmodel.V5E,
         grid_sizes: Optional[Sequence[int]] = None,
+        top_k: Optional[int] = None,
+        calibration=None,
     ):
+        if top_k is not None and top_k < 1:
+            raise ValueError(f"top_k must be >= 1, got {top_k}")
         self.policies = tuple(policies)
         self.tile_configs = tuple(tile_configs)
         self.measure = measure_fn or measure_model(mach)
@@ -502,15 +594,81 @@ class Tuner:
             if grid_sizes is not None
             else costmodel.default_grid_sizes(mach)
         )
+        self.top_k = top_k
+        self.calibration = calibration
+        self.measurements = 0
 
-    def tune_size(self, size) -> Tuple[TuningRecord, Dict[str, float]]:
-        """Sweep one tuning target — a bare (M, N, K) or a full GemmOp
-        (grouped / fused ops tune per-group on their local shape and record
-        under their op-fingerprint key, measured at their real operand
-        byte-widths)."""
-        key = _as_key(size)
-        shape = _key_shape(size, key)
-        dt = _target_dtypes(size)
+    def _rank_machine(self, dt: DtypeBytes) -> costmodel.Machine:
+        """Machine the model ranks candidates under: the calibration's
+        per-profile fit when installed, the nominal machine otherwise."""
+        if self.calibration is not None:
+            return self.calibration.machine_for(dt)
+        return self.mach
+
+    def _ranked(self, shape: GemmShape, dt: DtypeBytes):
+        return costmodel.rank_candidates(
+            shape,
+            self._rank_machine(dt),
+            self.policies,
+            self.tile_configs,
+            self.grid_sizes,
+            dt,
+        )
+
+    def _model_rank(
+        self, shape: GemmShape, dt: DtypeBytes, policy: str, cfg: str, g: int
+    ) -> int:
+        """1-based model rank of a (policy, cfg, g) pick (-1 if unranked)."""
+        for i, (pol, c, gg, _) in enumerate(self._ranked(shape, dt), 1):
+            if pol.name == policy and c.name == cfg and gg == g:
+                return i
+        return -1
+
+    @staticmethod
+    def _runner_up(ranked_pols: List[Tuple[str, float]]) -> Tuple[str, float]:
+        """Runner-up = best policy with strictly lower measured performance
+        (the deterministic cost model produces exact ties between sibling
+        schedules — e.g. HYBRID(b) variants whose extra batches are moot —
+        which real-hardware noise would separate; Fig.3 compares against
+        the next *distinct* configuration)."""
+        w_name, w_tf = ranked_pols[0]
+        r_name, r_tf = ranked_pols[1] if len(ranked_pols) > 1 else (w_name, 0.0)
+        for name, tf in ranked_pols[1:]:
+            if tf < w_tf * (1 - 1e-9):
+                r_name, r_tf = name, tf
+                break
+        return r_name, r_tf
+
+    def _record(
+        self,
+        key: OpKey,
+        shape: GemmShape,
+        dt: DtypeBytes,
+        per_policy: Dict[str, float],
+        per_policy_cfg: Dict[str, str],
+        per_policy_g: Dict[str, int],
+    ) -> TuningRecord:
+        ranked = sorted(per_policy.items(), key=lambda kv: kv[1], reverse=True)
+        w_name, w_tf = ranked[0]
+        r_name, r_tf = self._runner_up(ranked)
+        return TuningRecord(
+            size=key,
+            policy=w_name,
+            cfg=per_policy_cfg[w_name],
+            tflops=w_tf,
+            runner_up_policy=r_name,
+            runner_up_tflops=r_tf,
+            dp_best_tflops=per_policy.get(DP.name, 0.0),
+            g=per_policy_g[w_name],
+            model_rank=self._model_rank(
+                shape, dt, w_name, per_policy_cfg[w_name], per_policy_g[w_name]
+            ),
+        )
+
+    def _tune_size_full(
+        self, key: OpKey, shape: GemmShape, dt: DtypeBytes
+    ) -> Tuple[TuningRecord, Dict[str, float]]:
+        """The exhaustive oracle sweep: every feasible (policy, cfg, g)."""
         per_policy: Dict[str, float] = {}
         per_policy_cfg: Dict[str, str] = {}
         per_policy_g: Dict[str, int] = {}
@@ -523,34 +681,63 @@ class Tuner:
                     if costmodel.vmem_working_set(cfg, dt) > self.mach.vmem_bytes:
                         continue
                     tf = self.measure(shape, pol, cfg, g, dt)
+                    self.measurements += 1
                     if tf > best:
                         best, best_cfg, best_g = tf, cfg, g
             per_policy[pol.name] = best
             per_policy_cfg[pol.name] = best_cfg.name
             per_policy_g[pol.name] = best_g
-        ranked = sorted(per_policy.items(), key=lambda kv: kv[1], reverse=True)
-        w_name, w_tf = ranked[0]
-        # runner-up = best policy with strictly lower modeled performance
-        # (the deterministic cost model produces exact ties between sibling
-        # schedules — e.g. HYBRID(b) variants whose extra batches are moot —
-        # which real-hardware noise would separate; Fig.3 compares against
-        # the next *distinct* configuration)
-        r_name, r_tf = ranked[1]
-        for name, tf in ranked[1:]:
-            if tf < w_tf * (1 - 1e-9):
-                r_name, r_tf = name, tf
-                break
-        rec = TuningRecord(
-            size=key,
-            policy=w_name,
-            cfg=per_policy_cfg[w_name],
-            tflops=w_tf,
-            runner_up_policy=r_name,
-            runner_up_tflops=r_tf,
-            dp_best_tflops=per_policy.get(DP.name, 0.0),
-            g=per_policy_g[w_name],
-        )
+        rec = self._record(key, shape, dt, per_policy, per_policy_cfg, per_policy_g)
         return rec, per_policy
+
+    def _tune_size_topk(
+        self, key: OpKey, shape: GemmShape, dt: DtypeBytes
+    ) -> Tuple[TuningRecord, Dict[str, float]]:
+        """The budgeted model-first sweep: measure only the cost model's
+        top-k candidates (+ DP's best-ranked, + one second-policy candidate
+        when the head is single-policy)."""
+        ranked = self._ranked(shape, dt)
+        cand = list(ranked[: self.top_k])
+        have = {(c[0].name, c[1].name, c[2]) for c in cand}
+        pols = {c[0].name for c in cand}
+        # dp_best_tflops is the paper's tolerance baseline — always measure
+        # DP's best-ranked candidate even when it falls outside the head
+        if DP in self.policies and DP.name not in pols:
+            dp_c = next((c for c in ranked if c[0] is DP), None)
+            if dp_c is not None and (DP.name, dp_c[1].name, dp_c[2]) not in have:
+                cand.append(dp_c)
+                have.add((DP.name, dp_c[1].name, dp_c[2]))
+                pols.add(DP.name)
+        # a meaningful runner-up needs a second distinct policy in budget
+        if len(pols) < 2:
+            alt = next((c for c in ranked if c[0].name not in pols), None)
+            if alt is not None:
+                cand.append(alt)
+                pols.add(alt[0].name)
+        per_policy: Dict[str, float] = {}
+        per_policy_cfg: Dict[str, str] = {}
+        per_policy_g: Dict[str, int] = {}
+        for pol, cfg, g, _ in cand:
+            tf = self.measure(shape, pol, cfg, g, dt)
+            self.measurements += 1
+            if tf > per_policy.get(pol.name, -1.0):
+                per_policy[pol.name] = tf
+                per_policy_cfg[pol.name] = cfg.name
+                per_policy_g[pol.name] = g
+        rec = self._record(key, shape, dt, per_policy, per_policy_cfg, per_policy_g)
+        return rec, per_policy
+
+    def tune_size(self, size) -> Tuple[TuningRecord, Dict[str, float]]:
+        """Sweep one tuning target — a bare (M, N, K) or a full GemmOp
+        (grouped / fused ops tune per-group on their local shape and record
+        under their op-fingerprint key, measured at their real operand
+        byte-widths). ``top_k`` picks the budget (see class docstring)."""
+        key = _as_key(size)
+        shape = _key_shape(size, key)
+        dt = _target_dtypes(size)
+        if self.top_k is not None:
+            return self._tune_size_topk(key, shape, dt)
+        return self._tune_size_full(key, shape, dt)
 
     def tune(
         self,

@@ -55,6 +55,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import glob
+import json
 import os
 import time
 
@@ -62,7 +63,14 @@ import jax
 import numpy as np
 
 from repro.configs import list_archs
+from repro.core import costmodel
 from repro.core.adaptive import AdaptiveConfig, AdaptiveTuner
+from repro.core.calibrate import (
+    CalibrationError,
+    append_calibration,
+    calibrate_db,
+    machine_from_json,
+)
 from repro.core.federate import apply_journal_db, merge_journal_shards
 from repro.core.gemm import gemm_context
 from repro.core.selector import KernelSelector
@@ -232,6 +240,29 @@ def main() -> int:
         "2*lanes} for the machine model)",
     )
     ap.add_argument(
+        "--calibrate",
+        action="store_true",
+        help="fit a CalibratedMachine from the warm-start records before "
+        "serving (robust least-squares per dtype profile over journaled "
+        "wall clocks); unseen fingerprints then dispatch from the model's "
+        "argmin ('model' source) and the fit is journaled for the next run",
+    )
+    ap.add_argument(
+        "--top-k",
+        type=int,
+        default=None,
+        help="budgeted adaptation sweeps: measure only the cost model's "
+        "top-k ranked candidates per hot fingerprint instead of the "
+        "exhaustive (policy x tile x grid) sweep",
+    )
+    ap.add_argument(
+        "--mach-json",
+        default=None,
+        help="JSON file of Machine field overrides (e.g. "
+        '\'{"peak_flops": 1.5e14, "lanes": 4}\') — the nominal machine '
+        "scoring/tuning/calibration run against",
+    )
+    ap.add_argument(
         "--db",
         default=None,
         help="tuning database snapshot to warm-start the selector from",
@@ -295,7 +326,21 @@ def main() -> int:
             raise SystemExit(f"bad --grid-sweep {args.grid_sweep!r}") from None
         if not grid_sizes or min(grid_sizes) < 1:
             raise SystemExit(f"bad --grid-sweep {args.grid_sweep!r}")
-    use_artifacts = bool(args.db or args.journal or args.adapt)
+
+    mach = costmodel.V5E
+    if args.mach_json:
+        try:
+            with open(args.mach_json) as f:
+                mach = machine_from_json(json.load(f))
+        except (OSError, ValueError, TypeError) as e:
+            raise SystemExit(f"bad --mach-json {args.mach_json!r}: {e}") from None
+        log.info(
+            "machine overrides: peak=%.1f TF/s bw=%.0f GB/s lanes=%d",
+            mach.peak_flops / 1e12,
+            mach.hbm_bw / 1e9,
+            mach.lanes,
+        )
+    use_artifacts = bool(args.db or args.journal or args.adapt or args.calibrate)
 
     def warm_db(w: int) -> TuningDatabase:
         """Worker ``w``'s warm-start database — each simulated process
@@ -350,16 +395,39 @@ def main() -> int:
     def build_worker(w: int):
         if use_artifacts:
             db = warm_db(w)
+            # a calibration replayed from the journal/snapshot warm-starts
+            # model-first dispatch even without --calibrate
+            calibration = db.calibration
+            if args.calibrate:
+                try:
+                    db.set_calibration(calibrate_db(db, base=mach))
+                except CalibrationError as e:
+                    log.warning("worker %d: calibration skipped: %s", w, e)
+                else:
+                    calibration = db.calibration
+                    if args.journal:
+                        append_calibration(
+                            shard_journal_path(args.journal, w, args.workers),
+                            calibration,
+                        )
             sieve = db.build_sieve() if db.records else None
-            selector = KernelSelector(sieve=sieve, db=db, grid_sizes=grid_sizes)
+            selector = KernelSelector(
+                sieve=sieve,
+                db=db,
+                mach=mach,
+                grid_sizes=grid_sizes,
+                calibration=calibration,
+            )
             log.info(
-                "worker %d warm-start: %d tuned records (%d dropped at load)",
+                "worker %d warm-start: %d tuned records (%d dropped at "
+                "load), calibration %s",
                 w,
                 len(db.records),
                 db.load_errors,
+                "installed" if calibration is not None else "absent",
             )
         else:
-            selector = KernelSelector(grid_sizes=grid_sizes)
+            selector = KernelSelector(mach=mach, grid_sizes=grid_sizes)
         adaptive = None
         if args.adapt:
             adaptive = AdaptiveTuner(
@@ -367,6 +435,7 @@ def main() -> int:
                 config=AdaptiveConfig(
                     budget_s=args.adapt_budget,
                     hot_threshold=args.adapt_threshold,
+                    top_k=args.top_k,
                 ),
                 journal=shard_journal_path(args.journal, w, args.workers)
                 if args.journal
@@ -503,10 +572,12 @@ def main() -> int:
         if adaptive is not None:
             st = engine.dispatch_stats
             log.info(
-                "worker %d adaptation: %d misses -> %d records committed "
-                "(sieve generation %d, %d pending, db=%d records)",
+                "worker %d adaptation: %d misses (%d model-warm) -> %d "
+                "records committed (sieve generation %d, %d pending, "
+                "db=%d records)",
                 w,
                 st.misses,
+                st.model_warm,
                 st.adaptations,
                 st.sieve_generation,
                 st.pending_hot,

@@ -96,6 +96,10 @@ class DispatchStats:
     sieve_generation: int  # build version of the live sieve
     db_records: int  # tuning database size
     pending_hot: int  # promoted fingerprints awaiting an adaptation round
+    #: unseen fingerprints served from the calibrated model's argmin (the
+    #: "model" selection source) — analytical warm starts, still counted as
+    #: misses by the adaptive loop so hot ones get measured and promoted
+    model_warm: int = 0
 
     def __getattr__(self, name):
         return getattr(self.selector, name)
@@ -222,7 +226,11 @@ class EngineCore:
         else:
             # without an adaptive loop, "miss" degrades to the cold
             # non-database selections the selector itself counted
-            misses = sel.stats.sieve_hits + sel.stats.fallbacks
+            misses = (
+                sel.stats.sieve_hits
+                + sel.stats.model_warm
+                + sel.stats.fallbacks
+            )
             adaptations = 0
             pending = 0
             db_records = len(sel.db.records) if sel.db is not None else 0
@@ -233,6 +241,7 @@ class EngineCore:
             sieve_generation=sel.sieve_generation,
             db_records=db_records,
             pending_hot=pending,
+            model_warm=sel.stats.model_warm,
         )
 
     def _sample(self, logits: np.ndarray, temperature: float) -> int:

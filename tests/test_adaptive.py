@@ -270,6 +270,37 @@ def test_drain_flushes_everything_and_rebuilds():
     assert sel.sieve_generation == 1  # final fold-in even below rebuild_every
 
 
+def test_model_warm_dispatch_promotes_then_tunes():
+    """The analytical-first lifecycle: an unseen fingerprint warm-starts
+    from the calibrated model (source "model"), still counts as a miss so
+    the hot threshold promotes it, adapt() measures and commits — and the
+    next dispatch is a real database hit matching the offline sweep."""
+    from repro.core.calibrate import CalibratedMachine
+
+    sel, db = cold_selector()
+    sel.hot_swap(calibration=CalibratedMachine())  # base-machine fit
+    ad = AdaptiveTuner(
+        sel, config=AdaptiveConfig(hot_threshold=2, rebuild_every=1, top_k=3)
+    )
+    assert ad.tuner.top_k == 3  # the default-built tuner takes the budget
+    op = OPS[0]
+    pre = sel.select_op(op)
+    sel.select_op(op)
+    assert pre.source == "model"  # not "fallback": model argmin launched
+    assert sel.stats.model_warm == 1
+    assert ad.stats.misses == 2 and ad.pending_hot == 1  # warm != tuned
+    ad.adapt()
+    post = sel.select_op(op)
+    offline, _ = Tuner().tune_size(op)
+    assert post.source == "tuned"
+    assert post.policy.name == offline.policy
+    assert post.cfg.name == offline.cfg
+    assert db.records[op.key].model_rank >= 1  # budgeted sweep noted rank
+    # once tuned, repeat dispatches stop feeding the miss queue
+    sel.select_op(op)
+    assert ad.stats.misses == 2
+
+
 def test_adaptive_journal_commits_warm_start_next_run(tmp_path):
     """Records learned while serving survive the restart: replaying the
     journal into a fresh selector turns yesterday's misses into DB hits."""

@@ -1,0 +1,392 @@
+"""Analytical-first selection: calibration fit recovery, persistence,
+federated LWW determinism, machine-keyed scoring caches, model-source
+dispatch, and top-k budgeted sweeps.
+
+The planted-machine tests exploit that the in-container measurement oracle
+*is* the cost model: tuning under a perturbed machine produces journal wall
+clocks the fit must decompose back into exactly the planted terms. Terms
+the winner set cannot identify (peak FLOP/s when every winner is
+memory-bound) must pin to the base machine rather than drift.
+"""
+
+import dataclasses
+import json
+
+import pytest
+
+from repro.core import costmodel
+from repro.core.calibrate import (
+    MIN_RECORDS,
+    CalibratedMachine,
+    CalibrationError,
+    append_calibration,
+    better_calibration,
+    calibrate_db,
+    calibrate_journal,
+    calibrate_records,
+    calibration_entry,
+    calibration_from_json,
+    key_dtypes,
+    machine_from_json,
+    machine_to_json,
+    profile_key,
+    record_wall_s,
+)
+from repro.core.costmodel import V5E
+from repro.core.federate import merge_databases
+from repro.core.op import GemmOp
+from repro.core.selector import KernelSelector
+from repro.core.tuner import Tuner, TuningDatabase
+from repro.core.workpart import GemmShape
+
+from tests.hypothesis_compat import given, settings, st
+
+
+F32 = costmodel.profile_for("float32", "float32")
+
+#: the machine the synthetic journal is measured under — bandwidth, launch
+#: and fix-up all moved off the V5E defaults the fit starts from
+PLANTED = dataclasses.replace(
+    V5E, hbm_bw=600e9, launch_overhead_s=5e-6, fixup_serial_s=3e-6
+)
+
+#: square-ish shapes identify bandwidth + launch; the skinny large-K tail
+#: forces ALL_SK winners with split-tile fix-ups so the serialization term
+#: is excited too (without them it pins to base — see the pinning test)
+SQUAREISH = [
+    (m, n, k)
+    for m in (64, 128, 256, 512)
+    for n in (128, 256, 512)
+    for k in (128, 512)
+][:20]
+SKINNY = [
+    (8, 128, 4096),
+    (16, 128, 8192),
+    (8, 256, 4096),
+    (16, 64, 8192),
+    (32, 128, 4096),
+    (8, 128, 8192),
+    (16, 256, 4096),
+    (32, 64, 8192),
+]
+
+
+@pytest.fixture(scope="module")
+def planted_db():
+    """Full-sweep database measured under the planted machine."""
+    return Tuner(mach=PLANTED).tune(SQUAREISH + SKINNY)
+
+
+@pytest.fixture(scope="module")
+def planted_cm(planted_db):
+    return calibrate_db(planted_db, base=V5E)
+
+
+# -- fit recovery ------------------------------------------------------------
+
+
+def test_fit_recovers_planted_terms(planted_db, planted_cm):
+    """The fit decomposes synthetic walls back into the planted machine:
+    bandwidth, launch overhead and fix-up serialization recover to within
+    0.1%, and the residual is numerically zero."""
+    m = planted_cm.machine_for(F32)
+    assert m.hbm_bw == pytest.approx(PLANTED.hbm_bw, rel=1e-3)
+    assert m.launch_overhead_s == pytest.approx(
+        PLANTED.launch_overhead_s, rel=1e-3
+    )
+    assert m.fixup_serial_s == pytest.approx(PLANTED.fixup_serial_s, rel=1e-3)
+    assert planted_cm.residual < 1e-6
+    assert planted_cm.n_records == len(SQUAREISH) + len(SKINNY)
+    assert planted_cm.fitted_profiles == (profile_key(F32),)
+
+
+def test_unidentifiable_terms_pin_to_base(planted_db, planted_cm):
+    """Every winner in the synthetic journal is memory-bound, so the
+    1/peak_flops column is never excited — the fit must pin it to the base
+    machine's value instead of inventing a coefficient. Likewise a journal
+    with no split-tile winners cannot identify the fix-up tail."""
+    assert planted_cm.machine_for(F32).peak_flops == V5E.peak_flops
+
+    no_fixup = {k: planted_db.records[k] for k in map(tuple, SQUAREISH)}
+    cm = calibrate_records(no_fixup.items(), base=V5E)
+    m = cm.machine_for(F32)
+    assert m.fixup_serial_s == V5E.fixup_serial_s  # pinned, not drifted
+    assert m.hbm_bw == pytest.approx(PLANTED.hbm_bw, rel=1e-3)
+
+
+def test_unfitted_profile_falls_back_to_base(planted_cm):
+    bf16 = costmodel.profile_for("bfloat16", "bfloat16")
+    assert planted_cm.machine_for(bf16) is planted_cm.base
+
+
+def test_under_floor_profile_skipped_not_fatal():
+    """A mixed journal fits the profiles that reach the floor and skips the
+    sparse ones (extended op keys carry their dtypes in the key itself)."""
+    ops = [GemmOp.plain(m, n, k, in_dtype="bfloat16") for m, n, k in SQUAREISH[:2]]
+    db = Tuner(mach=PLANTED).tune(SQUAREISH + ops)
+    bf16 = costmodel.profile_for("bfloat16", "bfloat16")
+    assert key_dtypes(ops[0].key) == bf16  # 7-part key: dtypes from the key
+    cm = calibrate_db(db, base=V5E)
+    assert cm.fitted_profiles == (profile_key(F32),)  # bf16 under the floor
+    assert cm.machine_for(bf16) is cm.base
+    assert cm.machine_for(F32).hbm_bw == pytest.approx(
+        PLANTED.hbm_bw, rel=1e-3
+    )
+
+
+def test_min_records_refusal():
+    """A fit on a handful of records is refused outright — model-first
+    dispatch must never launch from coefficients fitted on noise."""
+    db = Tuner(mach=PLANTED).tune(SQUAREISH[:3])
+    with pytest.raises(CalibrationError):
+        calibrate_db(db, base=V5E)
+    # the floor is a parameter, not a constant baked into the refusal
+    cm = calibrate_db(db, base=V5E, min_records=3)
+    assert cm.n_records == 3
+    assert len(SQUAREISH[:3]) < MIN_RECORDS
+
+
+def test_record_wall_reconstruction(planted_db):
+    """wall = flops / tflops, and unusable records answer None."""
+    key = tuple(SQUAREISH[0])
+    rec = planted_db.records[key]
+    wall = record_wall_s(key, rec)
+    assert wall == pytest.approx(
+        GemmShape(*key).flops / (rec.tflops * 1e12)
+    )
+    assert record_wall_s(key, dataclasses.replace(rec, tflops=0.0)) is None
+
+
+# -- persistence: the calibration journal entry type -------------------------
+
+
+def test_calibration_entry_roundtrip(planted_cm):
+    line = calibration_entry(planted_cm)
+    back = calibration_from_json(json.loads(line)["calibration"])
+    assert back == planted_cm
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.floats(min_value=1e9, max_value=1e15),
+    st.floats(min_value=1e8, max_value=1e12),
+    st.floats(min_value=0, max_value=1e-3),
+    st.floats(min_value=0, max_value=1e-3),
+    st.integers(min_value=0, max_value=10**6),
+    st.floats(min_value=0, max_value=2e9),
+    st.integers(min_value=0, max_value=10**6),
+)
+def test_calibration_roundtrip_property(
+    peak, bw, launch, fixup, n, wall, version
+):
+    """Any fitted machine + stamp survives the JSONL entry byte-exactly
+    (finite floats roundtrip through json verbatim)."""
+    m = dataclasses.replace(
+        V5E,
+        peak_flops=peak,
+        hbm_bw=bw,
+        launch_overhead_s=launch,
+        fixup_serial_s=fixup,
+    )
+    cm = CalibratedMachine(
+        base=V5E,
+        profiles=((profile_key(F32), m),),
+        n_records=n,
+        residual=0.25,
+        wall=wall,
+        version=version,
+    )
+    back = calibration_from_json(
+        json.loads(calibration_entry(cm))["calibration"]
+    )
+    assert back == cm
+
+
+def test_machine_json_rejects_unknown_fields():
+    d = machine_to_json(V5E)
+    assert machine_from_json(d) == V5E
+    d["warp_size"] = 32
+    with pytest.raises(ValueError, match="warp_size"):
+        machine_from_json(d)
+
+
+def test_journal_carries_calibration(tmp_path, planted_cm):
+    """The journal's second entry type: records + a calibration replay into
+    a fresh database, and the snapshot roundtrip keeps the calibration."""
+    journal = str(tmp_path / "journal.jsonl")
+    Tuner(mach=PLANTED).tune(SQUAREISH[:4], journal=journal)
+    append_calibration(journal, planted_cm)
+
+    db = TuningDatabase()
+    assert db.replay_journal(journal) == 5  # 4 records + 1 calibration
+    assert db.load_errors == 0
+    assert db.calibration == planted_cm
+    assert len(db.records) == 4
+
+    snap = str(tmp_path / "db.json")
+    db.save(snap)
+    loaded = TuningDatabase.load(snap)
+    assert loaded.calibration == planted_cm
+
+    # the convenience fitter reads the same journal it was written to
+    cm2 = calibrate_journal(journal, base=V5E, min_records=4)
+    assert cm2.fitted_profiles == (profile_key(F32),)
+
+
+# -- federation: calibrations merge deterministically ------------------------
+
+
+def _stamped(cm: CalibratedMachine, wall: float, version: int):
+    return dataclasses.replace(cm, wall=wall, version=version)
+
+
+def test_federated_calibration_lww_commutes(planted_cm):
+    """Two producers' calibrations merge to the same winner whatever order
+    the shards arrive in: later wall stamp wins, and a full stamp tie falls
+    through to the deterministic payload arbiter."""
+    older = _stamped(planted_cm, wall=100.0, version=7)
+    newer = _stamped(
+        dataclasses.replace(planted_cm, n_records=planted_cm.n_records + 1),
+        wall=200.0,
+        version=1,
+    )
+    a, b = TuningDatabase(calibration=older), TuningDatabase(calibration=newer)
+    ab, rep_ab = merge_databases([a, b])
+    ba, rep_ba = merge_databases([b, a])
+    assert ab.calibration == ba.calibration == newer
+    assert rep_ab.superseded == rep_ba.superseded == 1
+
+    # stamp tie, different payloads: the serialized form arbitrates, so
+    # both orders still agree (merge is commutative, never clock-dependent)
+    tied1 = _stamped(planted_cm, wall=50.0, version=3)
+    tied2 = _stamped(
+        CalibratedMachine(base=PLANTED, n_records=planted_cm.n_records),
+        wall=50.0,
+        version=3,
+    )
+    x, _ = merge_databases(
+        [TuningDatabase(calibration=tied1), TuningDatabase(calibration=tied2)]
+    )
+    y, _ = merge_databases(
+        [TuningDatabase(calibration=tied2), TuningDatabase(calibration=tied1)]
+    )
+    assert x.calibration == y.calibration
+    assert better_calibration(tied1, tied2) == better_calibration(tied2, tied1)
+    assert better_calibration(None, tied1) == tied1
+
+
+def test_set_calibration_lww_and_force(planted_cm):
+    db = TuningDatabase()
+    newer = _stamped(planted_cm, wall=200.0, version=1)
+    older = _stamped(
+        CalibratedMachine(base=PLANTED), wall=100.0, version=5
+    )
+    assert db.set_calibration(newer, stamp=False)
+    assert not db.set_calibration(older, stamp=False)  # loses LWW, kept out
+    assert db.calibration == newer
+    assert db.set_calibration(older, stamp=False, force=True)  # journal-
+    assert db.calibration == older  # on-top structural precedence
+
+
+# -- machine-keyed scoring caches --------------------------------------------
+
+
+def test_swapping_machines_changes_the_pick():
+    """Scoring caches key on the Machine instance: the same shape ranked
+    under a perturbed machine yields a different winner, and re-querying
+    under the original machine still returns the original pick (no cache
+    aliasing between machines)."""
+    shape = GemmShape(8, 128, 4096)
+    heavy_fixup = dataclasses.replace(V5E, fixup_serial_s=5e-4)
+
+    before = costmodel.rank_candidates(shape, V5E)[0]
+    swapped = costmodel.rank_candidates(shape, heavy_fixup)[0]
+    assert before[0].name == "all_sk"  # split-K wins the skinny shape...
+    assert swapped[0].name == "dp"  # ...until the fix-up tail is punitive
+    assert (before[0], before[1], before[2]) != (
+        swapped[0],
+        swapped[1],
+        swapped[2],
+    )
+    again = costmodel.rank_candidates(shape, V5E)[0]
+    assert again == before
+
+
+def test_rank_candidates_head_is_best_config():
+    """best_config is exactly the argmin of the ranking primitive."""
+    shape = GemmShape(256, 512, 128)
+    ranked = costmodel.rank_candidates(shape, V5E)
+    assert [t for *_, t in ranked] == sorted(t for *_, t in ranked)
+    pol, cfg, g, t = ranked[0]
+    cfg2, tflops = costmodel.best_config(shape, pol, V5E, g=g)
+    assert cfg2 == cfg
+    assert tflops == pytest.approx(shape.flops / t / 1e12)
+
+
+# -- model-source dispatch ---------------------------------------------------
+
+
+def test_unseen_fingerprint_dispatches_via_model(planted_cm):
+    """With a calibration installed, a fingerprint every filter calls
+    absent launches the calibrated model's argmin (source "model") instead
+    of the DP-vs-SK fallback — and stats count it as a model warm start."""
+    db = TuningDatabase()
+    sel = KernelSelector(
+        sieve=db.build_sieve(), db=db, calibration=planted_cm
+    )
+    op = GemmOp.plain(8, 128, 4096)
+    got = sel.select_op(op)
+    assert got.source == "model"
+    assert sel.stats.model_warm == 1
+    # the pick IS the head of the ranking under the calibrated machine
+    pol, cfg, g, _ = costmodel.rank_candidates(
+        GemmShape(8, 128, 4096),
+        planted_cm.machine_for(F32),
+        sel.policies,
+        sel.tile_configs,
+        sel.grid_sizes,
+        F32,
+    )[0]
+    assert (got.policy, got.cfg, got.g) == (pol, cfg, g)
+
+
+def test_hot_swapping_calibration_rescoring(planted_cm):
+    """Installing a calibration mid-stream drops the whole memo: the next
+    dispatch of a previously-fallback fingerprint re-resolves as "model"."""
+    db = TuningDatabase()
+    sel = KernelSelector(sieve=db.build_sieve(), db=db)
+    op = GemmOp.plain(8, 128, 4096)
+    assert sel.select_op(op).source == "fallback"
+    assert sel.hot_swap(calibration=planted_cm) == 1  # full memo drop
+    assert sel.select_op(op).source == "model"
+    assert sel.stats.model_warm == 1
+
+
+# -- top-k budgeted sweeps ---------------------------------------------------
+
+
+def test_top_k_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        Tuner(top_k=0)
+
+
+def test_top_k_budget_and_quality(planted_cm):
+    """The analytical-first budget: a top-5 sweep measures >= 5x fewer
+    candidates than the exhaustive oracle, lands within 10% of the full
+    winner on every shape, and records the winner's model rank."""
+    sizes = SQUAREISH[:8] + SKINNY[:4]
+    full = Tuner(mach=PLANTED)
+    db_full = full.tune(sizes)
+    budget = Tuner(mach=PLANTED, top_k=5, calibration=planted_cm)
+    db_top = budget.tune(sizes)
+
+    assert budget.measurements * 5 <= full.measurements
+    for size in sizes:
+        key = tuple(size)
+        top, oracle = db_top.records[key], db_full.records[key]
+        assert top.tflops >= 0.9 * oracle.tflops
+        assert top.model_rank >= 1
+        assert top.dp_best_tflops > 0  # DP baseline stays meaningful
+        assert top.runner_up_policy != top.policy or top.runner_up_tflops == 0
+    # full-sweep records carry the rank too (the drift signal)
+    assert all(r.model_rank >= 1 for r in db_full.records.values())
