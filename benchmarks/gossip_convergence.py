@@ -1,0 +1,297 @@
+"""Gossip convergence: arch-class isolation + streaming cross-worker exchange.
+
+Simulates the heterogeneous always-on fleet the arch-class and gossip
+subsystems exist for, and *asserts* the three contract properties (an
+``AssertionError`` fails CI — these are acceptance criteria, not metrics):
+
+  1. **Cross-class isolation** — a worker of arch class B federating class
+     A's journal never sees A's records as direct database hits: every
+     dispatch of an A-tuned fingerprint resolves as an ``"xarch"``
+     re-ranked warm seed, B's own-class record partition stays empty, and
+     one local adaptation round supersedes every seed with a real
+     B-stamped record (``"tuned"`` from then on).
+  2. **Same-class byte-identity** — two single-class journal shards merged
+     through the arch-aware path reproduce the single-worker full sweep
+     *exactly*: payload-equal records, byte-identical sieve filters,
+     identical selection table — i.e. the pre-arch (PR 4) single-class
+     federation behavior is preserved bit-for-bit.
+  3. **Gossip convergence** — two same-class workers that tune disjoint
+     workloads and poll each other's journal shards via
+     :class:`~repro.core.gossip.GossipExchange` reach **zero cross-worker
+     misses with no restart**: after one exchange round each worker
+     dispatches the sibling's entire workload as direct ``"tuned"`` hits,
+     and a quiet follow-up round installs nothing.
+
+Reported rows: per-dispatch xarch seeding cost, same-class merge wall-time,
+and the exchange round wall-time with the convergence verdict.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+from dataclasses import replace
+from typing import Dict, List, Optional
+
+from benchmarks.common import csv_row
+from repro.configs.gemm_suite import suite
+from repro.core.adaptive import AdaptiveConfig, AdaptiveTuner
+from repro.core.arch import append_arch, detect_arch
+from repro.core.federate import (
+    federate_selector,
+    merge_journal_shards,
+    record_payload,
+    selection_table,
+)
+from repro.core.gossip import GossipExchange
+from repro.core.selector import KernelSelector, SelectorState
+from repro.core.tuner import Tuner
+from repro.utils.logging import get_logger
+
+log = get_logger("bench.gossip")
+
+N_SUITE = 16  # targets sampled from the paper suite for the identity check
+
+#: disjoint per-worker workloads for the convergence section (worker 0
+#: tunes SIZES_A, worker 1 tunes SIZES_B; convergence means each ends up
+#: dispatching the *other's* set as direct database hits)
+SIZES_A = [
+    (64, 512, 256),
+    (96, 768, 384),
+    (128, 1024, 512),
+    (32, 640, 320),
+    (48, 896, 448),
+    (80, 1152, 576),
+]
+SIZES_B = [
+    (72, 520, 264),
+    (104, 776, 392),
+    (136, 1032, 520),
+    (40, 648, 328),
+    (56, 904, 456),
+    (88, 1160, 584),
+]
+
+
+def _two_profiles():
+    """Two arch profiles one roofline-ratio step apart: same lane count and
+    VMEM, different clock/byte coordinate — the minimal heterogeneous
+    fleet (e.g. two device generations)."""
+    base = detect_arch()
+    return (
+        replace(base, flops_per_byte=275),
+        replace(base, flops_per_byte=225),
+    )
+
+
+def _suite_slice(n: int = N_SUITE) -> List:
+    full = suite()
+    step = max(1, len(full) // n)
+    return list(full[::step][:n])
+
+
+def _cross_class_isolation(report: Dict[str, object]) -> List[str]:
+    """Property 1: records never cross arch classes as direct DB hits."""
+    prof_a, prof_b = _two_profiles()
+    assert prof_a.cls != prof_b.cls
+    with tempfile.TemporaryDirectory() as tmp:
+        shard = os.path.join(tmp, "class_a.jsonl")
+        append_arch(shard, prof_a)
+        Tuner(arch=prof_a.cls).tune(SIZES_A, journal=shard)
+
+        sel = KernelSelector(state=SelectorState(arch=prof_b.cls))
+        state = federate_selector(sel, journals=[shard])
+        assert state.merged >= len(SIZES_A)  # report rides on the state
+
+        t0 = time.perf_counter()
+        sources = [sel.select(*s).source for s in SIZES_A]
+        t_dispatch = time.perf_counter() - t0
+        if any(src != "xarch" for src in sources):
+            raise AssertionError(
+                f"cross-class records leaked as direct hits: sources={sources}"
+            )
+        if sel.db.records:
+            raise AssertionError(
+                f"class-A records landed in class-B's own partition: "
+                f"{sorted(sel.db.records)}"
+            )
+        assert sel.stats.xarch_seeds == len(SIZES_A)
+        assert set(sel.db.xarch) == {prof_a.cls}
+
+        # xarch seeds stay misses for adaptation: one local round measures
+        # every seeded fingerprint and supersedes it with a B-class record
+        adaptive = AdaptiveTuner(sel, config=AdaptiveConfig(hot_threshold=1))
+        for s in SIZES_A:
+            sel.select(*s)  # memoised, but the miss hook still observes
+        tuned = adaptive.drain()
+        assert tuned == len(SIZES_A)
+        after = [sel.select(*s).source for s in SIZES_A]
+        if any(src != "tuned" for src in after):
+            raise AssertionError(
+                f"local adaptation failed to supersede xarch seeds: {after}"
+            )
+        assert all(r.arch == prof_b.cls for r in sel.db.records.values())
+
+    report["cross_class"] = {
+        "classes": [prof_a.cls, prof_b.cls],
+        "xarch_seeds": sel.stats.xarch_seeds,
+        "direct_cross_hits": 0,
+        "superseded_by_local": tuned,
+    }
+    return [
+        csv_row(
+            "gossip_xarch_isolation",
+            t_dispatch * 1e6 / len(SIZES_A),
+            f"{len(SIZES_A)} xarch seeds; 0 direct cross-class hits; "
+            f"{tuned} superseded locally",
+        )
+    ]
+
+
+def _same_class_identity(report: Dict[str, object]) -> List[str]:
+    """Property 2: arch-aware same-class merges match PR 4 byte-for-byte."""
+    targets = _suite_slice()
+    tuner = Tuner()
+    with tempfile.TemporaryDirectory() as tmp:
+        full = tuner.tune(targets, journal=os.path.join(tmp, "full.jsonl"))
+        paths = [os.path.join(tmp, f"s{i}.jsonl") for i in range(2)]
+        for i in range(2):
+            tuner.tune(targets, shard=(i, 2), journal=paths[i])
+        t0 = time.perf_counter()
+        merged, rep = merge_journal_shards(paths)
+        t_merge = time.perf_counter() - t0
+
+    records_equal = set(merged.records) == set(full.records) and all(
+        record_payload(merged.records[k]) == record_payload(full.records[k])
+        for k in full.records
+    )
+    sieves_equal = (
+        merged.build_sieve().to_bytes() == full.build_sieve().to_bytes()
+    )
+    selection_equal = selection_table(
+        KernelSelector(state=SelectorState(db=merged, sieve=merged.build_sieve())),
+        full.records,
+    ) == selection_table(
+        KernelSelector(state=SelectorState(db=full, sieve=full.build_sieve())),
+        full.records,
+    )
+    if not (records_equal and sieves_equal and selection_equal):
+        raise AssertionError(
+            f"same-class merge diverged from single-class behavior: "
+            f"records={records_equal} sieves={sieves_equal} "
+            f"selection={selection_equal}"
+        )
+    report["same_class"] = {
+        "targets": len(targets),
+        "records_equal": records_equal,
+        "sieves_equal": sieves_equal,
+        "selection_equal": selection_equal,
+        "conflicts": rep.conflicts,
+    }
+    return [
+        csv_row(
+            "gossip_same_class_merge",
+            t_merge * 1e6,
+            f"byte-identical to full sweep; conflicts={rep.conflicts}",
+        )
+    ]
+
+
+def _gossip_convergence(report: Dict[str, object]) -> List[str]:
+    """Property 3: a gossiping 2-worker fleet reaches 0 cross-worker misses
+    with no restart anywhere."""
+    work = (SIZES_A, SIZES_B)
+    with tempfile.TemporaryDirectory() as tmp:
+        shards = [os.path.join(tmp, f"w{i}.jsonl") for i in range(2)]
+        sels, adaptives, gossips = [], [], []
+        for i in range(2):
+            sel = KernelSelector()
+            adaptives.append(
+                AdaptiveTuner(
+                    sel,
+                    config=AdaptiveConfig(hot_threshold=1),
+                    journal=shards[i],
+                )
+            )
+            gossips.append(GossipExchange(sel, [shards[1 - i]]))
+            sels.append(sel)
+
+        # each worker tunes only its own (disjoint) workload, journaling
+        for i in range(2):
+            for s in work[i]:
+                sels[i].select(*s)
+            adaptives[i].drain()
+
+        # one exchange round per worker: poll the sibling's shard, fold in
+        t0 = time.perf_counter()
+        applied = [g.exchange() for g in gossips]
+        t_exchange = time.perf_counter() - t0
+        assert applied == [len(SIZES_B), len(SIZES_A)], applied
+
+        # convergence: the sibling's entire workload now dispatches as
+        # direct database hits — zero cross-worker misses, no restart
+        cross_misses = 0
+        for i in range(2):
+            before = adaptives[i].stats.misses
+            sources = [sels[i].select(*s).source for s in work[1 - i]]
+            cross_misses += adaptives[i].stats.misses - before
+            if any(src != "tuned" for src in sources):
+                raise AssertionError(
+                    f"worker {i} still misses sibling work after gossip: "
+                    f"{sources}"
+                )
+        if cross_misses != 0:
+            raise AssertionError(
+                f"{cross_misses} cross-worker misses survived the exchange"
+            )
+
+        # a quiet round is free: no new bytes -> nothing staged, no swap
+        generations = [s.sieve_generation for s in sels]
+        assert [g.exchange() for g in gossips] == [0, 0]
+        assert [s.sieve_generation for s in sels] == generations
+        swaps = [g.stats.swaps for g in gossips]
+        assert swaps == [1, 1], swaps
+
+    report["convergence"] = {
+        "workers": 2,
+        "per_worker_records": [len(SIZES_A), len(SIZES_B)],
+        "entries_exchanged": sum(applied),
+        "rounds_to_converge": 1,
+        "cross_worker_misses": cross_misses,
+        "exchange_wall_s": round(t_exchange, 6),
+    }
+    return [
+        csv_row(
+            "gossip_convergence",
+            t_exchange * 1e6,
+            f"rounds=1; cross_worker_misses=0; "
+            f"entries={sum(applied)}; swaps={swaps}",
+        )
+    ]
+
+
+def run(json_path: Optional[str] = None) -> List[str]:
+    rows: List[str] = []
+    report: Dict[str, object] = {}
+    rows += _cross_class_isolation(report)
+    rows += _same_class_identity(report)
+    rows += _gossip_convergence(report)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, help="write the full report as JSON")
+    args = ap.parse_args()
+    for row in run(json_path=args.json):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,7 @@ from repro.core import (
     ALL_POLICIES,
     GemmShape,
     KernelSelector,
+    SelectorState,
     Tuner,
     gemm,
     gemm_context,
@@ -44,7 +45,7 @@ def main():
     print("filter summary:", {k: v["n_items"] for k, v in sieve.summary().items()})
 
     # -- 3. dispatch ---------------------------------------------------------
-    sel = KernelSelector(sieve=sieve, db=db)
+    sel = KernelSelector(state=SelectorState(db=db, sieve=sieve))
     with gemm_context(selector=sel) as ctx:
         for m, n, k in [sizes[0], sizes[len(sizes) // 2], (333, 555, 777)]:
             x = jnp.ones((m, k), jnp.float32)

@@ -30,6 +30,7 @@ from repro.core.workpart import (
     validate_partition,
     wave_quantization_efficiency,
 )
+from repro.core.arch import DEFAULT_ARCH, ArchProfile, append_arch, detect_arch
 from repro.core.bloom import BloomFilter, encode_mnk, murmur3_32
 from repro.core.op import Epilogue, GemmOp, encode_key, encode_op
 from repro.core.opensieve import OpenSieve
@@ -49,8 +50,10 @@ from repro.core.tuner import (
     TuningDatabase,
     TuningRecord,
     append_journal,
+    apply_journal_entry,
     journal_entry,
     parse_journal_line,
+    register_journal_entry,
     shard_targets,
 )
 from repro.core.federate import (
@@ -67,8 +70,14 @@ from repro.core.quant import (
     quantize_lm_params,
     quantize_weight,
 )
-from repro.core.selector import KernelSelector, Selection, default_selector
+from repro.core.selector import (
+    KernelSelector,
+    Selection,
+    SelectorState,
+    default_selector,
+)
 from repro.core.adaptive import AdaptiveConfig, AdaptiveStats, AdaptiveTuner
+from repro.core.gossip import GossipExchange, GossipStats, JournalTail
 from repro.core.gemm import (
     current_log,
     gemm,
@@ -99,6 +108,10 @@ __all__ = [
     "partition",
     "validate_partition",
     "wave_quantization_efficiency",
+    "ArchProfile",
+    "DEFAULT_ARCH",
+    "append_arch",
+    "detect_arch",
     "BloomFilter",
     "encode_mnk",
     "murmur3_32",
@@ -116,8 +129,10 @@ __all__ = [
     "TuningDatabase",
     "TuningRecord",
     "append_journal",
+    "apply_journal_entry",
     "journal_entry",
     "parse_journal_line",
+    "register_journal_entry",
     "shard_targets",
     "MergeReport",
     "apply_journal_db",
@@ -131,10 +146,14 @@ __all__ = [
     "quantize_weight",
     "KernelSelector",
     "Selection",
+    "SelectorState",
     "default_selector",
     "AdaptiveConfig",
     "AdaptiveStats",
     "AdaptiveTuner",
+    "GossipExchange",
+    "GossipStats",
+    "JournalTail",
     "Epilogue",
     "GemmOp",
     "encode_key",

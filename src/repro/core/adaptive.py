@@ -32,7 +32,7 @@ tuning never starves the decode loop.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Dict, List, Optional
 
 from repro.core.op import GemmOp, OpKey
@@ -97,18 +97,23 @@ class AdaptiveTuner:
         journal: Optional[str] = None,
     ):
         self.selector = selector
-        self.db = db if db is not None else (selector.db or TuningDatabase())
+        self.db = (
+            db
+            if db is not None
+            else (selector.db or TuningDatabase(arch=selector.arch))
+        )
         if selector.db is not self.db:
             # the tuner owns the selector's database: commits must be the
             # records selection reads, so an explicitly passed db replaces
             # whatever the selector held (memoised picks dropped — they were
             # resolved against the old database)
-            selector.hot_swap(db=self.db)
+            selector.hot_swap(state=replace(selector.state, db=self.db))
         self.cfg = config or AdaptiveConfig()
         self.tuner = tuner or Tuner(
             policies=selector.policies, tile_configs=selector.tile_configs,
             mach=selector.mach, grid_sizes=selector.grid_sizes,
             top_k=self.cfg.top_k, calibration=selector.calibration,
+            arch=selector.arch,
         )
         self.journal = journal
         self.stats = AdaptiveStats()
@@ -234,7 +239,7 @@ class AdaptiveTuner:
         # full cache invalidation: sieve/fallback picks memoised under the
         # old generation must not survive it, and tuned picks re-resolve
         # from the database for the cost of one dict hit
-        self.selector.hot_swap(sieve=sieve, keys=None)
+        self.selector.hot_swap(state=replace(self.selector.state, sieve=sieve), keys=None)
         self.stats.rebuilds += 1
         self._commits_since_rebuild = 0
         return generation

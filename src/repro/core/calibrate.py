@@ -124,6 +124,12 @@ class CalibratedMachine:
     residual: float = 0.0  # median |relative residual| across fitted profiles
     wall: float = 0.0  # hybrid LWW stamp (see TuningRecord.wall)
     version: int = 0
+    #: arch class the walls behind this fit were measured on (see
+    #: :mod:`repro.core.arch`): ``TuningDatabase.set_calibration`` installs
+    #: same-class fits locally and routes foreign-class ones to the
+    #: per-class side table — a sibling generation's constants must never
+    #: steer local model-first dispatch. Legacy fits parse as "default".
+    arch: str = "default"
 
     def machine_for(self, dt: DtypeBytes) -> Machine:
         """Fitted machine for a byte-width profile (base when unfitted)."""
@@ -283,6 +289,7 @@ def calibrate_records(
     records: Iterable[Tuple[object, TuningRecord]],
     base: Machine = V5E,
     min_records: int = MIN_RECORDS,
+    arch: str = "default",
 ) -> CalibratedMachine:
     """Fit a :class:`CalibratedMachine` from ``(key, record)`` pairs.
 
@@ -347,25 +354,34 @@ def calibrate_records(
         profiles=tuple(profiles),
         n_records=n_used,
         residual=float(np.median(residuals)),
+        arch=arch,
     )
 
 
 def calibrate_db(
     db, base: Machine = V5E, min_records: int = MIN_RECORDS
 ) -> CalibratedMachine:
-    """Fit from a :class:`~repro.core.tuner.TuningDatabase`'s records."""
+    """Fit from a :class:`~repro.core.tuner.TuningDatabase`'s OWN-class
+    records (foreign-class ``xarch`` records measured other hardware —
+    folding their walls in would corrupt the local constants); the fit is
+    stamped with the database's arch class."""
     return calibrate_records(
-        db.records.items(), base=base, min_records=min_records
+        db.records.items(), base=base, min_records=min_records, arch=db.arch
     )
 
 
 def calibrate_journal(
-    path: str, base: Machine = V5E, min_records: int = MIN_RECORDS
+    path: str,
+    base: Machine = V5E,
+    min_records: int = MIN_RECORDS,
+    arch: str = "default",
 ) -> CalibratedMachine:
-    """Fit from an append-only tuning journal (replayed, later lines win)."""
+    """Fit from an append-only tuning journal (replayed, later lines win).
+    ``arch`` is the local class: only same-class journal records feed the
+    fit (they land in ``records``; foreign lines route to ``xarch``)."""
     from repro.core.tuner import TuningDatabase
 
-    db = TuningDatabase()
+    db = TuningDatabase(arch=arch)
     db.replay_journal(path)
     return calibrate_db(db, base=base, min_records=min_records)
 
@@ -391,8 +407,10 @@ def machine_from_json(d: dict, base: Machine = V5E) -> Machine:
 
 
 def calibration_to_json(cm: CalibratedMachine) -> dict:
-    """JSON payload of a calibration (the journal entry body)."""
-    return {
+    """JSON payload of a calibration (the journal entry body).
+    Default-class fits serialize without the ``arch`` field, byte-identical
+    to the pre-arch format."""
+    out = {
         "base": machine_to_json(cm.base),
         "profiles": {k: machine_to_json(m) for k, m in cm.profiles},
         "n_records": cm.n_records,
@@ -400,10 +418,14 @@ def calibration_to_json(cm: CalibratedMachine) -> dict:
         "wall": cm.wall,
         "version": cm.version,
     }
+    if cm.arch != "default":
+        out["arch"] = cm.arch
+    return out
 
 
 def calibration_from_json(d: dict) -> CalibratedMachine:
-    """Inverse of :func:`calibration_to_json`."""
+    """Inverse of :func:`calibration_to_json` (arch-less legacy payloads
+    parse into the ``"default"`` class)."""
     base = machine_from_json(d["base"])
     return CalibratedMachine(
         base=base,
@@ -415,6 +437,7 @@ def calibration_from_json(d: dict) -> CalibratedMachine:
         residual=float(d.get("residual", 0.0)),
         wall=float(d.get("wall", 0.0)),
         version=int(d.get("version", 0)),
+        arch=str(d.get("arch", "default")),
     )
 
 

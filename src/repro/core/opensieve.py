@@ -20,6 +20,7 @@ import struct
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
+from repro.core.arch import DEFAULT_ARCH
 from repro.core.bloom import BloomFilter
 from repro.core.op import GemmOp, encode_key
 from repro.core.policies import ALL_POLICIES, Policy, policy_from_name
@@ -27,14 +28,25 @@ from repro.core.policies import ALL_POLICIES, Policy, policy_from_name
 MNK = Tuple[int, int, int]
 
 
-def _as_key_bytes(key) -> bytes:
+def _as_key_bytes(key, arch: str = DEFAULT_ARCH) -> bytes:
     """Canonical filter bytes for any key form: raw bytes, a GemmOp, a bare
-    (M, N, K), or an extended op-key tuple."""
+    (M, N, K), or an extended op-key tuple.
+
+    Non-default arch classes prefix the class string so winners measured on
+    different machine classes occupy disjoint filter keyspaces (a probe for
+    one class never aliases another class's insertions beyond the ordinary
+    Bloom fp rate). ``"default"``-class keys keep the legacy encoding, which
+    is what keeps single-class sieve bytes identical to the pre-arch format.
+    """
     if isinstance(key, bytes):
-        return key
-    if isinstance(key, GemmOp):
-        return key.encode()
-    return encode_key(tuple(key))
+        kb = key
+    elif isinstance(key, GemmOp):
+        kb = key.encode()
+    else:
+        kb = encode_key(tuple(key))
+    if arch != DEFAULT_ARCH:
+        kb = arch.encode("utf-8") + b"\x00" + kb
+    return kb
 
 
 @dataclass
@@ -71,6 +83,11 @@ class OpenSieve:
     ):
         self.policies: Tuple[Policy, ...] = tuple(policies)
         self.generation = generation
+        # Remembered so federation/gossip rebuilds inherit the worker's
+        # installed geometry instead of silently re-deriving from defaults
+        # (None after ``from_bytes`` — the wire format predates these).
+        self.capacity: Optional[int] = capacity
+        self.fp_rate: Optional[float] = fp_rate
         # One distinct hash family (seed) per filter — "7 distinct hash
         # functions, one for each filter" in the paper.
         self.filters: Dict[str, BloomFilter] = {
@@ -80,25 +97,25 @@ class OpenSieve:
         self.stats = QueryStats()
 
     # -- build ----------------------------------------------------------------
-    def insert_winner(self, key, policy: Policy) -> None:
+    def insert_winner(self, key, policy: Policy, arch: str = DEFAULT_ARCH) -> None:
         """``key``: (M, N, K), an extended op key, a GemmOp, or raw bytes."""
         if policy.name not in self.filters:
             raise KeyError(f"policy {policy.name} not registered")
-        self.filters[policy.name].add(_as_key_bytes(key))
+        self.filters[policy.name].add(_as_key_bytes(key, arch))
 
-    def build_from_winners(self, winners: Mapping) -> "OpenSieve":
+    def build_from_winners(self, winners: Mapping, arch: str = DEFAULT_ARCH) -> "OpenSieve":
         """Bulk-insert a {key -> winning Policy} map; returns self."""
         for key, pol in winners.items():
-            self.insert_winner(key, pol)
+            self.insert_winner(key, pol, arch=arch)
         return self
 
     # -- query ------------------------------------------------------------------
-    def _query(self, key) -> List[Policy]:
+    def _query(self, key, arch: str = DEFAULT_ARCH) -> List[Policy]:
         """Uncounted filter probe (key forms as in :meth:`insert_winner`)."""
-        kb = _as_key_bytes(key)
+        kb = _as_key_bytes(key, arch)
         return [p for p in self.policies if kb in self.filters[p.name]]
 
-    def candidates_any(self, *keys) -> List[Policy]:
+    def candidates_any(self, *keys, arch: str = DEFAULT_ARCH) -> List[Policy]:
         """First non-empty candidate set across alternative key encodings
         for ONE dispatch (e.g. an op's exact fingerprint, then the
         dtype-agnostic legacy (M, N, K)). Accounted as a single
@@ -107,7 +124,7 @@ class OpenSieve:
         many key forms it probes."""
         out: List[Policy] = []
         for key in keys:
-            out = self._query(key)
+            out = self._query(key, arch)
             if out:
                 break
         self.stats.queries += 1
@@ -115,9 +132,9 @@ class OpenSieve:
         self.stats.pruned_evals += len(self.policies) - len(out)
         return out
 
-    def candidates(self, key) -> List[Policy]:
+    def candidates(self, key, arch: str = DEFAULT_ARCH) -> List[Policy]:
         """Policies whose filter answers "possibly present" for this key."""
-        return self.candidates_any(key)
+        return self.candidates_any(key, arch=arch)
 
     def validate_true_negative_rate(self, winners: Mapping[MNK, Policy]) -> float:
         """Assert the Bloom contract on a winner map: the true winner is never
@@ -169,6 +186,8 @@ class OpenSieve:
             )
         out = OpenSieve.__new__(OpenSieve)
         out.policies = self.policies
+        out.capacity = self.capacity
+        out.fp_rate = self.fp_rate
         out.filters = {
             name: f.merge(other.filters[name]) for name, f in self.filters.items()
         }
@@ -211,6 +230,10 @@ class OpenSieve:
         sieve.filters = filters
         sieve.stats = QueryStats()
         sieve.generation = 0
+        # The OSV1 wire format predates geometry bookkeeping; bit/hash
+        # counts survive in the filters themselves, the nominal knobs don't.
+        sieve.capacity = None
+        sieve.fp_rate = None
         return sieve
 
     def encode_cpp_header(self) -> str:

@@ -3,6 +3,12 @@
 Dispatch path for a :class:`repro.core.op.GemmOp` (selection keys on the op
 fingerprint — per-shard local shape, group count, dtypes, epilogue):
   1. Exact tuning-database hit -> return the tuned (policy, config, g).
+     Only records of the selector's OWN arch class qualify: a record tuned
+     on a different machine class (:mod:`repro.core.arch`) instead supplies
+     its winner/runner-up policies as a *warm seed*, re-ranked by the cost
+     model under the local (calibrated) machine — the ``"xarch"`` source,
+     which still counts as a miss for online adaptation so local
+     measurements eventually supersede the import.
   2. Otherwise query the Bloom filters. Policies answering "definitely
      absent" are pruned (the paper's headline: up to ~95.8% of evaluations
      skipped, 100% true-negative rate). Surviving candidates are scored with
@@ -39,10 +45,12 @@ untouched.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import warnings
+from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core import costmodel
+from repro.core.arch import DEFAULT_ARCH
 from repro.core.costmodel import DtypeBytes
 from repro.core.op import GemmOp, OpKey
 from repro.core.opensieve import OpenSieve
@@ -67,7 +75,7 @@ class Selection:
 
     policy: Policy
     cfg: TileConfig
-    source: str  # "tuned" | "sieve" | "model" | "fallback" | "forced"
+    source: str  # "tuned" | "xarch" | "sieve" | "model" | "fallback" | "forced"
     evals: int  # how many (policy) evaluations the scorer performed
     pruned: int  # how many the Bloom filters eliminated
     #: grid size the kernel launches with (tuned winner's g, or the scored
@@ -81,6 +89,10 @@ class SelectorStats:
 
     lookups: int = 0
     tuned_hits: int = 0
+    #: dispatches seeded by a foreign arch class's record — its winner /
+    #: runner-up policies re-ranked under the LOCAL machine (never applied
+    #: verbatim); still a miss for online adaptation
+    xarch_seeds: int = 0
     sieve_hits: int = 0
     #: unseen fingerprints dispatched from the calibrated model's argmin —
     #: the analytical-first warm start (still misses for online adaptation)
@@ -115,25 +127,100 @@ def _cfg_from_name(name: str) -> TileConfig:
 #: feeds on. Must be cheap; it runs on the trace path.
 MissHook = Callable[[GemmOp, Selection], None]
 
+#: sentinel distinguishing "kwarg not passed" from an explicit ``None`` —
+#: the legacy ``hot_swap(db=None)`` meaning "keep the current database"
+#: must keep working while the deprecated shim detects real usage.
+_UNSET = object()
+
+
+@dataclass(frozen=True)
+class SelectorState:
+    """One atomic snapshot of a selector's installed tuning artifacts.
+
+    The database, sieve, calibration, and arch class travel as a single
+    frozen value: ``KernelSelector(state=...)`` and ``hot_swap(state=...)``
+    install all four in one reference assignment, so a federation/gossip
+    round can never expose a database from one generation paired with a
+    sieve from another. This replaces the grown ``db=/sieve=/calibration=``
+    kwarg triple (kept as a deprecated shim)."""
+
+    db: Optional[TuningDatabase] = None
+    sieve: Optional[OpenSieve] = None
+    #: installed CalibratedMachine (or None): when set, all cost-model
+    #: scoring runs under the fitted per-dtype-profile machine, and unseen
+    #: fingerprints dispatch via the "model" source instead of the fallback
+    calibration: object = None
+    #: the selector's own arch class (:mod:`repro.core.arch`) — the class
+    #: whose records qualify as direct database hits; every other class is
+    #: an ``"xarch"`` warm seed
+    arch: str = DEFAULT_ARCH
+    #: provenance of the install (e.g. the MergeReport behind a federation
+    #: round). Excluded from equality — identical artifacts compare equal
+    #: whatever produced them. Unknown attribute reads delegate here, so
+    #: ``federate_selector`` can return the state it installed while callers
+    #: keep reading ``.merged`` / ``.conflicts`` off the result.
+    report: object = field(default=None, compare=False)
+
+    def __getattr__(self, name: str):
+        report = object.__getattribute__(self, "report")
+        if report is not None:
+            return getattr(report, name)
+        raise AttributeError(
+            f"{type(self).__name__} has no attribute {name!r}"
+        )
+
+
+def _deprecated_kwargs(where: str) -> None:
+    warnings.warn(
+        f"{where} via db=/sieve=/calibration= kwargs is deprecated; "
+        "install a SelectorState (state=SelectorState(db=..., sieve=..., "
+        "calibration=..., arch=...)) instead",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
 
 class KernelSelector:
-    """The paper's three-stage selection pipeline, memoised per op key:
-    tuned-database exact hit -> Bloom-sieve candidate pruning + cost-model
-    scoring -> unsieved cost-model fallback."""
+    """The paper's selection pipeline, memoised per op key: tuned-database
+    exact hit (own arch class) -> cross-arch warm seeds -> Bloom-sieve
+    candidate pruning + cost-model scoring -> unsieved cost-model fallback.
+
+    Tuning artifacts live in one frozen :class:`SelectorState`
+    (``self.state``); the ``db``/``sieve``/``calibration``/``arch``
+    properties read through to it. Install new artifacts atomically with
+    :meth:`hot_swap`."""
 
     def __init__(
         self,
-        sieve: Optional[OpenSieve] = None,
-        db: Optional[TuningDatabase] = None,
+        sieve=_UNSET,
+        db=_UNSET,
         mach: costmodel.Machine = costmodel.V5E,
         policies: Sequence[Policy] = ALL_POLICIES,
         tile_configs: Sequence[TileConfig] = DEFAULT_TILE_CONFIGS,
         on_miss: Optional[MissHook] = None,
         grid_sizes: Optional[Sequence[int]] = None,
-        calibration=None,
+        calibration=_UNSET,
+        state: Optional[SelectorState] = None,
     ):
-        self.sieve = sieve
-        self.db = db
+        legacy = {
+            k: v
+            for k, v in (("sieve", sieve), ("db", db), ("calibration", calibration))
+            if v is not _UNSET
+        }
+        if state is not None and legacy:
+            raise TypeError(
+                "pass either state= or the legacy artifact kwargs, not both: "
+                f"got state plus {sorted(legacy)}"
+            )
+        if state is None:
+            if any(v is not None for v in legacy.values()):
+                _deprecated_kwargs("constructing KernelSelector")
+            state = SelectorState(
+                db=legacy.get("db"),
+                sieve=legacy.get("sieve"),
+                calibration=legacy.get("calibration"),
+            )
+        self._state = state
         self.mach = mach
         self.policies = tuple(policies)
         self.tile_configs = tuple(tile_configs)
@@ -143,13 +230,34 @@ class KernelSelector:
             if grid_sizes is not None
             else costmodel.default_grid_sizes(mach)
         )
-        #: installed CalibratedMachine (or None): when set, all cost-model
-        #: scoring runs under the fitted per-dtype-profile machine, and
-        #: unseen fingerprints dispatch via the "model" source instead of
-        #: the naive fallback
-        self.calibration = calibration
         self.stats = SelectorStats()
         self._cache: Dict[OpKey, Selection] = {}
+
+    # -- state ---------------------------------------------------------------
+    @property
+    def state(self) -> SelectorState:
+        """The installed artifact snapshot (frozen; swap via hot_swap)."""
+        return self._state
+
+    @property
+    def db(self) -> Optional[TuningDatabase]:
+        """Installed tuning database (read-only view into ``state``)."""
+        return self._state.db
+
+    @property
+    def sieve(self) -> Optional[OpenSieve]:
+        """Installed Open-sieve (read-only view into ``state``)."""
+        return self._state.sieve
+
+    @property
+    def calibration(self):
+        """Installed CalibratedMachine or None (view into ``state``)."""
+        return self._state.calibration
+
+    @property
+    def arch(self) -> str:
+        """This selector's arch class (view into ``state``)."""
+        return self._state.arch
 
     @property
     def sieve_generation(self) -> int:
@@ -163,32 +271,54 @@ class KernelSelector:
     # -- online adaptation --------------------------------------------------
     def hot_swap(
         self,
-        db: Optional[TuningDatabase] = None,
-        sieve: Optional[OpenSieve] = None,
+        db=_UNSET,
+        sieve=_UNSET,
         keys: Optional[Iterable[OpKey]] = None,
-        calibration=None,
+        calibration=_UNSET,
+        state: Optional[SelectorState] = None,
     ) -> int:
         """Install updated tuning artifacts mid-stream.
 
-        Reference assignment is atomic, so in-flight lookups finish against
-        whichever artifact they already grabbed — the old sieve serves until
-        the swap lands. Memoised selections for ``keys`` (all keys when
-        ``None``) are dropped so the next dispatch of a freshly tuned
-        fingerprint re-resolves against the new database instead of
-        replaying a stale sieve/fallback pick. Returns the number of cache
-        entries invalidated."""
-        if db is not None:
-            self.db = db
-        if sieve is not None:
-            self.sieve = sieve
-        if calibration is not None:
-            # the (frozen, hashable) machines inside the calibration key
-            # every scoring cache, so installing one can never read scores
-            # memoised under the previous constants — but a new calibration
-            # re-scores EVERY non-tuned pick, so the per-key memo is dropped
-            # wholesale regardless of ``keys``
-            self.calibration = calibration
-            keys = None
+        ``state=SelectorState(...)`` is the install path: one reference
+        assignment swaps database, sieve, calibration, and arch class
+        together, so in-flight lookups finish against whichever snapshot
+        they already grabbed — the old sieve serves until the swap lands.
+        The per-artifact kwargs survive as a deprecated shim (``None``
+        still means "keep current", as it always did).
+
+        Memoised selections for ``keys`` (all keys when ``None``) are
+        dropped so the next dispatch of a freshly tuned fingerprint
+        re-resolves against the new artifacts instead of replaying a stale
+        sieve/fallback pick. Installing a different calibration drops the
+        memo wholesale regardless of ``keys``: the (frozen, hashable)
+        machines inside it key every scoring cache, and new constants
+        re-score EVERY non-tuned pick. Returns the number of cache entries
+        invalidated."""
+        if state is not None:
+            passed = [
+                n
+                for n, v in (("db", db), ("sieve", sieve), ("calibration", calibration))
+                if v is not _UNSET
+            ]
+            if passed:
+                raise TypeError(
+                    "pass either state= or the legacy artifact kwargs, not "
+                    f"both: got state plus {passed}"
+                )
+            if state.calibration is not self._state.calibration:
+                keys = None
+            self._state = state
+        else:
+            updates = {
+                n: v
+                for n, v in (("db", db), ("sieve", sieve), ("calibration", calibration))
+                if v is not _UNSET and v is not None
+            }
+            if updates:
+                _deprecated_kwargs("hot_swap")
+                if "calibration" in updates:
+                    keys = None
+                self._state = replace(self._state, **updates)
         if keys is None:
             n = len(self._cache)
             self._cache.clear()
@@ -238,10 +368,35 @@ class KernelSelector:
             rec = self.db.records.get(op.local)
         return rec
 
+    def _xarch_policies(self, op: GemmOp) -> List[Policy]:
+        """Warm-seed candidates from foreign-class records of this
+        fingerprint: the winner (and distinct runner-up) policies every
+        other arch class measured for the key. Never dispatched verbatim —
+        the caller re-ranks them under the LOCAL (calibrated) machine, so a
+        sibling generation's pick is advice, not an answer. Classes iterate
+        in sorted order, keeping the seed set deterministic across fleets."""
+        if self.db is None:
+            return []
+        recs = self.db.xarch_records_for(op.key)
+        if not recs and op.mnk_compatible and op.key != op.local:
+            recs = self.db.xarch_records_for(op.local)
+        pols: List[Policy] = []
+        for _cls, rec in recs:
+            for name in (rec.policy, rec.runner_up_policy):
+                if not name:
+                    continue
+                try:
+                    pol = policy_from_name(name)
+                except (KeyError, ValueError):
+                    continue  # policy registry drift across producers
+                if pol not in pols:
+                    pols.append(pol)
+        return pols
+
     def _sieve_candidates(self, op: GemmOp):
         if op.mnk_compatible and op.key != op.local:
-            return self.sieve.candidates_any(op.key, op.local)
-        return self.sieve.candidates(op.key)
+            return self.sieve.candidates_any(op.key, op.local, arch=self.arch)
+        return self.sieve.candidates(op.key, arch=self.arch)
 
     def _lookup(self, op: GemmOp) -> Tuple[Selection, bool]:
         """Memoised selection for an op; returns (selection, was_cached).
@@ -254,6 +409,7 @@ class KernelSelector:
         dt = costmodel.op_dtypes(op)
         sel: Selection
         rec = self._db_record(op)
+        xpols = self._xarch_policies(op) if rec is None else []
         if rec is not None:
             # No filter was consulted: zero evals, zero pruned — a tuned hit
             # must not inflate the sieve's elimination rate.
@@ -265,6 +421,14 @@ class KernelSelector:
                 pruned=0,
                 g=rec.g,
             )
+        elif xpols:
+            # A different arch class tuned this fingerprint: its winner /
+            # runner-up policies seed the candidate set, re-ranked under the
+            # local machine (no filter consulted — zero pruned). Still a
+            # miss for adaptation: the seed serves until a local round
+            # measures the shape and supersedes it with a real record.
+            pol, cfg, g, evals = self._score(size, xpols, dt)
+            sel = Selection(pol, cfg, "xarch", evals, 0, g=g)
         elif self.sieve is not None:
             cands = self._sieve_candidates(op)
             pruned = len(self.policies) - len(cands)
@@ -305,6 +469,8 @@ class KernelSelector:
             self.stats.cache_hits += 1
         elif sel.source == "tuned":
             self.stats.tuned_hits += 1
+        elif sel.source == "xarch":
+            self.stats.xarch_seeds += 1
         elif sel.source == "sieve":
             self.stats.sieve_hits += 1
         elif sel.source == "model":
@@ -371,4 +537,4 @@ class KernelSelector:
 def default_selector() -> KernelSelector:
     """Selector with no tuning artifacts: pure cost-model scoring over all
     policies (used by models when no tuned database is supplied)."""
-    return KernelSelector(sieve=None, db=None)
+    return KernelSelector()

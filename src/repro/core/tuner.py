@@ -49,6 +49,7 @@ from dataclasses import dataclass, field, asdict, replace
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core import costmodel
+from repro.core.arch import DEFAULT_ARCH, ArchProfile
 from repro.core.costmodel import DtypeBytes
 from repro.core.op import (
     GROUPED_FUSED_MARKER,
@@ -156,6 +157,12 @@ class TuningRecord:
     #: pushes winners deep into the ranking. ``-1`` on records written
     #: before top-k sweeps existed (or when the rank was not computed).
     model_rank: int = -1
+    #: architecture class this record was measured on (see
+    #: :mod:`repro.core.arch`). Records federate last-writer-wins only
+    #: *within* a class; a different class is never a direct database hit,
+    #: only an ``"xarch"`` re-ranked warm seed. Arch-less legacy artifacts
+    #: parse into ``"default"`` and dispatch exactly as before.
+    arch: str = DEFAULT_ARCH
 
     @property
     def gain_over_runner_up(self) -> float:
@@ -173,7 +180,15 @@ class TuningRecord:
 @dataclass
 class TuningDatabase:
     """Keyed store of tuned winners + per-policy sweep results, with
-    snapshot/journal persistence and federation stamps."""
+    snapshot/journal persistence and federation stamps.
+
+    The store partitions per architecture class (:mod:`repro.core.arch`):
+    ``records`` holds only this database's own class (``arch``), foreign
+    classes live in ``xarch`` keyed by class string. Every ingestion path
+    (``add_record``, journal replay, snapshot load, federated merges)
+    routes by the *record's* stamped class, so a sibling generation's
+    winner can never masquerade as a local measurement — it stays visible
+    to the selector only as an ``"xarch"`` re-ranked warm seed."""
 
     records: Dict[OpKey, TuningRecord] = field(default_factory=dict)
     #: per-key best tflops for every policy (policy name -> tflops); kept so
@@ -191,9 +206,24 @@ class TuningDatabase:
     #: its journal. Persists through snapshot/journal like records and
     #: federates under the same hybrid (wall, version) LWW stamp.
     calibration: Optional[object] = None
+    #: architecture class this database's OWN records were measured on;
+    #: anything stamped with a different class routes to ``xarch``.
+    arch: str = DEFAULT_ARCH
+    #: foreign-class records: class string -> {key -> record}. Never direct
+    #: dispatch hits — the selector re-ranks their policies under the local
+    #: machine (the ``"xarch"`` source).
+    xarch: Dict[str, Dict[OpKey, TuningRecord]] = field(default_factory=dict)
+    #: foreign-class calibrations (class string -> CalibratedMachine):
+    #: carried for re-federation, never installed as the local scoring fit
+    #: — a sibling generation's constants would poison model-first dispatch.
+    xarch_calibrations: Dict[str, object] = field(default_factory=dict)
+    #: known arch-profile coordinates per class string (from ``{"arch":...}``
+    #: journal entries) — observability for merged fleets.
+    arch_profiles: Dict[str, ArchProfile] = field(default_factory=dict)
 
     def winners(self) -> Dict[OpKey, Policy]:
-        """{key -> winning Policy} — what Bloom sieves are built from."""
+        """{key -> winning Policy} of the OWN arch class — what this
+        class's Bloom filters are built from."""
         return {s: policy_from_name(r.policy) for s, r in self.records.items()}
 
     def build_sieve(
@@ -202,11 +232,39 @@ class TuningDatabase:
         fp_rate: float = 0.01,
         generation: int = 0,
     ) -> OpenSieve:
-        """Fresh OpenSieve populated with this database's winners."""
+        """Fresh OpenSieve populated with this database's winners — own
+        class under its (legacy-byte-identical) key encoding, foreign
+        classes under their class-prefixed encodings, so queries in one
+        class never alias another's winners."""
         sieve = OpenSieve(
             ALL_POLICIES, capacity=capacity, fp_rate=fp_rate, generation=generation
         )
-        return sieve.build_from_winners(self.winners())
+        sieve.build_from_winners(self.winners(), arch=self.arch)
+        for cls_name, recs in self.xarch.items():
+            sieve.build_from_winners(
+                {s: policy_from_name(r.policy) for s, r in recs.items()},
+                arch=cls_name,
+            )
+        return sieve
+
+    def n_records(self) -> int:
+        """Total records across every arch class (own + foreign)."""
+        return len(self.records) + sum(len(v) for v in self.xarch.values())
+
+    def xarch_records_for(self, key: OpKey) -> List[Tuple[str, TuningRecord]]:
+        """Foreign-class records for one fingerprint, in deterministic
+        class order — the selector's ``"xarch"`` warm-seed source."""
+        return [
+            (cls_name, recs[key])
+            for cls_name, recs in sorted(self.xarch.items())
+            if key in recs
+        ]
+
+    def note_arch_profile(self, profile: ArchProfile) -> None:
+        """Record the coordinates behind an arch class string (idempotent;
+        the class string is derived from the profile, so two producers of
+        one class cannot disagree)."""
+        self.arch_profiles[profile.cls] = profile
 
     def add_record(
         self,
@@ -226,14 +284,22 @@ class TuningDatabase:
         stays at (0.0, 0) and always loses a federated last-writer-wins
         merge, the same as legacy snapshot records. Already-stamped records
         keep their stamp either way and fast-forward the local clock, so a
-        later local commit always outranks them."""
+        later local commit always outranks them.
+
+        Routing is by the *record's* arch class: own-class records land in
+        ``records`` (with their per-policy table), foreign-class records in
+        ``xarch`` — the journal-over-snapshot structural precedence
+        (unconditional overwrite) holds per class."""
         if stamp and rec.version <= 0:
             rec.version = self.version + 1
             if rec.wall <= 0.0:
                 rec.wall = time.time()
-        self.records[rec.size] = rec
-        if per_policy is not None:
-            self.per_policy[rec.size] = per_policy
+        if rec.arch == self.arch:
+            self.records[rec.size] = rec
+            if per_policy is not None:
+                self.per_policy[rec.size] = per_policy
+        else:
+            self.xarch.setdefault(rec.arch, {})[rec.size] = rec
         self.version = max(self.version + 1, rec.version)
 
     def set_calibration(self, cm, stamp: bool = True, force: bool = False) -> bool:
@@ -247,9 +313,22 @@ class TuningDatabase:
         order (:func:`repro.core.calibrate.better_calibration`) — the same
         contract records merge under. Returns True when the installed
         calibration changed (bumping ``version`` so sieve-generation
-        machinery and adaptive rebuilds see it)."""
+        machinery and adaptive rebuilds see it).
+
+        A calibration stamped with a *foreign* arch class never installs as
+        the local fit — it routes to ``xarch_calibrations`` (LWW within its
+        class), because a sibling generation's fitted constants would steer
+        every local model-first dispatch wrong."""
         from repro.core.calibrate import better_calibration
 
+        cm_arch = getattr(cm, "arch", DEFAULT_ARCH)
+        if cm_arch != self.arch:
+            cur = self.xarch_calibrations.get(cm_arch)
+            new = cm if force else better_calibration(cur, cm)
+            if new is cur:
+                return False
+            self.xarch_calibrations[cm_arch] = new
+            return True
         if stamp and cm.version <= 0:
             cm = replace(
                 cm,
@@ -266,9 +345,17 @@ class TuningDatabase:
 
     # -- persistence --------------------------------------------------------
     def save(self, path: str) -> None:
-        """Write the full JSON snapshot (string-keyed records + sweeps)."""
+        """Write the full JSON snapshot (string-keyed records + sweeps).
+
+        Arch sections (``arch``, ``xarch``, ``arch_profiles``,
+        ``xarch_calibrations``) are written only when non-default/non-empty,
+        so a single-class default fleet's snapshot stays byte-identical to
+        the pre-arch format — and loads under pre-arch readers."""
         payload = {
-            "records": {key_to_str(s): asdict(r) for s, r in self.records.items()},
+            "records": {
+                key_to_str(s): _record_payload_dict(r)
+                for s, r in self.records.items()
+            },
             "per_policy": {
                 key_to_str(s): pp for s, pp in self.per_policy.items()
             },
@@ -277,27 +364,77 @@ class TuningDatabase:
             from repro.core.calibrate import calibration_to_json
 
             payload["calibration"] = calibration_to_json(self.calibration)
+        if self.arch != DEFAULT_ARCH:
+            payload["arch"] = self.arch
+        if self.xarch:
+            payload["xarch"] = {
+                cls_name: {
+                    key_to_str(s): _record_payload_dict(r)
+                    for s, r in recs.items()
+                }
+                for cls_name, recs in self.xarch.items()
+            }
+        if self.arch_profiles:
+            payload["arch_profiles"] = {
+                cls_name: p.to_json() for cls_name, p in self.arch_profiles.items()
+            }
+        if self.xarch_calibrations:
+            from repro.core.calibrate import calibration_to_json
+
+            payload["xarch_calibrations"] = {
+                cls_name: calibration_to_json(cm)
+                for cls_name, cm in self.xarch_calibrations.items()
+            }
         with open(path, "w") as f:
             json.dump(payload, f)
 
     @classmethod
-    def load(cls, path: str, journal: Optional[str] = None) -> "TuningDatabase":
+    def load(
+        cls,
+        path: str,
+        journal: Optional[str] = None,
+        arch: Optional[str] = None,
+    ) -> "TuningDatabase":
         """Load a snapshot, then optionally replay an append-only journal on
         top (records learned after the last snapshot win). Records whose key
         or payload fails to parse are skipped with a warning and counted in
         ``load_errors`` — never silently dropped. Snapshots written before
-        the grid sweep carry no ``g``: they parse with ``g = LEGACY_GRID``."""
+        the grid sweep carry no ``g``: they parse with ``g = LEGACY_GRID``;
+        snapshots written before arch classes parse into ``"default"``.
+
+        ``arch`` overrides the loading process's own class (default: the
+        class the snapshot declares). Every record routes by its *own*
+        stamped class, so loading another class's snapshot under a local
+        class lands its records in ``xarch`` — warm seeds, not direct hits."""
         with open(path) as f:
             payload = json.load(f)
-        db = cls()
-        for key, rec in payload["records"].items():
-            try:
-                size = key_from_str(key)
-                rec["size"] = size
-                db.records[size] = TuningRecord(**rec)
-            except (ValueError, IndexError, TypeError) as e:
-                db.load_errors += 1
-                log.warning("dropping unparsable tuning record %r: %s", key, e)
+        own = arch if arch is not None else payload.get("arch", DEFAULT_ARCH)
+        db = cls(arch=own)
+        sections = [(None, payload["records"])]
+        sections += [
+            (cls_name, recs)
+            for cls_name, recs in payload.get("xarch", {}).items()
+        ]
+        for section_arch, records in sections:
+            for key, rec in records.items():
+                try:
+                    size = key_from_str(key)
+                    rec["size"] = size
+                    rec.setdefault(
+                        "arch",
+                        section_arch
+                        if section_arch is not None
+                        else payload.get("arch", DEFAULT_ARCH),
+                    )
+                    parsed = TuningRecord(**rec)
+                except (ValueError, IndexError, TypeError) as e:
+                    db.load_errors += 1
+                    log.warning("dropping unparsable tuning record %r: %s", key, e)
+                    continue
+                if parsed.arch == db.arch:
+                    db.records[size] = parsed
+                else:
+                    db.xarch.setdefault(parsed.arch, {})[size] = parsed
         for key, pp in payload.get("per_policy", {}).items():
             try:
                 db.per_policy[key_from_str(key)] = pp
@@ -308,10 +445,30 @@ class TuningDatabase:
             from repro.core.calibrate import calibration_from_json
 
             try:
-                db.calibration = calibration_from_json(payload["calibration"])
+                # routed by its own arch class: a snapshot re-keyed to a
+                # different local class must not install foreign constants
+                db.set_calibration(
+                    calibration_from_json(payload["calibration"]), stamp=False
+                )
             except (ValueError, KeyError, TypeError) as e:
                 db.load_errors += 1
                 log.warning("dropping unparsable calibration: %s", e)
+        for cls_name, cal in payload.get("xarch_calibrations", {}).items():
+            from repro.core.calibrate import calibration_from_json
+
+            try:
+                db.set_calibration(calibration_from_json(cal), stamp=False)
+            except (ValueError, KeyError, TypeError) as e:
+                db.load_errors += 1
+                log.warning(
+                    "dropping unparsable %s calibration: %s", cls_name, e
+                )
+        for cls_name, prof in payload.get("arch_profiles", {}).items():
+            try:
+                db.note_arch_profile(ArchProfile.from_json(prof))
+            except (ValueError, TypeError) as e:
+                db.load_errors += 1
+                log.warning("dropping unparsable arch profile %r: %s", cls_name, e)
         if db.load_errors:
             log.warning(
                 "%s: dropped %d unparsable entries (kept %d records) — "
@@ -331,9 +488,16 @@ class TuningDatabase:
 
     def replay_journal(self, path: str, missing_ok: bool = False) -> int:
         """Re-apply an append-only JSONL journal (see :func:`journal_entry`)
-        in order; later lines win. Returns the number of records applied;
+        in order; later lines win. Returns the number of entries applied;
         malformed lines are warned about and counted in ``load_errors``.
-        Legacy g-less lines replay with ``g = LEGACY_GRID``.
+        Legacy g-less lines replay with ``g = LEGACY_GRID``; arch-less
+        lines into the ``"default"`` class.
+
+        Entries route through the tagged-entry registry
+        (:data:`JOURNAL_ENTRY_HANDLERS`): an entry whose tag no handler
+        claims — a *future* producer's type — is skipped and counted in
+        ``load_errors`` but NOT warned as malformed (forward compatibility
+        is not corruption).
 
         Crash tolerance: a process dying mid-``append_journal`` leaves a
         truncated final line — possibly ending inside a multi-byte UTF-8
@@ -359,23 +523,19 @@ class TuningDatabase:
                 continue
             try:
                 entry = json.loads(raw.decode("utf-8"))
-                if isinstance(entry, dict) and "calibration" in entry:
-                    # the journal's second entry type: a fitted calibration
-                    # (see calibrate.calibration_entry). Replayed under the
-                    # same LWW order as merges, producer stamp preserved.
-                    from repro.core.calibrate import calibration_from_json
-
-                    self.set_calibration(
-                        calibration_from_json(entry["calibration"]),
-                        stamp=False,
-                    )
+                if apply_journal_entry(self, entry):
+                    applied += 1
                 else:
-                    rec, per_policy = _entry_record(entry)
-                    # stamp=False: replay reconstructs producer state —
-                    # legacy version-less lines must stay 0 (and lose
-                    # merges), not be promoted to fresh local commits
-                    self.add_record(rec, per_policy, stamp=False)
-                applied += 1
+                    # unknown tag: a future entry type, not corruption —
+                    # counted (the shrink stays visible) but not warned
+                    self.load_errors += 1
+                    log.debug(
+                        "%s:%d: skipping journal entry with unknown tag "
+                        "(keys %s)",
+                        path,
+                        lineno,
+                        sorted(entry)[:4] if isinstance(entry, dict) else "-",
+                    )
             except (ValueError, IndexError, TypeError, KeyError) as e:
                 self.load_errors += 1
                 if lineno == last_lineno:
@@ -404,6 +564,80 @@ def _entry_record(entry: dict) -> Tuple[TuningRecord, Optional[Dict[str, float]]
     return TuningRecord(size=size, **rec), entry.get("per_policy")
 
 
+def _record_payload_dict(rec: TuningRecord) -> dict:
+    """Record dict for snapshots/journals: the ``arch`` field is omitted
+    for default-class records, so a single-class default fleet's artifact
+    bytes stay identical to the pre-arch formats (and stay readable by
+    pre-arch consumers, which reject unknown record fields)."""
+    d = asdict(rec)
+    if rec.arch == DEFAULT_ARCH:
+        d.pop("arch", None)
+    return d
+
+
+# -- tagged journal entries -------------------------------------------------
+#
+# The journal grew entry types organically ({"record": ...} in PR 2,
+# {"calibration": ...} in PR 8, {"arch": ...} now); this registry makes the
+# codec table-driven: one handler per tag, checked in registration order
+# (``"record"`` first — record entries also carry "key"/"per_policy" keys).
+# Producers of NEW types register here; consumers built before a type
+# existed skip-and-count it instead of warning (see ``replay_journal``).
+
+
+def _apply_record_entry(db: "TuningDatabase", entry: dict) -> None:
+    rec, per_policy = _entry_record(entry)
+    # stamp=False: replay reconstructs producer state — legacy version-less
+    # lines must stay 0 (and lose merges), not become fresh local commits
+    db.add_record(rec, per_policy, stamp=False)
+
+
+def _apply_calibration_entry(db: "TuningDatabase", entry: dict) -> None:
+    from repro.core.calibrate import calibration_from_json
+
+    # replayed under the same LWW order as merges, producer stamp preserved
+    db.set_calibration(calibration_from_json(entry["calibration"]), stamp=False)
+
+
+def _apply_arch_entry(db: "TuningDatabase", entry: dict) -> None:
+    db.note_arch_profile(ArchProfile.from_json(entry["arch"]))
+
+
+#: tag -> handler(db, entry). Insertion order is match order.
+JOURNAL_ENTRY_HANDLERS: Dict[str, Callable[["TuningDatabase", dict], None]] = {
+    "record": _apply_record_entry,
+    "calibration": _apply_calibration_entry,
+    "arch": _apply_arch_entry,
+}
+
+
+def register_journal_entry(
+    tag: str, handler: Callable[["TuningDatabase", dict], None]
+) -> None:
+    """Register a journal entry type: ``handler(db, entry)`` is called for
+    every journal line whose decoded object carries ``tag`` as a key.
+    Raising from the handler marks the line malformed (warn + count);
+    see :meth:`TuningDatabase.replay_journal`."""
+    JOURNAL_ENTRY_HANDLERS[tag] = handler
+
+
+def apply_journal_entry(db: "TuningDatabase", entry) -> bool:
+    """Apply ONE decoded journal entry through the tag registry.
+
+    Returns True when a handler claimed and applied it, False for an
+    unknown tag (the caller decides how to count forward-compat skips).
+    Raises — like the handlers — on a malformed payload. Shared by
+    ``replay_journal`` and the streaming :mod:`repro.core.gossip` reader,
+    so both consume exactly the same entry table."""
+    if not isinstance(entry, dict):
+        raise ValueError(f"journal entry is not an object: {type(entry).__name__}")
+    for tag, handler in JOURNAL_ENTRY_HANDLERS.items():
+        if tag in entry:
+            handler(db, entry)
+            return True
+    return False
+
+
 def parse_journal_line(line: str) -> Tuple[TuningRecord, Optional[Dict[str, float]]]:
     """Parse one record-type journal line into (record, per_policy). Raises
     on any malformed input (``replay_journal`` / shard mergers decide whether
@@ -418,8 +652,9 @@ def journal_entry(
 ) -> str:
     """One journal line: the shared format the offline ``Tuner`` emits and
     the serve-time adaptive tuner appends — ``TuningDatabase.replay_journal``
-    consumes both identically."""
-    payload = asdict(rec)
+    consumes both identically. Default-class records serialize without the
+    ``arch`` field (byte-identical to pre-arch lines)."""
+    payload = _record_payload_dict(rec)
     payload.pop("size")
     entry = {"key": key_to_str(rec.size), "record": payload}
     if per_policy is not None:
@@ -582,9 +817,13 @@ class Tuner:
         grid_sizes: Optional[Sequence[int]] = None,
         top_k: Optional[int] = None,
         calibration=None,
+        arch: str = DEFAULT_ARCH,
     ):
         if top_k is not None and top_k < 1:
             raise ValueError(f"top_k must be >= 1, got {top_k}")
+        #: arch class stamped onto every record this tuner measures (the
+        #: machine class the measurements describe — see repro.core.arch)
+        self.arch = arch
         self.policies = tuple(policies)
         self.tile_configs = tuple(tile_configs)
         self.measure = measure_fn or measure_model(mach)
@@ -663,6 +902,7 @@ class Tuner:
             model_rank=self._model_rank(
                 shape, dt, w_name, per_policy_cfg[w_name], per_policy_g[w_name]
             ),
+            arch=self.arch,
         )
 
     def _tune_size_full(
@@ -758,7 +998,7 @@ class Tuner:
         exact database the unsharded sweep would have produced."""
         if shard is not None:
             sizes = shard_targets(sizes, *shard)
-        db = TuningDatabase()
+        db = TuningDatabase(arch=self.arch)
         for i, size in enumerate(sizes):
             rec, per_policy = self.tune_size(size)
             db.add_record(rec, per_policy)

@@ -35,6 +35,19 @@ installs a host-mesh sharding plan so dispatch fingerprints key on the
 per-shard local MNK (mesh-aware federation across identically-sharded
 hosts).
 
+Streaming gossip and heterogeneous fleets:
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --requests 32 \
+      --adapt --workers 2 --gossip-every 8 --arch-class auto \
+      --journal artifacts/tuning_journal.jsonl
+
+``--gossip-every N`` keeps federation continuous: every N engine steps each
+worker tails its siblings' journal shards (``repro.core.gossip``) and folds
+fresh commits into its live selector via an atomic hot-swap — no restart
+between learning and benefiting. ``--arch-class auto`` stamps records with
+the machine's architecture class; same-class records federate as direct
+database hits while other-class records only seed selection as re-ranked
+``"xarch"`` candidates (never applied verbatim).
+
 Paged serving with admission control and traffic replay:
   PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --requests 32 \
       --paged --page-size 16 --max-pages 64 --replay poisson
@@ -65,6 +78,7 @@ import numpy as np
 from repro.configs import list_archs
 from repro.core import costmodel
 from repro.core.adaptive import AdaptiveConfig, AdaptiveTuner
+from repro.core.arch import DEFAULT_ARCH, append_arch, detect_arch
 from repro.core.calibrate import (
     CalibrationError,
     append_calibration,
@@ -73,7 +87,8 @@ from repro.core.calibrate import (
 )
 from repro.core.federate import apply_journal_db, merge_journal_shards
 from repro.core.gemm import gemm_context
-from repro.core.selector import KernelSelector
+from repro.core.gossip import GossipExchange
+from repro.core.selector import KernelSelector, SelectorState
 from repro.core.tuner import TuningDatabase
 from repro.dist.sharding import ShardingPlan, materialize_tree, use_plan
 from repro.launch.mesh import make_host_mesh
@@ -122,11 +137,25 @@ def replay_arrivals(n: int, pattern: str, rate: float, seed: int) -> list:
     return steps
 
 
-def replay_stream(engine, prompts, *, pattern, rate, seed, max_new, temperature):
+def replay_stream(
+    engine,
+    prompts,
+    *,
+    pattern,
+    rate,
+    seed,
+    max_new,
+    temperature,
+    gossip=None,
+    gossip_every=0,
+):
     """Drive ``engine`` on a synthetic arrival process: one engine step per
     clock tick, submissions offered as they come due, queue backpressure
-    (:class:`~repro.serve.AdmissionError`) re-offered next tick. Returns the
-    finished request objects."""
+    (:class:`~repro.serve.AdmissionError`) re-offered next tick. With a
+    :class:`~repro.core.gossip.GossipExchange`, sibling journal shards are
+    polled every ``gossip_every`` clock ticks (plus once at drain), so the
+    worker absorbs fleet commits mid-stream. Returns the finished request
+    objects."""
     arrivals = replay_arrivals(len(prompts), pattern, rate, seed)
     tracked = []
     i = 0
@@ -143,7 +172,44 @@ def replay_stream(engine, prompts, *, pattern, rate, seed, max_new, temperature)
             i += 1
         engine.step()
         step += 1
+        if gossip is not None and gossip_every > 0 and step % gossip_every == 0:
+            gossip.exchange()
+    if gossip is not None:
+        gossip.exchange()
     return [r for r in tracked if r.done]
+
+
+def run_with_gossip(engine, gossip, every, max_steps: int = 10_000):
+    """``EngineCore.run`` with a gossip exchange every ``every`` steps.
+
+    Mirrors the drain loop exactly (queue + resident tracking, adaptive
+    end-of-run flush, exhaustion accounting) and folds sibling journal
+    shards in mid-run — the live-fleet path where a worker picks up what a
+    sibling tuned moments ago without restarting. A final exchange runs
+    after the drain so nothing a sibling committed during our last steps is
+    left for the next process lifetime."""
+    finished = []
+    seen = {}
+    steps = 0
+    for _ in range(max_steps):
+        for r in list(engine._queue):
+            seen[r.uid] = r
+        for r in engine.outstanding():
+            seen[r.uid] = r
+        if not engine.step():
+            break
+        steps += 1
+        if every > 0 and steps % every == 0:
+            gossip.exchange()
+    if engine.adaptive is not None and engine.adapt_every > 0:
+        engine.adaptive.drain()
+    gossip.exchange()
+    for r in seen.values():
+        if r.done:
+            finished.append(r)
+    engine.unfinished = engine.outstanding()
+    engine.exhausted = bool(engine.unfinished)
+    return finished
 
 
 def main() -> int:
@@ -294,11 +360,32 @@ def main() -> int:
         help="install a (data, model=N) host-mesh sharding plan so dispatch "
         "fingerprints key on per-shard local MNK (0: no plan)",
     )
+    ap.add_argument(
+        "--gossip-every",
+        type=int,
+        default=0,
+        help="poll sibling workers' journal shards every N engine steps and "
+        "fold fresh commits into the live selector (streaming federation; "
+        "0: off; requires --journal)",
+    )
+    ap.add_argument(
+        "--arch-class",
+        default="off",
+        choices=["off", "auto"],
+        help="stamp tuning records with an architecture class: 'auto' "
+        "derives an ArchProfile from the (possibly overridden) machine and "
+        "live backend, so records only federate as direct hits within the "
+        "same device class ('off': the legacy single-class 'default')",
+    )
     args = ap.parse_args()
     if args.workers < 1:
         raise SystemExit(f"--workers must be >= 1, got {args.workers}")
     if args.merge_journals and not args.journal:
         raise SystemExit("--merge-journals requires --journal")
+    if args.gossip_every < 0:
+        raise SystemExit(f"--gossip-every must be >= 0, got {args.gossip_every}")
+    if args.gossip_every and not args.journal:
+        raise SystemExit("--gossip-every requires --journal")
 
     cfg = preset_config(args.arch, args.preset)
     if args.dtype:
@@ -340,6 +427,12 @@ def main() -> int:
             mach.hbm_bw / 1e9,
             mach.lanes,
         )
+    arch_profile = None
+    arch_cls = DEFAULT_ARCH
+    if args.arch_class == "auto":
+        arch_profile = detect_arch(mach)
+        arch_cls = arch_profile.cls
+        log.info("arch class: %s", arch_cls)
     use_artifacts = bool(args.db or args.journal or args.adapt or args.calibrate)
 
     def warm_db(w: int) -> TuningDatabase:
@@ -349,9 +442,9 @@ def main() -> int:
         OWN shard from the previous fleet run, or (with --merge-journals)
         the federation of every shard the whole fleet ever wrote."""
         if args.db and os.path.exists(args.db):
-            db = TuningDatabase.load(args.db)
+            db = TuningDatabase.load(args.db, arch=arch_cls)
         else:
-            db = TuningDatabase()
+            db = TuningDatabase(arch=arch_cls)
         if args.journal:
             if args.merge_journals:
                 shards = existing_journal_shards(args.journal)
@@ -359,7 +452,11 @@ def main() -> int:
                     # last-writer-wins among the peer shards, then applied
                     # ON TOP of the snapshot (journals post-date it; their
                     # producer clocks are not comparable to the snapshot's)
-                    merged, rep = merge_journal_shards(shards, missing_ok=True)
+                    merged, rep = merge_journal_shards(
+                        shards,
+                        into=TuningDatabase(arch=arch_cls),
+                        missing_ok=True,
+                    )
                     apply_journal_db(db, merged)
                     log.info(
                         "federated warm start: %d shards -> %d records "
@@ -410,24 +507,36 @@ def main() -> int:
                             shard_journal_path(args.journal, w, args.workers),
                             calibration,
                         )
-            sieve = db.build_sieve() if db.records else None
+            sieve = db.build_sieve() if db.n_records() else None
             selector = KernelSelector(
-                sieve=sieve,
-                db=db,
+                state=SelectorState(
+                    db=db, sieve=sieve, calibration=calibration, arch=arch_cls
+                ),
                 mach=mach,
                 grid_sizes=grid_sizes,
-                calibration=calibration,
             )
             log.info(
-                "worker %d warm-start: %d tuned records (%d dropped at "
-                "load), calibration %s",
+                "worker %d warm-start: %d tuned records + %d cross-arch "
+                "(%d dropped at load), calibration %s, arch %s",
                 w,
                 len(db.records),
+                db.n_records() - len(db.records),
                 db.load_errors,
                 "installed" if calibration is not None else "absent",
+                arch_cls,
             )
         else:
-            selector = KernelSelector(mach=mach, grid_sizes=grid_sizes)
+            selector = KernelSelector(
+                mach=mach,
+                grid_sizes=grid_sizes,
+                state=SelectorState(arch=arch_cls),
+            )
+        if arch_profile is not None and args.journal:
+            # declare this producer's coordinates in its shard, so every
+            # consumer of the journal knows the machine behind the class
+            append_arch(
+                shard_journal_path(args.journal, w, args.workers), arch_profile
+            )
         adaptive = None
         if args.adapt:
             adaptive = AdaptiveTuner(
@@ -474,6 +583,16 @@ def main() -> int:
     with use_plan(plan):
         for w in range(args.workers):
             selector, adaptive = worker_state[w]
+            gossip = None
+            if args.gossip_every and args.workers > 1:
+                # each worker tails every OTHER worker's shard: its own
+                # commits are already in its database
+                peers = [
+                    shard_journal_path(args.journal, x, args.workers)
+                    for x in range(args.workers)
+                    if x != w
+                ]
+                gossip = GossipExchange(selector, peers)
             with gemm_context(selector=selector) as ctx:
                 if args.paged:
                     max_pages = args.max_pages or (
@@ -515,6 +634,8 @@ def main() -> int:
                             seed=args.seed + w,
                             max_new=args.max_new_tokens,
                             temperature=args.temperature,
+                            gossip=gossip,
+                            gossip_every=args.gossip_every,
                         )
                     )
                     if adaptive is not None:
@@ -528,7 +649,22 @@ def main() -> int:
                             max_new_tokens=args.max_new_tokens,
                             temperature=args.temperature,
                         )
-                    done.extend(engine.run())
+                    if gossip is not None:
+                        done.extend(
+                            run_with_gossip(engine, gossip, args.gossip_every)
+                        )
+                    else:
+                        done.extend(engine.run())
+                if gossip is not None:
+                    log.info(
+                        "worker %d gossip: %d rounds, %d sibling entries "
+                        "absorbed over %d hot-swaps (%d load errors)",
+                        w,
+                        gossip.stats.rounds,
+                        gossip.stats.entries,
+                        gossip.stats.swaps,
+                        gossip.stats.load_errors,
+                    )
                 engines.append((w, engine, adaptive, ctx))
     dt = time.time() - t0
     ntok = sum(len(r.out_tokens) for r in done)
@@ -572,12 +708,13 @@ def main() -> int:
         if adaptive is not None:
             st = engine.dispatch_stats
             log.info(
-                "worker %d adaptation: %d misses (%d model-warm) -> %d "
-                "records committed (sieve generation %d, %d pending, "
-                "db=%d records)",
+                "worker %d adaptation: %d misses (%d model-warm, %d "
+                "xarch-seeded) -> %d records committed (sieve generation "
+                "%d, %d pending, db=%d records)",
                 w,
                 st.misses,
                 st.model_warm,
+                st.xarch_seeds,
                 st.adaptations,
                 st.sieve_generation,
                 st.pending_hot,
@@ -589,11 +726,13 @@ def main() -> int:
             shard_journal_path(args.journal, w, args.workers)
             for w in range(args.workers)
         ]
-        merged, rep = merge_journal_shards(shard_paths, missing_ok=True)
+        merged, rep = merge_journal_shards(
+            shard_paths, into=TuningDatabase(arch=arch_cls), missing_ok=True
+        )
         log.info(
             "fleet journals federate to %d records (%d shards, %d conflicts); "
             "re-run with --merge-journals to warm-start every worker from them",
-            len(merged.records),
+            merged.n_records(),
             rep.sources,
             rep.conflicts,
         )

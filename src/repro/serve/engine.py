@@ -100,6 +100,10 @@ class DispatchStats:
     #: "model" selection source) — analytical warm starts, still counted as
     #: misses by the adaptive loop so hot ones get measured and promoted
     model_warm: int = 0
+    #: dispatches seeded from a foreign arch class's record (the "xarch"
+    #: selection source) — re-ranked warm starts, still adaptive misses so
+    #: local measurements supersede the import
+    xarch_seeds: int = 0
 
     def __getattr__(self, name):
         return getattr(self.selector, name)
@@ -229,6 +233,7 @@ class EngineCore:
             misses = (
                 sel.stats.sieve_hits
                 + sel.stats.model_warm
+                + sel.stats.xarch_seeds
                 + sel.stats.fallbacks
             )
             adaptations = 0
@@ -242,6 +247,7 @@ class EngineCore:
             db_records=db_records,
             pending_hot=pending,
             model_warm=sel.stats.model_warm,
+            xarch_seeds=sel.stats.xarch_seeds,
         )
 
     def _sample(self, logits: np.ndarray, temperature: float) -> int:

@@ -1,0 +1,212 @@
+"""Streaming journal gossip: incremental tails (torn-write resume, shrink
+recovery, malformed-line accounting) and live cross-worker exchange into a
+running selector.
+
+The multi-device CI lane also runs this file; every test is
+device-count-agnostic."""
+
+import json
+import logging
+
+import pytest
+
+from repro.core.adaptive import AdaptiveConfig, AdaptiveTuner
+from repro.core.arch import DEFAULT_ARCH
+from repro.core.gossip import GossipExchange, JournalTail
+from repro.core.selector import KernelSelector, SelectorState
+from repro.core.tuner import (
+    TuningDatabase,
+    TuningRecord,
+    append_journal,
+    journal_entry,
+)
+
+SIZES = [(64, 512, 256), (128, 256, 512), (32, 1024, 128)]
+
+
+def _rec(size=(64, 512, 256), policy="dp", tflops=1.0, arch=DEFAULT_ARCH, wall=0.0):
+    return TuningRecord(
+        size=size,
+        policy=policy,
+        cfg="128x128x128",
+        tflops=tflops,
+        runner_up_policy="all_sk",
+        runner_up_tflops=tflops * 0.9,
+        dp_best_tflops=tflops,
+        g=8,
+        wall=wall,
+        arch=arch,
+    )
+
+
+# -- JournalTail: incremental reads ----------------------------------------
+
+
+def test_tail_reads_incrementally(tmp_path):
+    shard = str(tmp_path / "s.jsonl")
+    tail = JournalTail(shard)
+    assert tail.poll() == []  # missing shard: nothing yet, no raise
+
+    append_journal(shard, _rec(SIZES[0]))
+    first = tail.poll()
+    assert [e["key"] for e in first] == ["64,512,256"]
+    assert tail.poll() == []  # nothing new
+
+    append_journal(shard, _rec(SIZES[1]))
+    append_journal(shard, _rec(SIZES[2]))
+    assert [e["key"] for e in tail.poll()] == ["128,256,512", "32,1024,128"]
+
+
+def test_tail_missing_shard_raises_when_not_ok(tmp_path):
+    tail = JournalTail(str(tmp_path / "never.jsonl"), missing_ok=False)
+    with pytest.raises(FileNotFoundError):
+        tail.poll()
+
+
+def test_tail_resumes_across_torn_multibyte_final_line(tmp_path):
+    shard = tmp_path / "s.jsonl"
+    complete = journal_entry(_rec(SIZES[0])) + "\n"
+    # a crash mid-append, torn *inside* a multi-byte UTF-8 sequence: the
+    # tail must neither raise nor consume the partial line
+    entry = json.loads(journal_entry(_rec(SIZES[1])))
+    entry["note"] = "émigré"
+    torn_line = json.dumps(entry, ensure_ascii=False).encode("utf-8")
+    split = torn_line.index("é".encode("utf-8")) + 1  # mid-sequence
+    shard.write_bytes(complete.encode("utf-8") + torn_line[:split])
+
+    tail = JournalTail(str(shard))
+    assert [e["key"] for e in tail.poll()] == ["64,512,256"]
+    assert tail.load_errors == 0  # torn != malformed: it may still heal
+    assert tail.offset == len(complete.encode("utf-8"))
+
+    # the producer finishes the append: the healed line reads whole
+    shard.write_bytes(complete.encode("utf-8") + torn_line + b"\n")
+    assert [e["key"] for e in tail.poll()] == ["128,256,512"]
+    assert tail.load_errors == 0
+
+
+def test_tail_counts_complete_malformed_lines_once(tmp_path):
+    shard = tmp_path / "s.jsonl"
+    shard.write_text(
+        journal_entry(_rec(SIZES[0])) + "\n" + "{not json\n"
+        + journal_entry(_rec(SIZES[1])) + "\n"
+    )
+    tail = JournalTail(str(shard))
+    assert len(tail.poll()) == 2
+    assert tail.load_errors == 1
+    assert tail.poll() == []  # the malformed line was consumed, not retried
+    assert tail.load_errors == 1
+
+
+def test_tail_rereads_after_shrink(tmp_path):
+    shard = tmp_path / "s.jsonl"
+    shard.write_text(
+        journal_entry(_rec(SIZES[0])) + "\n" + journal_entry(_rec(SIZES[1])) + "\n"
+    )
+    tail = JournalTail(str(shard))
+    assert len(tail.poll()) == 2
+    # rotation/truncation: the shard restarts smaller than our offset, so
+    # the only safe resume is a full re-read from byte 0
+    shard.write_text(journal_entry(_rec(SIZES[2])) + "\n")
+    assert [e["key"] for e in tail.poll()] == ["32,1024,128"]
+
+
+def test_tail_skips_blank_lines(tmp_path):
+    shard = tmp_path / "s.jsonl"
+    shard.write_text("\n" + journal_entry(_rec(SIZES[0])) + "\n\n")
+    assert len(JournalTail(str(shard)).poll()) == 1
+
+
+# -- GossipExchange: live cross-worker convergence --------------------------
+
+
+def _worker(journal=None, hot_threshold=1):
+    sel = KernelSelector()
+    adaptive = AdaptiveTuner(
+        sel, config=AdaptiveConfig(hot_threshold=hot_threshold), journal=journal
+    )
+    return sel, adaptive
+
+
+def test_gossip_folds_sibling_commits_without_restart(tmp_path):
+    shard_a = str(tmp_path / "a.jsonl")
+    shard_b = str(tmp_path / "b.jsonl")
+    sel_a, ad_a = _worker(journal=shard_a)
+    sel_b, ad_b = _worker(journal=shard_b)
+    gossip_b = GossipExchange(sel_b, [shard_a])
+
+    # worker A tunes its workload; B has never seen those fingerprints
+    for s in SIZES:
+        sel_a.select(*s)
+    assert ad_a.drain() == len(SIZES)
+
+    assert gossip_b.exchange() == len(SIZES)
+    misses_before = ad_b.stats.misses
+    for s in SIZES:
+        assert sel_b.select(*s).source == "tuned"  # direct DB hits, no misses
+    assert ad_b.stats.misses == misses_before
+    assert gossip_b.stats.swaps == 1
+    assert gossip_b.stats.entries == len(SIZES)
+
+
+def test_quiet_round_installs_nothing(tmp_path):
+    shard = str(tmp_path / "a.jsonl")
+    sel, _ = _worker()
+    gossip = GossipExchange(sel, [shard])
+    state = sel.state
+    assert gossip.exchange() == 0  # sibling shard does not even exist yet
+    assert sel.state is state  # no swap: memoised picks survive
+    assert gossip.stats.swaps == 0
+    assert gossip.stats.rounds == 1
+
+
+def test_gossip_does_not_clobber_newer_local_commit(tmp_path):
+    shard = str(tmp_path / "a.jsonl")
+    append_journal(shard, _rec(policy="dp", tflops=1.0, wall=1.0))
+    db = TuningDatabase()
+    local = _rec(policy="sk2dp", tflops=2.0, wall=2.0)  # newer wall stamp
+    db.add_record(local, stamp=False)
+    sel = KernelSelector(state=SelectorState(db=db))
+    gossip = GossipExchange(sel, [shard])
+    gossip.exchange()
+    assert sel.db.records[local.size].policy == "sk2dp"  # LWW: local stands
+
+
+def test_gossip_unknown_tags_skip_and_count(tmp_path, caplog):
+    shard = tmp_path / "a.jsonl"
+    shard.write_text(
+        journal_entry(_rec(wall=1.0)) + "\n"
+        + json.dumps({"telemetry": {"qps": 9}}) + "\n"
+    )
+    sel, _ = _worker()
+    gossip = GossipExchange(sel, [str(shard)])
+    with caplog.at_level(logging.DEBUG, logger="repro.gossip"):
+        assert gossip.exchange() == 1
+    assert gossip.stats.load_errors == 1
+    warnings_seen = [r for r in caplog.records if r.levelno >= logging.WARNING]
+    assert not warnings_seen  # forward compatibility is not corruption
+
+
+def test_gossip_foreign_class_records_surface_as_xarch_seeds(tmp_path):
+    shard = str(tmp_path / "a.jsonl")
+    foreign = _rec(policy="sk2dp", arch="tpu:l8:v16m:r275", wall=1.0)
+    append_journal(shard, foreign)
+    sel, _ = _worker()
+    GossipExchange(sel, [shard]).exchange()
+    assert not sel.db.records  # never a direct hit across classes
+    chosen = sel.select(*foreign.size)
+    assert chosen.source == "xarch"
+    assert sel.stats.xarch_seeds == 1
+
+
+def test_gossip_bumps_sieve_generation_per_swap(tmp_path):
+    shard = str(tmp_path / "a.jsonl")
+    sel, _ = _worker()
+    gossip = GossipExchange(sel, [shard])
+    append_journal(shard, _rec(SIZES[0], wall=1.0))
+    gossip.exchange()
+    assert sel.sieve_generation == 1
+    append_journal(shard, _rec(SIZES[1], wall=2.0))
+    gossip.exchange()
+    assert sel.sieve_generation == 2
+    assert gossip.stats.swaps == 2
