@@ -25,10 +25,22 @@ from typing import Dict, List, Optional
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 N_SHAPES = 32
-#: per-shape dtype profiles: dense f32/bf16 plus the quantized-serving
-#: mixed profile (f32 activations x int8 weights, fused dequant) — the
-#: trajectory tracks whether the 1-byte B operand keeps flipping winners
-DTYPES = ("float32", "bfloat16", "float32*int8")
+#: per-shape dtype profiles: dense f32/bf16 plus the low-precision serving
+#: ladder — int8 weights (1-byte B), dynamic int8 x int8 (1-byte A and B,
+#: integer MAC) and packed int4 weights (0.5-byte B) — the trajectory
+#: tracks whether the shrinking byte-widths keep flipping winners
+DTYPES = ("float32", "bfloat16", "float32*int8", "int8*int8", "float32*int4")
+
+#: the ladder rungs whose selection flips the snapshot counts explicitly
+LADDER_DTYPES = ("float32*int8", "int8*int8", "float32*int4")
+
+
+def _out_dtype(dt_name: str) -> str:
+    """Stored-output dtype of a fingerprint: mixed "a*w" profiles output at
+    the activation dtype — except integer activations (the dynamic-quant
+    rung), which keep the pre-quantization float output contract."""
+    act = dt_name.split("*", 1)[0]
+    return "float32" if act.startswith(("int", "uint")) else act
 
 #: grouped-GEMM trajectory: expert counts swept for the fused one-kernel
 #: MoE dispatch vs the per-group launch loop
@@ -74,9 +86,7 @@ def _modeled_suite() -> Dict[str, dict]:
     for m, n, k in _sample_shapes():
         entry = {}
         for dt_name in DTYPES:
-            # mixed "a*w" profiles output at the activation dtype (the
-            # quantized-serving contract); uniform profiles at themselves
-            out_dt = dt_name.split("*", 1)[0]
+            out_dt = _out_dtype(dt_name)
             s = sel.select_op(
                 GemmOp.plain(m, n, k, in_dtype=dt_name, out_dtype=out_dt)
             )
@@ -91,6 +101,33 @@ def _modeled_suite() -> Dict[str, dict]:
                 "modeled_tflops": round(tflops, 4),
             }
         out[f"{m}x{n}x{k}"] = entry
+    return out
+
+
+def _ladder_flips(suite: Dict[str, dict]) -> Dict[str, dict]:
+    """Selection-flip counts for the quantized ladder: per rung, over the
+    sampled shapes, how often the selected (policy, cfg, g) differs from
+    the dense-f32 winner and from the int8-weight rung at the same MNK —
+    the observable evidence that the cost model scores each rung's real
+    byte-widths (packed int4 B at 0.5 bytes/element included)."""
+    out: Dict[str, dict] = {}
+    total = len(suite)
+    for dt_name in LADDER_DTYPES:
+        vs_f32 = vs_int8 = 0
+        for entry in suite.values():
+            pick = entry[dt_name]
+            key = (pick["policy"], pick["cfg"], pick["g"])
+            f32 = entry["float32"]
+            if key != (f32["policy"], f32["cfg"], f32["g"]):
+                vs_f32 += 1
+            base = entry["float32*int8"]
+            if key != (base["policy"], base["cfg"], base["g"]):
+                vs_int8 += 1
+        out[dt_name] = {
+            "samples": total,
+            "flips_vs_float32": vs_f32,
+            "flips_vs_int8_weight": vs_int8,
+        }
     return out
 
 
@@ -201,7 +238,7 @@ def _regret_section() -> Dict[str, dict]:
         "profiles": {},
     }
     for dt_name in DTYPES:
-        out_dt = dt_name.split("*", 1)[0]
+        out_dt = _out_dtype(dt_name)
         dt = costmodel.profile_for(dt_name, out_dt)
         mach_cal = cm.machine_for(dt)
         regrets: List[float] = []
@@ -324,10 +361,12 @@ def build_snapshot(
     existing = _find_indices(diff_dir)
     if index is None:
         index = (existing[-1] + 1) if existing else 0
+    suite = _modeled_suite()
     snapshot = {
         "index": index,
         "dispatch": _dispatch_overhead_us(),
-        "suite": _modeled_suite(),
+        "suite": suite,
+        "ladder": _ladder_flips(suite),
         "grouped": _grouped_trajectory(),
         "regret": _regret_section(),
     }
@@ -376,6 +415,12 @@ def main() -> None:
             f"({budget['measure_ratio']}x fewer), "
             f"{budget['within_10pct_of_full']:.0%} of shapes within 10% of "
             f"the full-sweep winner"
+        )
+    for dt_name, entry in sorted(snap.get("ladder", {}).items()):
+        print(
+            f"ladder {dt_name}: {entry['flips_vs_float32']}/{entry['samples']} "
+            f"winners differ from f32, {entry['flips_vs_int8_weight']} from "
+            f"the int8-weight rung"
         )
     for gk, entry in sorted(snap.get("grouped", {}).items()):
         print(

@@ -5,10 +5,13 @@ prints the dispatch decisions).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 
-Extra flags pass through to the launcher, e.g. int8-weight serving with
-fused dequant epilogues (decode GEMMs fingerprint as ``float32*int8``):
+Extra flags pass through to the launcher, e.g. low-precision serving with
+fused dequant epilogues (decode GEMMs fingerprint as ``float32*int8``,
+``int8*int8`` or ``float32*int4`` depending on the rung):
 
   PYTHONPATH=src python examples/serve_lm.py --quantize int8
+  PYTHONPATH=src python examples/serve_lm.py --quantize int8-dynamic
+  PYTHONPATH=src python examples/serve_lm.py --quantize int4
 """
 
 import sys

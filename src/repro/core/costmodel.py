@@ -123,15 +123,19 @@ _WIDTHS = {
     "uint16": 2,
     "int8": 1,
     "uint8": 1,
-    "int4": 1,  # packed sub-byte dtypes still move >= 1 byte per element here
-    "uint4": 1,
+    # packed sub-byte dtypes: two nibbles per byte along K, so each element
+    # moves half a byte through HBM (fractional widths are what the tile-time
+    # bytes terms multiply by — they never index an array dtype directly)
+    "int4": 0.5,
+    "uint4": 0.5,
 }
 
 
-def dtype_width(name: str) -> int:
+def dtype_width(name: str) -> float:
     """Byte width of a dtype fingerprint component (e.g. ``"bfloat16"``).
-    Unknown names fall back to the bit-count embedded in the name (so
-    ``float8_e4m3fn`` -> 1) and finally to 4 bytes."""
+    Sub-byte packed dtypes are fractional (``int4`` -> 0.5). Unknown names
+    fall back to the bit-count embedded in the name (so ``float8_e4m3fn``
+    -> 1) and finally to 4 bytes."""
     w = _WIDTHS.get(name)
     if w is not None:
         return w
@@ -146,15 +150,16 @@ class DtypeBytes:
     """Operand byte-widths one GEMM dispatch actually moves.
 
     ``a``/``b`` are the input widths (distinct, so mixed bf16-activation x
-    int8-weight ops model their real A/B traffic), ``out`` the C width, and
-    ``acc`` the accumulator width (f32 partials in every kernel here —
-    fix-up traffic and VMEM accumulators are ``acc``-wide regardless of the
-    input dtype)."""
+    int8-weight ops model their real A/B traffic; fractional for packed
+    sub-byte weights — int4 B moves 0.5 bytes/element), ``out`` the C
+    width, and ``acc`` the accumulator width (f32 partials in every kernel
+    here — fix-up traffic and VMEM accumulators are ``acc``-wide regardless
+    of the input dtype)."""
 
-    a: int = 2
-    b: int = 2
-    out: int = 2
-    acc: int = 4
+    a: float = 2
+    b: float = 2
+    out: float = 2
+    acc: float = 4
 
 
 #: module default: the paper's fp16 benchmark suite moves 2-byte operands;
@@ -162,16 +167,26 @@ class DtypeBytes:
 DEFAULT_DTYPES = DtypeBytes()
 
 
+#: floor for the inferred C width when the op fingerprint has no out_dtype:
+#: no kernel here stores integer-width outputs — the epilogue rescales the
+#: f32 accumulator and casts to a float dtype at least 2 bytes wide, so an
+#: int8*int8 op must not score a 1-byte C write.
+_MIN_STORE_WIDTH = 2
+
+
 def profile_for(in_dtype: str, out_dtype: Optional[str] = None) -> DtypeBytes:
     """DtypeBytes for a :class:`~repro.core.op.GemmOp`'s dtype fingerprints.
-    ``in_dtype`` may be the mixed ``"<a_dtype>*<b_dtype>"`` form."""
+    ``in_dtype`` may be the mixed ``"<a_dtype>*<b_dtype>"`` form. When the
+    op carries no out_dtype the C width is inferred from the inputs but
+    clamped to :data:`_MIN_STORE_WIDTH` — low-precision inputs shrink A/B
+    traffic, never the stored output."""
     if "*" in in_dtype:
         a_name, b_name = in_dtype.split("*", 1)
     else:
         a_name = b_name = in_dtype
     a = dtype_width(a_name)
     b = dtype_width(b_name)
-    out = dtype_width(out_dtype) if out_dtype else max(a, b)
+    out = dtype_width(out_dtype) if out_dtype else max(a, b, _MIN_STORE_WIDTH)
     return DtypeBytes(a=a, b=b, out=out)
 
 

@@ -46,7 +46,12 @@ import jax.numpy as jnp
 
 from repro.core.op import Epilogue, GemmOp, as_epilogue
 from repro.core.policies import Policy, TileConfig
-from repro.core.quant import QuantizedTensor, is_quantized
+from repro.core.quant import (
+    QuantizedTensor,
+    is_quantized,
+    quantize_activations,
+    unpack_int4,
+)
 from repro.core.selector import KernelSelector, Selection, default_selector
 from repro.core.tuner import LEGACY_GRID
 
@@ -57,7 +62,8 @@ _state = threading.local()
 # Backend registry
 # ---------------------------------------------------------------------------
 
-#: BackendFn(x, w, *, op, policy, cfg, g, bias, operand, scale) -> out
+#: BackendFn(x, w, *, op, policy, cfg, g, bias, operand, scale, scale_a,
+#:            b_bits) -> out
 #:   x: (G, M, K), w: (G, K, N), bias: (G, N) | None, operand: (G, M, N) | None
 #:   returns (G, M, N) in op.out_dtype. G == 1 for plain 2-D dispatches.
 #:   ``g`` is the selected grid size (persistent-workgroup count) the kernel
@@ -65,9 +71,15 @@ _state = threading.local()
 #:   concept (xla) may ignore it. ``scale``: (G, N) f32 — the
 #:   per-output-channel dequant vector of an int8-weight op (``w`` is then
 #:   the raw int8 values); backends must apply it to the f32 accumulator
-#:   BEFORE the op's epilogue stages (see ``QuantizedTensor``). The
-#:   dispatcher passes ``scale`` only for quantized ops, so backends that
-#:   predate it keep serving dense traffic and fail loudly on quantized.
+#:   BEFORE the op's epilogue stages (see ``QuantizedTensor``). ``scale_a``:
+#:   (G, M) f32 — the per-row activation dequant of an int8xint8 op (``x``
+#:   is then int8), applied alongside ``scale`` as the rank-1 rescale.
+#:   ``b_bits == 4``: ``w`` is int4-packed (G, ceil(K/2), N) — two nibbles
+#:   per byte along K — and the backend must unpack (or let its kernels
+#:   unpack per block). The dispatcher passes scale/scale_a/b_bits only for
+#:   quantized ops, so backends that predate them keep serving dense
+#:   traffic and fail loudly on quantized (unexpected kwarg) instead of
+#:   silently skipping a dequant stage.
 BackendFn = Callable[..., jax.Array]
 
 _BACKENDS: Dict[str, BackendFn] = {}
@@ -99,13 +111,33 @@ def get_backend(name: str) -> BackendFn:
         ) from None
 
 
-def _xla_backend(x, w, *, op: GemmOp, policy, cfg, g, bias, operand, scale=None):
-    if w.dtype != x.dtype and not jnp.issubdtype(w.dtype, jnp.floating):
-        # int8-weight op: contract in f32 (conversion from int8 is exact),
-        # mirroring the kernels' mixed_dot widening
-        x = x.astype(jnp.float32)
-        w = w.astype(jnp.float32)
-    acc = jnp.einsum("gmk,gkn->gmn", x, w, preferred_element_type=jnp.float32)
+def _xla_backend(
+    x, w, *, op: GemmOp, policy, cfg, g, bias, operand, scale=None,
+    scale_a=None, b_bits=8,
+):
+    if b_bits == 4:
+        # packed int4 weights: unpack to int8 and drop the odd-K pad row
+        w = unpack_int4(w)[:, : x.shape[2], :]
+    if jnp.issubdtype(x.dtype, jnp.integer) and jnp.issubdtype(
+        w.dtype, jnp.integer
+    ):
+        # int8 x int8 op: integer contraction (exact in int32 for the
+        # K <= ~130k these models dispatch), converted to f32 for the
+        # rank-1 rescale below — mirroring the kernels' integer mixed_dot
+        acc = jnp.einsum(
+            "gmk,gkn->gmn", x, w, preferred_element_type=jnp.int32
+        ).astype(jnp.float32)
+    else:
+        if w.dtype != x.dtype and not jnp.issubdtype(w.dtype, jnp.floating):
+            # int8-weight op: contract in f32 (conversion from int8 is
+            # exact), mirroring the kernels' mixed_dot widening
+            x = x.astype(jnp.float32)
+            w = w.astype(jnp.float32)
+        acc = jnp.einsum(
+            "gmk,gkn->gmn", x, w, preferred_element_type=jnp.float32
+        )
+    if scale_a is not None:
+        acc = acc * scale_a[:, :, None].astype(jnp.float32)
     if scale is not None:
         acc = acc * scale[:, None, :].astype(jnp.float32)
     acc = op.epilogue.apply(
@@ -117,7 +149,10 @@ def _xla_backend(x, w, *, op: GemmOp, policy, cfg, g, bias, operand, scale=None)
 
 
 def _make_pallas_backend(interpret: bool) -> BackendFn:
-    def backend(x, w, *, op: GemmOp, policy, cfg, g, bias, operand, scale=None):
+    def backend(
+        x, w, *, op: GemmOp, policy, cfg, g, bias, operand, scale=None,
+        scale_a=None, b_bits=8,
+    ):
         from repro.kernels.common import record_launch
         from repro.kernels.streamk import ops as sk_ops
         from repro.kernels.streamk.grouped import gemm_grouped_streamk
@@ -140,6 +175,8 @@ def _make_pallas_backend(interpret: bool) -> BackendFn:
                 bias=bias,
                 operand=operand,
                 scale=scale,
+                scale_a=scale_a,
+                b_bits=b_bits,
             )
 
         # Loop form: one pallas_call per group, so trace cost grows with G
@@ -165,6 +202,8 @@ def _make_pallas_backend(interpret: bool) -> BackendFn:
                     bias=None if bias is None else bias[i],
                     operand=None if operand is None else operand[i],
                     scale=None if scale is None else scale[i],
+                    scale_a=None if scale_a is None else scale_a[i],
+                    b_bits=b_bits,
                 )
             )
         return jnp.stack(outs)
@@ -270,6 +309,8 @@ def _dispatch(
     bias: Optional[jax.Array],
     operand: Optional[jax.Array],
     scale: Optional[jax.Array] = None,
+    scale_a: Optional[jax.Array] = None,
+    b_bits: int = 8,
 ) -> jax.Array:
     ctx = _ctx()
     if policy is None and cfg is None and g is None:
@@ -288,12 +329,16 @@ def _dispatch(
     backend = get_backend(ctx.backend)
     kwargs = dict(op=op, policy=policy, cfg=cfg, g=grid, bias=bias, operand=operand)
     if scale is not None:
-        # only quantized ops pass the dequant operand: backends registered
+        # only quantized ops pass the dequant operands: backends registered
         # against the pre-quantization BackendFn signature keep serving
         # dense traffic unchanged, and a quantized dispatch through one
         # fails loudly (unexpected 'scale') instead of silently skipping
         # the dequant stage
         kwargs["scale"] = scale
+    if scale_a is not None:
+        kwargs["scale_a"] = scale_a
+    if b_bits != 8:
+        kwargs["b_bits"] = b_bits
     return backend(x, w, **kwargs)
 
 
@@ -338,30 +383,47 @@ def gemm(
     ``policy``/``cfg``/``g`` override selection (used by the tuner itself);
     otherwise the selector chooses all three jointly.
 
-    ``w`` may be a :class:`~repro.core.quant.QuantizedTensor` (int8 values +
-    per-output-channel scales): the op then fingerprints with the mixed
-    ``"<x_dtype>*int8"`` in_dtype — tuning/pruning independently of the
-    dense op at the same MNK — and the scales ride into the kernel's
-    flush/fix-up as a fused dequant epilogue stage.
+    ``w`` may be a :class:`~repro.core.quant.QuantizedTensor`: the op then
+    fingerprints with the mixed ``"<x_dtype>*<w_dtype>"`` in_dtype — e.g.
+    ``"float32*int8"``, ``"float32*int4"`` (packed nibbles, unpacked in the
+    kernel prologues), or ``"int8*int8"`` when the weight requests dynamic
+    activation quantization (``act_bits=8``) — tuning/pruning independently
+    of the dense op at the same MNK. The weight scales (and, for int8
+    activations, the per-row activation scales computed here at dispatch
+    time) ride into the kernel's flush/fix-up as fused dequant epilogue
+    stages.
     """
     scale = None
+    scale_a = None
+    b_bits = 8
+    w_name = None
+    act_quant = False
+    w_shape = w.shape  # QuantizedTensor reports the LOGICAL (K, N)
     if is_quantized(w):
         scale = w.scales
+        b_bits = 4 if w.bits == 4 else 8
+        w_name = w.dtype_name
+        act_quant = w.act_bits == 8
         w = w.values
-    if x.shape[-1] != w.shape[0]:
-        raise ValueError(f"gemm contraction mismatch: {x.shape} @ {w.shape}")
+    if x.shape[-1] != w_shape[0]:
+        raise ValueError(f"gemm contraction mismatch: {x.shape} @ {w_shape}")
     epilogue = _infer_epilogue(epilogue, bias, operand)
     lead = x.shape[:-1]
     m_global = 1
     for d in lead:
         m_global *= int(d)
-    k_global, n_global = int(w.shape[0]), int(w.shape[1])
+    k_global, n_global = int(w_shape[0]), int(w_shape[1])
+    # capture out_dtype from the ORIGINAL activations — dynamic activation
+    # quantization must not leak int8 into the output dtype default
     out_dtype = jnp.dtype(out_dtype or x.dtype)
+    if act_quant and jnp.issubdtype(x.dtype, jnp.floating):
+        x, sa = quantize_activations(x)
+        scale_a = sa.reshape(1, m_global)
     op = GemmOp(
         m_global,
         n_global,
         k_global,
-        in_dtype=_in_dtype_fingerprint(x, w),
+        in_dtype=_in_dtype_fingerprint(x, w, w_name=w_name),
         out_dtype=str(out_dtype),
         divisors=tuple(divisors),
         epilogue=epilogue,
@@ -377,6 +439,8 @@ def gemm(
         bias=None if bias is None else bias.reshape(1, n_global),
         operand=None if operand is None else operand.reshape(1, m_global, n_global),
         scale=None if scale is None else scale.reshape(1, n_global),
+        scale_a=scale_a,
+        b_bits=b_bits,
     )
     return out.reshape(*lead, n_global)
 
@@ -399,27 +463,38 @@ def _gemm_stacked(
     fused: bool = False,
 ) -> jax.Array:
     scale = None
+    scale_a = None
+    b_bits = 8
+    w_name = None
+    act_quant = False
+    w_shape = w.shape  # QuantizedTensor reports the LOGICAL (G, K, N)
     if is_quantized(w):
         scale = w.scales
+        b_bits = 4 if w.bits == 4 else 8
+        w_name = w.dtype_name
+        act_quant = w.act_bits == 8
         w = w.values
-    if x.ndim != 3 or w.ndim != 3:
+    if x.ndim != 3 or len(w_shape) != 3:
         raise ValueError(
             f"gemm_{kind} expects x (G, M, K) and w (G, K, N); got "
-            f"{x.shape} @ {w.shape}"
+            f"{x.shape} @ {tuple(w_shape)}"
         )
-    if x.shape[0] != w.shape[0] or x.shape[2] != w.shape[1]:
-        raise ValueError(f"gemm_{kind} mismatch: {x.shape} @ {w.shape}")
+    if x.shape[0] != w_shape[0] or x.shape[2] != w_shape[1]:
+        raise ValueError(f"gemm_{kind} mismatch: {x.shape} @ {tuple(w_shape)}")
     epilogue = _infer_epilogue(epilogue, bias, operand)
     g, m, k = (int(d) for d in x.shape)
-    n = int(w.shape[2])
+    n = int(w_shape[2])
+    # capture out_dtype before any dynamic activation quantization
     out_dtype = jnp.dtype(out_dtype or x.dtype)
+    if act_quant and jnp.issubdtype(x.dtype, jnp.floating):
+        x, scale_a = quantize_activations(x)  # scales (G, M)
     op = GemmOp(
         m,
         n,
         k,
         g=g,
         kind=kind,
-        in_dtype=_in_dtype_fingerprint(x, w),
+        in_dtype=_in_dtype_fingerprint(x, w, w_name=w_name),
         out_dtype=str(out_dtype),
         divisors=tuple(divisors),
         g_divisor=g_divisor,
@@ -439,6 +514,8 @@ def _gemm_stacked(
         bias=bias,
         operand=operand,
         scale=scale,
+        scale_a=scale_a,
+        b_bits=b_bits,
     )
 
 
@@ -531,11 +608,20 @@ def gemm_batched(
     )
 
 
-def _in_dtype_fingerprint(x: jax.Array, w: jax.Array) -> str:
+def _in_dtype_fingerprint(
+    x: jax.Array, w: jax.Array, w_name: Optional[str] = None
+) -> str:
     """Input-dtype component of the op key. Mixed activation/weight dtypes
     (e.g. bf16 activations against int8 weights) select different kernels,
-    so they must not collide on one fingerprint."""
-    xd, wd = str(x.dtype), str(w.dtype)
+    so they must not collide on one fingerprint. Quantized weights pass
+    their logical ``w_name`` (``"int8"``/``"int4"`` — the stored dtype of a
+    packed int4 tensor is int8 bytes) and ALWAYS fingerprint in the mixed
+    ``"a*w"`` form: an ``"int8*int8"`` dynamic-quantization op must not
+    collide with a hypothetical plain int8 op's key."""
+    xd = str(x.dtype)
+    if w_name is not None:
+        return f"{xd}*{w_name}"
+    wd = str(w.dtype)
     return xd if xd == wd else f"{xd}*{wd}"
 
 

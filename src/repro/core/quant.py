@@ -1,4 +1,4 @@
-"""Quantized weight tensors for the int8-weight serving path.
+"""Quantized weight tensors for the low-precision serving ladder.
 
 The cost model has scored mixed activation x weight profiles (``"a*w"``
 dtype fingerprints) since the dtype-aware PR, but until now no kernel could
@@ -17,29 +17,53 @@ skinny-M decode regime) and applies ``s`` once per output tile at the
 DP-flush / Stream-K fix-up, composing in front of the existing
 bias/activation/binary epilogues.
 
+The ladder has three rungs below dense:
+
+* ``bits=8`` (PR 5): int8 weights, float activations — ``"<act>*int8"``
+  fingerprints.
+* ``bits=8, act_bits=8``: int8 weights AND dynamically quantized int8
+  activations (symmetric per-row scales, computed at dispatch time by
+  :func:`quantize_activations`). The kernels accumulate int8 x int8 on the
+  MXU in int32 and apply the rank-1 rescale ``s_a (x) s_b`` on the f32
+  accumulator at the flush — ``"int8*int8"`` fingerprints, halving A
+  traffic too.
+* ``bits=4``: weights packed two nibbles per byte along K
+  (:func:`pack_int4` / :func:`unpack_int4`); the kernels unpack each
+  ``(bk/2, bn)`` packed block to int8 in the prologue, so B moves 0.5
+  bytes/element through HBM — ``"<act>*int4"`` fingerprints.
+
 Layout contract: weights are stored ``(..., K, N)`` — contraction axis
 second-to-last — matching every projection in ``repro.models`` (attention
 ``(d, h*dh)``, MLP ``(d, f)``/``(f, d)``, stacked MoE experts ``(E, d, f)``
 and scan-stacked ``(L, ..., K, N)``). Scales drop exactly the K axis:
-``scales.shape == values.shape[:-2] + values.shape[-1:]``.
+``scales.shape == values.shape[:-2] + values.shape[-1:]`` (for ``bits=4``
+the stored K axis is the packed ``ceil(K/2)``; :attr:`QuantizedTensor.shape`
+reports the logical K).
 
 ``QuantizedTensor`` is a registered JAX pytree whose leading axes slice
-consistently across both leaves, so scan-stacked layer parameters, pytree
-donation, and ``jax.tree.map``-based cache/parameter surgery all work
-unchanged — a quantized weight leaf is a drop-in replacement for the dense
-array anywhere it feeds :func:`repro.core.gemm.gemm`.
+consistently across both leaves (``bits``/``act_bits``/logical K travel as
+static aux data), so scan-stacked layer parameters, pytree donation, and
+``jax.tree.map``-based cache/parameter surgery all work unchanged — a
+quantized weight leaf is a drop-in replacement for the dense array anywhere
+it feeds :func:`repro.core.gemm.gemm`.
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+import logging
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+log = logging.getLogger(__name__)
+
 #: int8 symmetric range: +-127 (the -128 code is unused so the range is
 #: symmetric and negation is exact).
 _QMAX = 127.0
+
+#: int4 symmetric range: +-7 (the -8 nibble is unused, mirroring int8).
+_QMAX4 = 7.0
 
 #: parameter-tree keys :func:`quantize_lm_params` converts: the dense
 #: projection weights every ``repro.models`` architecture routes through
@@ -51,14 +75,68 @@ QUANT_WEIGHT_NAMES = frozenset(
 )
 
 
+# ---------------------------------------------------------------------------
+# int4 nibble packing (two values per byte along K)
+# ---------------------------------------------------------------------------
+
+
+def pack_int4(q: jax.Array) -> jax.Array:
+    """Pack an int8 array of int4-range values ``(..., K, N)`` into
+    ``(..., ceil(K/2), N)`` bytes: even-k values in the low nibble, odd-k in
+    the high nibble. Odd K zero-pads one trailing k row (exact for GEMM)."""
+    if q.ndim < 2:
+        raise ValueError(f"pack_int4 expects (..., K, N), got shape {q.shape}")
+    k = q.shape[-2]
+    if k % 2:
+        pads = [(0, 0)] * (q.ndim - 2) + [(0, 1), (0, 0)]
+        q = jnp.pad(q, pads)
+    lo = q[..., 0::2, :].astype(jnp.int32) & 0xF
+    hi = (q[..., 1::2, :].astype(jnp.int32) & 0xF) << 4
+    # (lo | hi) spans 0..255; the int8 cast truncates to the raw byte.
+    return (lo | hi).astype(jnp.int8)
+
+
+def unpack_int4(p: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_int4`: ``(..., K2, N)`` packed bytes ->
+    ``(..., 2*K2, N)`` int8 values in [-8, 7]. Pure jnp (shift + interleave),
+    so the same function runs on the host AND inside the kernel prologues —
+    one definition of the nibble layout everywhere."""
+    p32 = p.astype(jnp.int32)
+    lo = (p32 << 28) >> 28  # arithmetic shifts sign-extend each nibble
+    hi = (p32 << 24) >> 28
+    stacked = jnp.stack([lo, hi], axis=-2)  # (..., K2, 2, N)
+    k2, n = p.shape[-2], p.shape[-1]
+    out = stacked.reshape(*p.shape[:-2], 2 * k2, n)
+    return out.astype(jnp.int8)
+
+
 @jax.tree_util.register_pytree_node_class
 class QuantizedTensor:
-    """Symmetric per-output-channel int8 weight: ``values`` (..., K, N) int8
-    + ``scales`` (..., N) f32. ``dequantize()`` reconstructs the dense
-    weight; the GEMM kernels never do — they fuse the scale into their
-    flush/fix-up epilogue instead."""
+    """Symmetric per-output-channel quantized weight.
 
-    def __init__(self, values: jax.Array, scales: jax.Array):
+    ``bits=8``: ``values`` (..., K, N) int8 + ``scales`` (..., N) f32.
+    ``bits=4``: ``values`` (..., ceil(K/2), N) int8 — two nibbles per byte
+    along K (see :func:`pack_int4`) — with the logical contraction length
+    carried as static ``k``. ``act_bits=8`` requests dynamic per-row int8
+    activation quantization at dispatch time (the int8 x int8 MXU rung).
+
+    ``dequantize()`` reconstructs the dense weight; the GEMM kernels never
+    do — they unpack packed nibbles in the prologue and fuse the scale into
+    their flush/fix-up epilogue instead."""
+
+    def __init__(
+        self,
+        values: jax.Array,
+        scales: jax.Array,
+        *,
+        bits: int = 8,
+        act_bits: Optional[int] = None,
+        k: Optional[int] = None,
+    ):
+        if bits not in (8, 4):
+            raise ValueError(f"QuantizedTensor supports bits in (8, 4), got {bits}")
+        if act_bits not in (None, 8):
+            raise ValueError(f"act_bits must be None or 8, got {act_bits}")
         values_shape = jnp.shape(values)
         scales_shape = jnp.shape(scales)
         if len(values_shape) < 2:
@@ -66,6 +144,19 @@ class QuantizedTensor:
                 f"QuantizedTensor values must be at least 2-D (..., K, N); "
                 f"got shape {values_shape}"
             )
+        if bits == 4:
+            if k is None:
+                raise ValueError(
+                    "bits=4 stores the packed ceil(K/2) axis; pass the "
+                    "logical contraction length k="
+                )
+            if (k + 1) // 2 != values_shape[-2]:
+                raise ValueError(
+                    f"packed values K axis {values_shape[-2]} does not match "
+                    f"ceil(k/2) for logical k={k}"
+                )
+        else:
+            k = int(values_shape[-2])
         want = values_shape[:-2] + values_shape[-1:]
         if tuple(scales_shape) != tuple(want):
             raise ValueError(
@@ -75,11 +166,14 @@ class QuantizedTensor:
             )
         self.values = values
         self.scales = scales
+        self.bits = int(bits)
+        self.act_bits = act_bits
+        self.k = int(k)
 
     # -- pytree protocol ---------------------------------------------------
     def tree_flatten(self):
-        """Pytree leaves: (values, scales); no static aux data."""
-        return (self.values, self.scales), None
+        """Pytree leaves: (values, scales); (bits, act_bits, k) are static."""
+        return (self.values, self.scales), (self.bits, self.act_bits, self.k)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -91,36 +185,54 @@ class QuantizedTensor:
         obj = cls.__new__(cls)
         obj.values = values
         obj.scales = scales
+        if aux is None:  # trees flattened by pre-int4 producers
+            aux = (8, None, None)
+        obj.bits, obj.act_bits, obj.k = aux
         return obj
 
     # -- array-like surface (what gemm/model plumbing touches) -------------
     @property
     def shape(self) -> Tuple[int, ...]:
-        """Shape of the int8 values (what GEMM plumbing sizes against)."""
-        return tuple(self.values.shape)
+        """LOGICAL weight shape (..., K, N) — for ``bits=4`` the stored
+        values axis is the packed ``ceil(K/2)``, but GEMM plumbing sizes
+        against the contraction length the kernels actually reduce over."""
+        vs = tuple(self.values.shape)
+        if self.bits == 4:
+            return vs[:-2] + (self.k, vs[-1])
+        return vs
 
     @property
     def ndim(self) -> int:
-        """Rank of the int8 values."""
+        """Rank of the values (leading axes are shared with scales)."""
         return self.values.ndim
 
     @property
     def dtype(self):
-        """Storage dtype of the values (int8) — NOT the compute dtype."""
+        """Storage dtype of the values (int8 bytes) — NOT the compute dtype."""
         return self.values.dtype
+
+    @property
+    def dtype_name(self) -> str:
+        """Fingerprint dtype component: ``"int4"`` for packed nibbles, else
+        the storage dtype name (``"int8"``)."""
+        return "int4" if self.bits == 4 else str(self.values.dtype)
 
     def __repr__(self) -> str:
         return (
             f"QuantizedTensor(values={self.values.shape}:{self.values.dtype}, "
-            f"scales={self.scales.shape})"
+            f"scales={self.scales.shape}, bits={self.bits}"
+            + (f", act_bits={self.act_bits}" if self.act_bits else "")
+            + ")"
         )
 
     def dequantize(self, dtype=jnp.float32) -> jax.Array:
         """Dense reconstruction ``V * s`` — the reference the differential
-        numerics harness compares the fused kernels against."""
-        w = self.values.astype(jnp.float32) * self.scales[..., None, :].astype(
-            jnp.float32
-        )
+        numerics harness compares the fused kernels against. ``bits=4``
+        unpacks the nibbles and drops the zero-pad row of an odd K."""
+        v = self.values
+        if self.bits == 4:
+            v = unpack_int4(v)[..., : self.k, :]
+        w = v.astype(jnp.float32) * self.scales[..., None, :].astype(jnp.float32)
         return w.astype(dtype)
 
 
@@ -129,14 +241,22 @@ def is_quantized(x: Any) -> bool:
     return isinstance(x, QuantizedTensor)
 
 
-def quantize_weight(w: jax.Array, *, axis: int = -2) -> QuantizedTensor:
-    """Symmetric per-output-channel int8 quantization of a (..., K, N)
-    weight; ``axis`` is the contraction axis the scale reduces over.
+def quantize_weight(
+    w: jax.Array,
+    *,
+    axis: int = -2,
+    bits: int = 8,
+    act_bits: Optional[int] = None,
+) -> QuantizedTensor:
+    """Symmetric per-output-channel quantization of a (..., K, N) weight;
+    ``axis`` is the contraction axis the scale reduces over.
 
     Round-to-nearest: the worst-case elementwise reconstruction error is
-    ``scale / 2`` where ``scale = amax / 127`` per output channel — the
-    bound the property tests assert and the differential tolerances build
-    on."""
+    ``scale / 2`` where ``scale = amax / qmax`` per output channel
+    (``qmax`` 127 for int8, 7 for int4) — the bound the property tests
+    assert and the differential tolerances build on. ``bits=4`` packs two
+    nibbles per byte along K; ``act_bits=8`` marks the weight for dynamic
+    int8 activation quantization at dispatch time."""
     if w.ndim < 2:
         raise ValueError(f"quantize_weight expects a matrix, got shape {w.shape}")
     axis = axis % w.ndim
@@ -145,45 +265,89 @@ def quantize_weight(w: jax.Array, *, axis: int = -2) -> QuantizedTensor:
             f"contraction axis must be -2 in the (..., K, N) layout; got "
             f"axis {axis} for shape {w.shape}"
         )
+    qmax = _QMAX if bits == 8 else _QMAX4
     wf = w.astype(jnp.float32)
     amax = jnp.max(jnp.abs(wf), axis=axis)
+    scales = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(wf / scales[..., None, :]), -qmax, qmax).astype(
+        jnp.int8
+    )
+    if bits == 4:
+        return QuantizedTensor(
+            pack_int4(q), scales, bits=4, act_bits=act_bits, k=int(w.shape[-2])
+        )
+    return QuantizedTensor(q, scales, bits=8, act_bits=act_bits)
+
+
+def quantize_activations(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Dynamic symmetric per-row int8 activation quantization.
+
+    ``x`` (..., K) float -> (int8 values of the same shape, f32 scales
+    (...,)). The scale is per M row (``amax / 127`` over the contraction
+    axis), so the GEMM rescale is the rank-1 outer product ``s_a (x) s_b``
+    applied to the f32 accumulator at the flush. Runs at dispatch/trace
+    time — a handful of VPU elementwise ops, paid back by halving A's HBM
+    traffic and running the MAC on the int8 MXU path."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
     scales = jnp.maximum(amax, 1e-8) / _QMAX
-    q = jnp.clip(
-        jnp.round(wf / scales[..., None, :]), -_QMAX, _QMAX
-    ).astype(jnp.int8)
-    return QuantizedTensor(q, scales)
+    q = jnp.clip(jnp.round(xf / scales[..., None]), -_QMAX, _QMAX).astype(
+        jnp.int8
+    )
+    return q, scales
 
 
 def quantize_lm_params(
-    params: Dict[str, Any], names: frozenset = QUANT_WEIGHT_NAMES
-) -> Tuple[Dict[str, Any], int]:
+    params: Dict[str, Any],
+    names: frozenset = QUANT_WEIGHT_NAMES,
+    *,
+    bits: int = 8,
+    act_bits: Optional[int] = None,
+) -> Tuple[Dict[str, Any], int, int]:
     """One-shot weight quantization at model load (the serve CLI's
-    ``--quantize int8``): every dense float leaf under a key in ``names``
-    becomes a :class:`QuantizedTensor`; everything else is untouched.
-    Returns (new tree, number of leaves quantized). Scan-stacked leaves
-    ``(L, ..., K, N)`` quantize per layer per output channel — the leading
-    axes ride along in the scale shape, so ``lax.scan`` slices both leaves
-    coherently."""
-    n_quantized = 0
+    ``--quantize {int8,int8-dynamic,int4}``): every dense float leaf under a
+    key in ``names`` becomes a :class:`QuantizedTensor`; everything else is
+    untouched. Returns (new tree, leaves quantized, float leaves SKIPPED
+    under a matching key). Scan-stacked leaves ``(L, ..., K, N)`` quantize
+    per layer per output channel — the leading axes ride along in the scale
+    shape, so ``lax.scan`` slices both leaves coherently.
 
-    def walk(node):
-        nonlocal n_quantized
+    The walk recurses dicts AND sequences (list/tuple-nested parameter
+    subtrees — e.g. per-layer lists — previously fell through untouched and
+    were silently served dense). A float leaf that sits under a matching key
+    but is not an eligible projection (ndim < 2) counts as skipped and is
+    logged, so partial quantization is loud instead of silent."""
+    n_quantized = 0
+    n_skipped = 0
+
+    def _is_float(leaf) -> bool:
+        return hasattr(leaf, "dtype") and jnp.issubdtype(
+            jnp.asarray(leaf).dtype, jnp.floating
+        )
+
+    def walk(node, named: bool = False):
+        nonlocal n_quantized, n_skipped
         if isinstance(node, dict):
-            out = {}
-            for key, sub in node.items():
-                if (
-                    key in names
-                    and not isinstance(sub, dict)
-                    and not is_quantized(sub)
-                    and hasattr(sub, "ndim")
-                    and sub.ndim >= 2
-                    and jnp.issubdtype(jnp.asarray(sub).dtype, jnp.floating)
-                ):
-                    out[key] = quantize_weight(sub)
-                    n_quantized += 1
-                else:
-                    out[key] = walk(sub)
-            return out
+            return {key: walk(sub, named=key in names) for key, sub in node.items()}
+        if isinstance(node, (list, tuple)):
+            walked = [walk(item, named=named) for item in node]
+            if isinstance(node, tuple) and hasattr(node, "_fields"):
+                return type(node)(*walked)  # namedtuple
+            return type(node)(walked)
+        if named and not is_quantized(node):
+            if hasattr(node, "ndim") and node.ndim >= 2 and _is_float(node):
+                n_quantized += 1
+                return quantize_weight(node, bits=bits, act_bits=act_bits)
+            if _is_float(node):
+                n_skipped += 1
         return node
 
-    return walk(params), n_quantized
+    out = walk(params)
+    if n_skipped:
+        log.warning(
+            "quantize_lm_params skipped %d float leaf/leaves under "
+            "quantizable keys (not eligible (..., K, N) projections) — "
+            "they will be served dense",
+            n_skipped,
+        )
+    return out, n_quantized, n_skipped

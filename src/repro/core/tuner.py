@@ -707,7 +707,7 @@ def measure_wallclock(
         8: jnp.float64,
     }
 
-    def _dt_dtype(width: int):
+    def _dt_dtype(width):
         if width == 8 and not jax.config.jax_enable_x64:
             # without x64, f64 operands silently downcast to f32 — measure
             # what will actually run and say so, instead of recording an
@@ -716,6 +716,17 @@ def measure_wallclock(
                 "jax x64 disabled: measuring 8-byte fingerprint at float32"
             )
             return jnp.float32
+        if width < 1:
+            # sub-byte packed fingerprints (int4 at 0.5 bytes/element): no
+            # jnp array dtype moves half bytes, so the measurement times the
+            # int8 stand-in — an upper bound on the packed kernel's B
+            # traffic; honest on compute, conservative on bandwidth
+            log.warning(
+                "measuring sub-byte (%.1f-byte) fingerprint with int8 "
+                "operands — timings upper-bound the packed kernel",
+                width,
+            )
+            return jnp.int8
         if width == 1:
             # byte-wide fingerprints (int8, fp8 variants) all time the int8
             # stand-in; fp8 records therefore reflect int8 kernel timing

@@ -78,7 +78,7 @@ import jax
 from repro.core.op import Epilogue, as_epilogue
 
 
-def apply_epilogue(acc, epilogue, bias=None, operand=None, scale=None):
+def apply_epilogue(acc, epilogue, bias=None, operand=None, scale=None, scale_a=None):
     """Epilogue applied to the f32 accumulator before the final cast/store —
     the Composable-Kernel-style fusion the paper's library is built from (CK
     composes GEMM + epilogue functors; ours compose the same way on the
@@ -92,9 +92,13 @@ def apply_epilogue(acc, epilogue, bias=None, operand=None, scale=None):
     multiplies the raw accumulator FIRST — restoring the real-valued
     product ``(A @ V) * s == A @ (V * s)`` — so bias/activation/binary
     stages compose on dequantized values exactly as they do for dense
-    weights.
+    weights. ``scale_a`` is the per-M-row activation dequant column vector
+    of an int8xint8 op: applied alongside ``scale`` it forms the rank-1
+    rescale ``s_a (x) s_b`` on the raw integer-accumulated product.
     """
     spec: Epilogue = as_epilogue(epilogue)
+    if scale_a is not None:
+        acc = acc * scale_a.astype(jnp.float32)
     if scale is not None:
         acc = acc * scale.astype(jnp.float32)
     return spec.apply(acc, bias=bias, operand=operand)
@@ -109,15 +113,37 @@ def prep_scale(scale, n, bn):
     return pad_to(scale.reshape(1, n).astype(jnp.float32), (1, bn))
 
 
+def prep_scale_a(scale_a, m, bm):
+    """Per-M-row activation dequant vector -> the padded (Mp, 1) f32 column
+    the flush/fix-up kernels block-slice as ``(bm, 1)`` tiles (the rank-1
+    partner of :func:`prep_scale`'s row). ``scale_a``: (M,) or (M, 1)."""
+    if scale_a is None:
+        return None
+    return pad_to(scale_a.reshape(m, 1).astype(jnp.float32), (bm, 1))
+
+
 def mixed_dot(a_blk, b_blk):
     """One k-iteration MAC handling mixed activation x weight dtypes.
 
-    Same-dtype blocks keep the legacy MXU path (bf16 x bf16 / f32 x f32,
-    f32 accumulation) bit-for-bit. Mixed blocks — f32/bf16 activations
-    against int8 weight tiles — widen both operands to f32 in VMEM before
-    the dot: the int8 tile already paid its 1-byte HBM fare (the point of
-    weight quantization), and int8 -> f32 conversion is exact, so the MAC
-    is numerically the dense f32 MAC on dequant-without-scale values."""
+    Same-dtype float blocks keep the legacy MXU path (bf16 x bf16 /
+    f32 x f32, f32 accumulation) bit-for-bit. Both-integer blocks — int8
+    activations against int8 weights — accumulate on the integer MXU path
+    (``preferred_element_type=int32``) and convert the k-step partial to
+    f32: each partial is bounded by ``bk * 127^2`` (<= 16.5M for the
+    largest bk=1024 tile), well under both int32 range and f32's 2^24
+    exact-integer window, so the conversion is exact and the f32
+    accumulator chain stays identical to the float families'. Mixed blocks
+    — f32/bf16 activations against int8 weight tiles — widen both operands
+    to f32 in VMEM before the dot: the int8 tile already paid its 1-byte
+    HBM fare (the point of weight quantization), and int8 -> f32
+    conversion is exact, so the MAC is numerically the dense f32 MAC on
+    dequant-without-scale values."""
+    if jnp.issubdtype(a_blk.dtype, jnp.integer) and jnp.issubdtype(
+        b_blk.dtype, jnp.integer
+    ):
+        return jnp.dot(a_blk, b_blk, preferred_element_type=jnp.int32).astype(
+            jnp.float32
+        )
     if a_blk.dtype != b_blk.dtype:
         a_blk = a_blk.astype(jnp.float32)
         b_blk = b_blk.astype(jnp.float32)

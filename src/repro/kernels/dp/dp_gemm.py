@@ -28,6 +28,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.policies import TileConfig
 from repro.core.workpart import cdiv
+from repro.core.quant import unpack_int4
 from repro.kernels.common import (
     CompilerParams,
     apply_epilogue,
@@ -43,16 +44,23 @@ def _dp_kernel(
     ipt: int,
     epilogue="none",
     has_scale: bool = False,
+    has_scale_a: bool = False,
     has_bias: bool = False,
     has_operand: bool = False,
+    b_bits: int = 8,
 ):
-    """rest = [scale_ref?, bias_ref?, operand_ref?, c_in_ref?] + (c_ref, acc_ref).
+    """rest = [scale_ref?, scale_a_ref?, bias_ref?, operand_ref?, c_in_ref?]
+    + (c_ref, acc_ref).
 
-    ``c_in_ref`` (the aliased C input under ``tile_offset > 0``) is never
-    read — aliasing alone preserves unvisited tiles."""
+    ``b_bits == 4``: the B block arrives packed ``(bk/2, bn)`` (two int4
+    nibbles per byte along K) and is unpacked to int8 in the prologue —
+    the unpack lives in VMEM, so HBM still only moved half a byte per
+    element. ``c_in_ref`` (the aliased C input under ``tile_offset > 0``)
+    is never read — aliasing alone preserves unvisited tiles."""
     c_ref, acc_ref = rest[-2], rest[-1]
     extras = list(rest[:-2])
     scale_ref = extras.pop(0) if has_scale else None
+    scale_a_ref = extras.pop(0) if has_scale_a else None
     bias_ref = extras.pop(0) if has_bias else None
     operand_ref = extras.pop(0) if has_operand else None
 
@@ -62,7 +70,10 @@ def _dp_kernel(
     def _init():
         acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
 
-    acc_ref[...] += mixed_dot(a_ref[...], b_ref[...])
+    b_blk = b_ref[...]
+    if b_bits == 4:
+        b_blk = unpack_int4(b_blk)
+    acc_ref[...] += mixed_dot(a_ref[...], b_blk)
 
     @pl.when(k == ipt - 1)
     def _flush():
@@ -72,6 +83,7 @@ def _dp_kernel(
             bias=None if bias_ref is None else bias_ref[...],
             operand=None if operand_ref is None else operand_ref[...],
             scale=None if scale_ref is None else scale_ref[...],
+            scale_a=None if scale_a_ref is None else scale_a_ref[...],
         )
         c_ref[...] = out.astype(c_ref.dtype)
 
@@ -89,14 +101,19 @@ def dp_gemm_region(
     bias=None,
     operand=None,
     scale=None,
+    scale_a=None,
+    b_bits: int = 8,
     g: int = 0,
 ):
     """Tiled GEMM over output tiles [tile_offset, m_tiles*n_tiles).
 
     a: (Mp, Kp), b: (Kp, Np) — already padded to tile multiples; so are the
-    optional epilogue operands ``bias`` (1, Np), ``operand`` (Mp, Np) and
-    the int8-weight dequant row vector ``scale`` (1, Np), applied to the
-    accumulator at the flush before the other epilogue stages.
+    optional epilogue operands ``bias`` (1, Np), ``operand`` (Mp, Np), the
+    int8-weight dequant row vector ``scale`` (1, Np) and the int8-activation
+    dequant column vector ``scale_a`` (Mp, 1), applied to the accumulator at
+    the flush before the other epilogue stages. ``b_bits == 4``: ``b`` is
+    int4-packed ``(Kp/2, Np)`` — two nibbles per byte along K, padded to
+    ``bk/2`` multiples — and each block is unpacked in the kernel prologue.
     ``c_init``: existing C buffer whose tiles < tile_offset must be kept
     (required iff tile_offset > 0).
 
@@ -118,7 +135,8 @@ def dp_gemm_region(
     """
     mp, kp = a.shape
     kp2, np_ = b.shape
-    assert kp == kp2, (a.shape, b.shape)
+    bk_b = cfg.bk // 2 if b_bits == 4 else cfg.bk
+    assert kp2 == (kp // 2 if b_bits == 4 else kp), (a.shape, b.shape, b_bits)
     m_tiles, n_tiles = mp // cfg.bm, np_ // cfg.bn
     ipt = kp // cfg.bk
     n_total = m_tiles * n_tiles
@@ -136,7 +154,9 @@ def dp_gemm_region(
         return (i + tile_offset) % n_tiles
 
     a_spec = pl.BlockSpec((cfg.bm, cfg.bk), lambda i, k: (tm(i), k))
-    b_spec = pl.BlockSpec((cfg.bk, cfg.bn), lambda i, k: (k, tn(i)))
+    # packed-int4 B keeps the SAME k-block index map: ceil(ceil(K/2)/(bk/2))
+    # == ceil(K/bk) for even bk, so packed block k covers logical k-block k.
+    b_spec = pl.BlockSpec((bk_b, cfg.bn), lambda i, k: (k, tn(i)))
     c_spec = pl.BlockSpec((cfg.bm, cfg.bn), lambda i, k: (tm(i), tn(i)))
     scratch = [pltpu.VMEM((cfg.bm, cfg.bn), jnp.float32)]
     # A padded grid clamps its surplus programs onto the final tile, so the
@@ -153,6 +173,9 @@ def dp_gemm_region(
     if scale is not None:
         operands.append(scale)
         in_specs.append(pl.BlockSpec((1, cfg.bn), lambda i, k: (0, tn(i))))
+    if scale_a is not None:
+        operands.append(scale_a)
+        in_specs.append(pl.BlockSpec((cfg.bm, 1), lambda i, k: (tm(i), 0)))
     if bias is not None:
         operands.append(bias)
         in_specs.append(pl.BlockSpec((1, cfg.bn), lambda i, k: (0, tn(i))))
@@ -164,8 +187,10 @@ def dp_gemm_region(
         ipt=ipt,
         epilogue=epilogue,
         has_scale=scale is not None,
+        has_scale_a=scale_a is not None,
         has_bias=bias is not None,
         has_operand=operand is not None,
+        b_bits=b_bits,
     )
 
     record_launch(f"dp_gemm_{cfg.name}")

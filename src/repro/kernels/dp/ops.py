@@ -7,11 +7,13 @@ import functools
 import jax
 
 from repro.core.policies import TileConfig
-from repro.kernels.common import pad_to, prep_scale, unpad
+from repro.kernels.common import pad_to, prep_scale, prep_scale_a, unpad
 from repro.kernels.dp.dp_gemm import dp_gemm_region
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "g", "interpret", "out_dtype"))
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "g", "interpret", "out_dtype", "b_bits")
+)
 def gemm(
     a: jax.Array,
     b: jax.Array,
@@ -21,21 +23,41 @@ def gemm(
     interpret: bool = False,
     out_dtype=None,
     scale: jax.Array = None,
+    scale_a: jax.Array = None,
+    b_bits: int = 8,
 ) -> jax.Array:
     """``a @ b`` with the conventional output-tile decomposition.
 
     ``g`` > 0 launches whole waves of ``g`` programs (the tuned grid size);
     0 keeps the legacy one-program-per-tile grid. ``scale`` (N,) fuses an
-    int8-weight op's per-output-channel dequant into the tile flush."""
-    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+    int8-weight op's per-output-channel dequant into the tile flush;
+    ``scale_a`` (M,) its int8-activation per-row partner (the rank-1
+    rescale of an int8xint8 op). ``b_bits == 4``: ``b`` is int4-packed
+    (ceil(K/2), N) — K is taken from ``a`` and each kernel prologue unpacks
+    its block."""
+    if a.ndim != 2 or b.ndim != 2:
         raise ValueError(f"bad gemm operands {a.shape} @ {b.shape}")
+    k_rows = (a.shape[1] + 1) // 2 if b_bits == 4 else a.shape[1]
+    if b.shape[0] != k_rows:
+        raise ValueError(
+            f"bad gemm operands {a.shape} @ {b.shape} (b_bits={b_bits})"
+        )
     m, _ = a.shape
     _, n = b.shape
     out_dtype = out_dtype or a.dtype
     ap = pad_to(a, (cfg.bm, cfg.bk))
-    bp = pad_to(b, (cfg.bk, cfg.bn))
+    bp = pad_to(b, (cfg.bk // 2 if b_bits == 4 else cfg.bk, cfg.bn))
     scalep = prep_scale(scale, n, cfg.bn)
+    scale_ap = prep_scale_a(scale_a, m, cfg.bm)
     cp = dp_gemm_region(
-        ap, bp, cfg, out_dtype=out_dtype, interpret=interpret, g=g, scale=scalep
+        ap,
+        bp,
+        cfg,
+        out_dtype=out_dtype,
+        interpret=interpret,
+        g=g,
+        scale=scalep,
+        scale_a=scale_ap,
+        b_bits=b_bits,
     )
     return unpad(cp, (m, n))

@@ -9,12 +9,12 @@ import jax.numpy as jnp
 
 from repro.core.policies import TileConfig
 from repro.core.workpart import cdiv
-from repro.kernels.common import pad_to, prep_scale, unpad
+from repro.kernels.common import pad_to, prep_scale, prep_scale_a, unpad
 from repro.kernels.splitk.splitk_gemm import splitk_partials
 
 
 @functools.partial(
-    jax.jit, static_argnames=("cfg", "s", "g", "interpret", "out_dtype")
+    jax.jit, static_argnames=("cfg", "s", "g", "interpret", "out_dtype", "b_bits")
 )
 def gemm(
     a: jax.Array,
@@ -26,24 +26,37 @@ def gemm(
     interpret: bool = False,
     out_dtype=None,
     scale: jax.Array = None,
+    scale_a: jax.Array = None,
+    b_bits: int = 8,
 ) -> jax.Array:
     """``a @ b`` with a fixed split-K factor ``s``. ``g`` > 0 launches the
     tile dimension in whole waves of ``g`` programs (the tuned grid size).
-    ``scale`` (N,) is an int8-weight op's per-output-channel dequant vector;
-    split-K's epilogue IS the partial-sum reduction, so the scale applies
-    there — once, after the splits combine (linearity makes per-split
-    scaling equivalent but ``s`` times the multiplies)."""
-    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+    ``scale`` (N,) is an int8-weight op's per-output-channel dequant vector
+    and ``scale_a`` (M,) its int8-activation per-row partner; split-K's
+    epilogue IS the partial-sum reduction, so both apply there — once,
+    after the splits combine (linearity makes per-split scaling equivalent
+    but ``s`` times the multiplies). ``b_bits == 4``: ``b`` is int4-packed
+    (ceil(K/2), N); K comes from ``a`` and each kernel block is unpacked in
+    the prologue."""
+    if a.ndim != 2 or b.ndim != 2:
         raise ValueError(f"bad gemm operands {a.shape} @ {b.shape}")
+    k_rows = (a.shape[1] + 1) // 2 if b_bits == 4 else a.shape[1]
+    if b.shape[0] != k_rows:
+        raise ValueError(
+            f"bad gemm operands {a.shape} @ {b.shape} (b_bits={b_bits})"
+        )
     m, k = a.shape
     _, n = b.shape
     out_dtype = out_dtype or a.dtype
     # pad K so that the k-iteration count divides s
     k_unit = cfg.bk * s
     ap = pad_to(a, (cfg.bm, k_unit))
-    bp = pad_to(b, (k_unit, cfg.bn))
-    parts = splitk_partials(ap, bp, cfg, s, interpret=interpret, g=g)
+    bp = pad_to(b, (k_unit // 2 if b_bits == 4 else k_unit, cfg.bn))
+    parts = splitk_partials(ap, bp, cfg, s, interpret=interpret, g=g, b_bits=b_bits)
     cp = jnp.sum(parts, axis=0)
+    scale_ap = prep_scale_a(scale_a, m, cfg.bm)
+    if scale_ap is not None:
+        cp = cp * scale_ap
     scalep = prep_scale(scale, n, cfg.bn)
     if scalep is not None:
         cp = cp * scalep

@@ -20,18 +20,23 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.policies import TileConfig
+from repro.core.quant import unpack_int4
 from repro.core.workpart import cdiv
 from repro.kernels.common import CompilerParams, mixed_dot, record_launch
 
 
-def _splitk_kernel(a_ref, b_ref, p_ref, acc_ref, *, kps: int):
+def _splitk_kernel(a_ref, b_ref, p_ref, acc_ref, *, kps: int, b_bits: int = 8):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
 
-    acc_ref[...] += mixed_dot(a_ref[...], b_ref[...])
+    b_blk = b_ref[...]
+    if b_bits == 4:
+        # packed (bk/2, bn) int4 block -> (bk, bn) int8 in the prologue
+        b_blk = unpack_int4(b_blk)
+    acc_ref[...] += mixed_dot(a_ref[...], b_blk)
 
     @pl.when(k == kps - 1)
     def _flush():
@@ -39,17 +44,28 @@ def _splitk_kernel(a_ref, b_ref, p_ref, acc_ref, *, kps: int):
 
 
 def splitk_partials(
-    a, b, cfg: TileConfig, s: int, *, interpret: bool = False, g: int = 0
+    a,
+    b,
+    cfg: TileConfig,
+    s: int,
+    *,
+    interpret: bool = False,
+    g: int = 0,
+    b_bits: int = 8,
 ):
     """Returns partials (s, Mp, Np) f32; caller reduces over axis 0.
 
     a, b already padded; K must split into s * k_per_split * bk.
+    ``b_bits == 4``: ``b`` is int4-packed (Kp/2, Np) and each block is
+    unpacked in the kernel prologue (same k-block index map — the packed
+    block count equals the logical one for even bk).
     ``g`` > 0 pads the tile dimension up to whole waves of ``g`` programs
     (surplus programs redundantly recompute the last tile — deterministic,
     same value); 0 keeps the exact legacy one-program-per-tile grid.
     """
     mp, kp = a.shape
     _, np_ = b.shape
+    bk_b = cfg.bk // 2 if b_bits == 4 else cfg.bk
     m_tiles, n_tiles = mp // cfg.bm, np_ // cfg.bn
     ipt = kp // cfg.bk
     assert ipt % s == 0, "split factor must divide k-iterations"
@@ -67,11 +83,11 @@ def splitk_partials(
 
     record_launch(f"splitk_gemm_{cfg.name}_s{s}")
     return pl.pallas_call(
-        functools.partial(_splitk_kernel, kps=kps),
+        functools.partial(_splitk_kernel, kps=kps, b_bits=b_bits),
         grid=(n_prog, s, kps),
         in_specs=[
             pl.BlockSpec((cfg.bm, cfg.bk), lambda i, sp, k: (tm(i), sp * kps + k)),
-            pl.BlockSpec((cfg.bk, cfg.bn), lambda i, sp, k: (sp * kps + k, tn(i))),
+            pl.BlockSpec((bk_b, cfg.bn), lambda i, sp, k: (sp * kps + k, tn(i))),
         ],
         out_specs=pl.BlockSpec(
             (1, cfg.bm, cfg.bn), lambda i, sp, k: (sp, tm(i), tn(i))

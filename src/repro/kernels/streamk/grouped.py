@@ -58,6 +58,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.policies import ALL_SK, Policy, PolicyKind, TileConfig
+from repro.core.quant import unpack_int4
 from repro.core.workpart import cdiv
 from repro.kernels.common import (
     CompilerParams,
@@ -68,14 +69,20 @@ from repro.kernels.common import (
 )
 
 
-def _extras_split(rest, has_scale, has_bias, has_operand):
-    """Unpack [scale?, bias?, operand?] + (c_ref, acc_ref) kernel tail."""
+def _extras_split(rest, has_scale, has_scale_a, has_bias, has_operand):
+    """Unpack [scale?, scale_a?, bias?, operand?] + (c_ref, acc_ref) tail."""
     c_ref, acc_ref = rest[-2], rest[-1]
     extras = list(rest[:-2])
     scale_ref = extras.pop(0) if has_scale else None
+    scale_a_ref = extras.pop(0) if has_scale_a else None
     bias_ref = extras.pop(0) if has_bias else None
     operand_ref = extras.pop(0) if has_operand else None
-    return scale_ref, bias_ref, operand_ref, c_ref, acc_ref
+    return scale_ref, scale_a_ref, bias_ref, operand_ref, c_ref, acc_ref
+
+
+def _unpack_b(b_blk, b_bits):
+    """Prologue unpack: packed (bk/2, bn) int4 block -> (bk, bn) int8."""
+    return unpack_int4(b_blk) if b_bits == 4 else b_blk
 
 
 # --------------------------------------------------------------------------
@@ -93,8 +100,10 @@ def _sk_kernel(
     total: int,
     epilogue="none",
     has_scale: bool = False,
+    has_scale_a: bool = False,
     has_bias: bool = False,
     has_operand: bool = False,
+    b_bits: int = 8,
 ):
     """One flattened MAC step of the concatenated-tile-space sweep.
 
@@ -105,8 +114,8 @@ def _sk_kernel(
     and init are guarded off and the flush harmlessly rewrites the same
     finished value.
     """
-    scale_ref, bias_ref, operand_ref, c_ref, acc_ref = _extras_split(
-        rest, has_scale, has_bias, has_operand
+    scale_ref, scale_a_ref, bias_ref, operand_ref, c_ref, acc_ref = _extras_split(
+        rest, has_scale, has_scale_a, has_bias, has_operand
     )
     del tab_ref  # only the index maps consume the group table
     x = pl.program_id(0)
@@ -124,7 +133,7 @@ def _sk_kernel(
 
     @pl.when(valid)
     def _mac():
-        acc_ref[...] += mixed_dot(a_ref[...], b_ref[0])
+        acc_ref[...] += mixed_dot(a_ref[...], _unpack_b(b_ref[0], b_bits))
 
     @pl.when(lk == ipt - 1)
     def _flush():
@@ -134,6 +143,7 @@ def _sk_kernel(
             bias=None if bias_ref is None else bias_ref[...],
             operand=None if operand_ref is None else operand_ref[...],
             scale=None if scale_ref is None else scale_ref[...],
+            scale_a=None if scale_a_ref is None else scale_a_ref[...],
         )
         c_ref[...] = out.astype(c_ref.dtype)
 
@@ -151,12 +161,14 @@ def _dp_kernel(
     ipt: int,
     epilogue="none",
     has_scale: bool = False,
+    has_scale_a: bool = False,
     has_bias: bool = False,
     has_operand: bool = False,
+    b_bits: int = 8,
 ):
     """Classic tiled-GEMM body over the concatenated tile space."""
-    scale_ref, bias_ref, operand_ref, c_ref, acc_ref = _extras_split(
-        rest, has_scale, has_bias, has_operand
+    scale_ref, scale_a_ref, bias_ref, operand_ref, c_ref, acc_ref = _extras_split(
+        rest, has_scale, has_scale_a, has_bias, has_operand
     )
     del tab_ref
     k = pl.program_id(1)
@@ -165,7 +177,7 @@ def _dp_kernel(
     def _init():
         acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
 
-    acc_ref[...] += mixed_dot(a_ref[...], b_ref[0])
+    acc_ref[...] += mixed_dot(a_ref[...], _unpack_b(b_ref[0], b_bits))
 
     @pl.when(k == ipt - 1)
     def _flush():
@@ -175,6 +187,7 @@ def _dp_kernel(
             bias=None if bias_ref is None else bias_ref[...],
             operand=None if operand_ref is None else operand_ref[...],
             scale=None if scale_ref is None else scale_ref[...],
+            scale_a=None if scale_a_ref is None else scale_a_ref[...],
         )
         c_ref[...] = out.astype(c_ref.dtype)
 
@@ -196,13 +209,18 @@ def _fused_call(
     bias,
     operand,
     scale,
+    scale_a,
+    b_bits: int = 8,
 ):
     """Build and issue THE single ``pallas_call`` over the concatenated tile
     space. ``tab``: (R,) int32 row-block -> group table (scalar-prefetched);
-    ``a_cat``: (R*bm, Kp); ``b_pad``: (G, Kp, Np); optional ``bias``/``scale``
-    (G, Np) and ``operand`` (R*bm, Np). Returns C_cat (R*bm, Np)."""
+    ``a_cat``: (R*bm, Kp); ``b_pad``: (G, Kp, Np) — or (G, Kp/2, Np) packed
+    int4 when ``b_bits == 4``, unpacked per block in the kernel prologue;
+    optional ``bias``/``scale`` (G, Np), ``scale_a`` (R*bm, 1) concatenated
+    like A, and ``operand`` (R*bm, Np). Returns C_cat (R*bm, Np)."""
     total = n_tiles * ipt
     rp, np_ = a_cat.shape[0], b_pad.shape[2]
+    bk_b = cfg.bk // 2 if b_bits == 4 else cfg.bk
     sk_form = policy.kind != PolicyKind.DP
 
     if sk_form:
@@ -229,6 +247,10 @@ def _fused_call(
             t, _ = _tile(x, j)
             return (tab[t // nt], t % nt)
 
+        def row_index(x, j, tab):
+            t, _ = _tile(x, j)
+            return (t // nt, 0)
+
         kernel = functools.partial(
             _sk_kernel,
             ipt=ipt,
@@ -236,8 +258,10 @@ def _fused_call(
             total=total,
             epilogue=epilogue,
             has_scale=scale is not None,
+            has_scale_a=scale_a is not None,
             has_bias=bias is not None,
             has_operand=operand is not None,
+            b_bits=b_bits,
         )
         # Both dims sequential: the accumulator carry across workgroup
         # boundaries is only sound under a strict flattened execution order.
@@ -267,13 +291,19 @@ def _fused_call(
             t = _tile_dp(i)
             return (tab[t // nt], t % nt)
 
+        def row_index(i, k, tab):
+            t = _tile_dp(i)
+            return (t // nt, 0)
+
         kernel = functools.partial(
             _dp_kernel,
             ipt=ipt,
             epilogue=epilogue,
             has_scale=scale is not None,
+            has_scale_a=scale_a is not None,
             has_bias=bias is not None,
             has_operand=operand is not None,
+            b_bits=b_bits,
         )
         tile_sem = pltpu.ARBITRARY if n_prog != n_tiles else pltpu.PARALLEL
         semantics = (tile_sem, pltpu.ARBITRARY)
@@ -282,11 +312,14 @@ def _fused_call(
     operands = [a_cat, b_pad]
     in_specs = [
         pl.BlockSpec((cfg.bm, cfg.bk), a_index),
-        pl.BlockSpec((1, cfg.bk, cfg.bn), b_index),
+        pl.BlockSpec((1, bk_b, cfg.bn), b_index),
     ]
     if scale is not None:
         operands.append(scale)
         in_specs.append(pl.BlockSpec((1, cfg.bn), vec_index))
+    if scale_a is not None:
+        operands.append(scale_a)
+        in_specs.append(pl.BlockSpec((cfg.bm, 1), row_index))
     if bias is not None:
         operands.append(bias)
         in_specs.append(pl.BlockSpec((1, cfg.bn), vec_index))
@@ -315,7 +348,7 @@ def _fused_call(
     jax.jit,
     static_argnames=(
         "policy", "cfg", "g", "interpret", "out_dtype", "epilogue",
-        "group_sizes",
+        "group_sizes", "b_bits",
     ),
 )
 def gemm_grouped_streamk(
@@ -331,7 +364,9 @@ def gemm_grouped_streamk(
     bias: Optional[jax.Array] = None,
     operand: Optional[jax.Array] = None,
     scale: Optional[jax.Array] = None,
+    scale_a: Optional[jax.Array] = None,
     group_sizes: Optional[Tuple[int, ...]] = None,
+    b_bits: int = 8,
 ) -> jax.Array:
     """Batched-by-expert GEMM ``c[i] = a[i] @ b[i]`` in ONE ``pallas_call``.
 
@@ -342,14 +377,20 @@ def gemm_grouped_streamk(
     0 (expert received no tokens) contributes no tiles at all.
 
     Epilogue operands are per-expert: ``bias`` (G, N), ``scale`` (G, N) —
-    the int8-weight dequant rows — and ``operand`` (G, M, N) for binary
-    stages. Accumulation is f32; policies other than DP run the Stream-K
-    persistent form (HYBRID degenerates to ALL_SK — one launch admits no
-    separate DP region).
+    the int8-weight dequant rows — ``scale_a`` (G, M) per-row activation
+    dequant columns (int8xint8 ops), and ``operand`` (G, M, N) for binary
+    stages. ``b_bits == 4``: ``b`` is int4-packed (G, ceil(K/2), N), each
+    kernel block unpacked in the prologue. Accumulation is f32; policies
+    other than DP run the Stream-K persistent form (HYBRID degenerates to
+    ALL_SK — one launch admits no separate DP region).
     """
-    if a.ndim != 3 or b.ndim != 3 or a.shape[0] != b.shape[0] \
-            or a.shape[2] != b.shape[1]:
+    if a.ndim != 3 or b.ndim != 3 or a.shape[0] != b.shape[0]:
         raise ValueError(f"bad grouped operands {a.shape} @ {b.shape}")
+    k_rows = (a.shape[2] + 1) // 2 if b_bits == 4 else a.shape[2]
+    if b.shape[1] != k_rows:
+        raise ValueError(
+            f"bad grouped operands {a.shape} @ {b.shape} (b_bits={b_bits})"
+        )
     n_groups, m, k = a.shape
     n = b.shape[2]
     out_dtype = out_dtype or a.dtype
@@ -375,7 +416,7 @@ def gemm_grouped_streamk(
         if row_blocks[i]
     ]
     a_cat = jnp.concatenate(a_parts, axis=0) if len(a_parts) > 1 else a_parts[0]
-    b_pad = pad_to(b, (1, cfg.bk, cfg.bn))
+    b_pad = pad_to(b, (1, cfg.bk // 2 if b_bits == 4 else cfg.bk, cfg.bn))
     tab = jnp.asarray(
         np.repeat(np.arange(n_groups, dtype=np.int32), row_blocks)
     )
@@ -386,6 +427,23 @@ def gemm_grouped_streamk(
     scalep = None if scale is None else pad_to(
         scale.reshape(n_groups, n).astype(jnp.float32), (1, cfg.bn)
     )
+    scale_ap = None
+    if scale_a is not None:
+        # concatenated like A: group i's live rows padded to its row-block
+        # boundary -> an (R*bm, 1) column the tiles slice by row-block
+        sa_parts = [
+            pad_to(
+                scale_a[i, : sizes[i]].reshape(-1, 1).astype(jnp.float32),
+                (cfg.bm, 1),
+            )
+            for i in range(n_groups)
+            if row_blocks[i]
+        ]
+        scale_ap = (
+            jnp.concatenate(sa_parts, axis=0)
+            if len(sa_parts) > 1
+            else sa_parts[0]
+        )
     operandp = None
     if operand is not None:
         op_parts = [
@@ -415,6 +473,8 @@ def gemm_grouped_streamk(
         bias=biasp,
         operand=operandp,
         scale=scalep,
+        scale_a=scale_ap,
+        b_bits=b_bits,
     )
 
     # Scatter concatenated rows back to the dense (G, M, N) layout; padding

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from repro.core.policies import DP, Policy, PolicyKind, TileConfig
 from repro.core.workpart import GemmShape, cdiv, partition
-from repro.kernels.common import pad_to, prep_scale, unpad
+from repro.kernels.common import pad_to, prep_scale, prep_scale_a, unpad
 from repro.kernels.dp.dp_gemm import dp_gemm_region
 from repro.kernels.streamk.streamk_gemm import streamk_fixup, streamk_phase1
 
@@ -46,7 +46,9 @@ def _scatter_sk_tiles(sk_tiles_out, part, out_dtype, interpret):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("policy", "cfg", "g", "interpret", "out_dtype", "epilogue"),
+    static_argnames=(
+        "policy", "cfg", "g", "interpret", "out_dtype", "epilogue", "b_bits",
+    ),
 )
 def gemm(
     a: jax.Array,
@@ -61,6 +63,8 @@ def gemm(
     bias: jax.Array = None,
     operand: jax.Array = None,
     scale: jax.Array = None,
+    scale_a: jax.Array = None,
+    b_bits: int = 8,
 ) -> jax.Array:
     """``a @ b`` under a Stream-K++ scheduling policy, with an optional fused
     epilogue (Composable-Kernel style: applied post-accumulation in the
@@ -73,32 +77,50 @@ def gemm(
     int8-weight op (``b`` int8): it enters every policy's flush/fix-up as
     an extra blocked operand ahead of the other epilogue stages, so the
     kernels accumulate raw int8 weights and never materialise a dense
-    dequantized B.
+    dequantized B. ``scale_a`` (M,) is the per-row activation dequant of an
+    int8xint8 op (``a`` int8 too): together they form the rank-1 rescale
+    ``s_a (x) s_b`` on the f32 accumulator. ``b_bits == 4``: ``b`` is
+    int4-packed (ceil(K/2), N) — K comes from ``a``, and every kernel
+    unpacks its packed block in the prologue (B HBM traffic is 0.5
+    bytes/element).
     """
-    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+    if a.ndim != 2 or b.ndim != 2:
         raise ValueError(f"bad gemm operands {a.shape} @ {b.shape}")
+    k_rows = (a.shape[1] + 1) // 2 if b_bits == 4 else a.shape[1]
+    if b.shape[0] != k_rows:
+        raise ValueError(
+            f"bad gemm operands {a.shape} @ {b.shape} (b_bits={b_bits})"
+        )
     m, k = a.shape
     _, n = b.shape
     out_dtype = out_dtype or a.dtype
 
     ap = pad_to(a, (cfg.bm, cfg.bk))
-    bp = pad_to(b, (cfg.bk, cfg.bn))
+    bp = pad_to(b, (cfg.bk // 2 if b_bits == 4 else cfg.bk, cfg.bn))
     biasp = None if bias is None else pad_to(bias.reshape(1, n), (1, cfg.bn))
     operandp = None if operand is None else pad_to(operand, (cfg.bm, cfg.bn))
     scalep = prep_scale(scale, n, cfg.bn)
+    scale_ap = prep_scale_a(scale_a, m, cfg.bm)
     part = partition(GemmShape(m, n, k), cfg, g, policy)
-    epi = dict(epilogue=epilogue, bias=biasp, operand=operandp, scale=scalep)
+    epi = dict(
+        epilogue=epilogue,
+        bias=biasp,
+        operand=operandp,
+        scale=scalep,
+        scale_a=scale_ap,
+    )
 
     if part.sk_tiles == 0:
         # policy degraded to pure DP (DP itself, or a HYBRID whose remainder
         # wave is empty at this g): the DP region still launches in waves of
         # the selected grid size
         cp = dp_gemm_region(
-            ap, bp, cfg, out_dtype=out_dtype, interpret=interpret, g=g, **epi
+            ap, bp, cfg, out_dtype=out_dtype, interpret=interpret, g=g,
+            b_bits=b_bits, **epi,
         )
         return unpad(cp, (m, n))
 
-    partials = streamk_phase1(ap, bp, part, interpret=interpret)
+    partials = streamk_phase1(ap, bp, part, interpret=interpret, b_bits=b_bits)
     sk_c = streamk_fixup(
         partials, part, out_dtype, interpret=interpret, **epi
     )
@@ -116,6 +138,7 @@ def gemm(
         out_dtype=out_dtype,
         interpret=interpret,
         g=g,
+        b_bits=b_bits,
         **epi,
     )
     return unpad(cp, (m, n))

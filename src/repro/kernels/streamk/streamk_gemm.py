@@ -45,6 +45,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.quant import unpack_int4
 from repro.core.workpart import Partition, cdiv
 from repro.kernels.common import (
     CompilerParams,
@@ -74,7 +75,7 @@ def _flat_iter(x, j, ipw, total):
 # --------------------------------------------------------------------------
 
 
-def _streamk_kernel(a_ref, b_ref, partials_ref, *, part: Partition):
+def _streamk_kernel(a_ref, b_ref, partials_ref, *, part: Partition, b_bits: int = 8):
     ipt, total, ipw, mc = _range_math(part)
     x = pl.program_id(0)
     j = pl.program_id(1)
@@ -96,7 +97,11 @@ def _streamk_kernel(a_ref, b_ref, partials_ref, *, part: Partition):
 
     @pl.when(valid)
     def _mac():
-        acc = mixed_dot(a_ref[...], b_ref[...])
+        b_blk = b_ref[...]
+        if b_bits == 4:
+            # packed (bk/2, bn) int4 block -> (bk, bn) int8 in the prologue
+            b_blk = unpack_int4(b_blk)
+        acc = mixed_dot(a_ref[...], b_blk)
         partials_ref[...] += acc[None, None]
 
 
@@ -115,14 +120,18 @@ def _sk_block_indices(x, j, part: Partition):
     return tile, slot
 
 
-def streamk_phase1(a, b, part: Partition, *, interpret: bool = False):
+def streamk_phase1(a, b, part: Partition, *, interpret: bool = False, b_bits: int = 8):
     """Run the Stream-K sweep; returns partials[sk_tiles, mc+1, bm, bn] f32.
 
-    ``a``/``b`` must already be padded to tile multiples.
+    ``a``/``b`` must already be padded to tile multiples. ``b_bits == 4``:
+    ``b`` is int4-packed (Kp/2, Np), padded to ``bk/2`` multiples, and the
+    kernel unpacks each block in its prologue (the packed k-block count
+    equals the logical one for even bk, so the index maps are unchanged).
     """
     cfg = part.cfg
     ipt, total, ipw, mc = _range_math(part)
     assert part.sk_tiles > 0
+    bk_b = cfg.bk // 2 if b_bits == 4 else cfg.bk
 
     def a_index(x, j):
         tile, _ = _sk_block_indices(x, j, part)
@@ -141,14 +150,14 @@ def streamk_phase1(a, b, part: Partition, *, interpret: bool = False):
     out_shape = jax.ShapeDtypeStruct(
         (part.sk_tiles, mc + 1, cfg.bm, cfg.bn), jnp.float32
     )
-    kernel = functools.partial(_streamk_kernel, part=part)
+    kernel = functools.partial(_streamk_kernel, part=part, b_bits=b_bits)
     record_launch(f"streamk_p1_{cfg.name}_g{part.g}")
     return pl.pallas_call(
         kernel,
         grid=(part.g, ipw),
         in_specs=[
             pl.BlockSpec((cfg.bm, cfg.bk), a_index),
-            pl.BlockSpec((cfg.bk, cfg.bn), b_index),
+            pl.BlockSpec((bk_b, cfg.bn), b_index),
         ],
         out_specs=pl.BlockSpec(
             (1, 1, cfg.bm, cfg.bn), out_index
@@ -173,13 +182,15 @@ def _fixup_kernel(
     part: Partition,
     epilogue="none",
     has_scale: bool = False,
+    has_scale_a: bool = False,
     has_bias: bool = False,
     has_operand: bool = False,
 ):
-    """rest = [scale_ref?, bias_ref?, operand_ref?] + (c_ref,)."""
+    """rest = [scale_ref?, scale_a_ref?, bias_ref?, operand_ref?] + (c_ref,)."""
     c_ref = rest[-1]
     extras = list(rest[:-1])
     scale_ref = extras.pop(0) if has_scale else None
+    scale_a_ref = extras.pop(0) if has_scale_a else None
     bias_ref = extras.pop(0) if has_bias else None
     operand_ref = extras.pop(0) if has_operand else None
     ipt, total, ipw, mc = _range_math(part)
@@ -201,22 +212,24 @@ def _fixup_kernel(
         bias=None if bias_ref is None else bias_ref[...],
         operand=None if operand_ref is None else operand_ref[...],
         scale=None if scale_ref is None else scale_ref[...],
+        scale_a=None if scale_a_ref is None else scale_a_ref[...],
     )
     c_ref[0] = out.astype(c_ref.dtype)
 
 
 def streamk_fixup(
     partials, part: Partition, out_dtype, *, interpret: bool = False,
-    epilogue="none", bias=None, operand=None, scale=None,
+    epilogue="none", bias=None, operand=None, scale=None, scale_a=None,
 ):
     """Reduce contributor slots per SK tile -> C tiles, shaped
     (sk_tiles, bm, bn). The epilogue (activation, bias-add, swiglu-mul /
     residual operand) fuses here — after the full accumulation — so it costs
-    no extra HBM pass; an int8-weight op's dequant ``scale`` (1, Np) applies
-    to the reduced accumulator first (see ``apply_epilogue``). ``bias``
-    (1, Np) / ``operand`` (Mp, Np) are padded full-size arrays; their
-    blocks are gathered per SK tile in row-major tile order (matching
-    ``_scatter_sk_tiles``)."""
+    no extra HBM pass; an int8-weight op's dequant ``scale`` (1, Np) and an
+    int8-activation op's per-row ``scale_a`` (Mp, 1) apply to the reduced
+    accumulator first — together the rank-1 rescale of an int8xint8 op (see
+    ``apply_epilogue``). ``bias`` (1, Np) / ``operand`` (Mp, Np) are padded
+    full-size arrays; their blocks are gathered per SK tile in row-major
+    tile order (matching ``_scatter_sk_tiles``)."""
     cfg = part.cfg
     nt = part.n_tiles
     kernel = functools.partial(
@@ -224,6 +237,7 @@ def streamk_fixup(
         part=part,
         epilogue=epilogue,
         has_scale=scale is not None,
+        has_scale_a=scale_a is not None,
         has_bias=bias is not None,
         has_operand=operand is not None,
     )
@@ -236,6 +250,9 @@ def streamk_fixup(
     if scale is not None:
         operands.append(scale)
         in_specs.append(pl.BlockSpec((1, cfg.bn), lambda t: (0, t % nt)))
+    if scale_a is not None:
+        operands.append(scale_a)
+        in_specs.append(pl.BlockSpec((cfg.bm, 1), lambda t: (t // nt, 0)))
     if bias is not None:
         operands.append(bias)
         in_specs.append(pl.BlockSpec((1, cfg.bn), lambda t: (0, t % nt)))

@@ -129,7 +129,7 @@ def lower_cell(
     from repro.launch.mesh import make_production_mesh
     from repro.models import SHAPES_BY_NAME, applicable_shapes, build_model
     from repro.optim import AdamW, constant, make_optimizer
-    from repro.train import make_train_step
+    from repro.train import make_train_step, train_gemm_div
 
     import dataclasses
 
@@ -166,10 +166,13 @@ def lower_cell(
     tok_spec = ArraySpec(
         tuple(ins["tokens"].shape), "int32", in_axes["tokens"]
     )
-    div = {
-        "batch": _applied_divisor(plan, tok_spec, 0),
-        "model": mesh.shape["model"],
-    }
+    # mesh-level table probed per array (demoted_dims) like serve_gemm_div,
+    # so train fingerprints never claim splits the arrays don't execute;
+    # the batch entry uses the tokens spec directly — finer than the
+    # count-divisibility heuristic, same ROADMAP item 6 fix
+    div = dict(train_gemm_div(model, plan=plan))
+    div["batch"] = _applied_divisor(plan, tok_spec, 0)
+    div.setdefault("model", mesh.shape["model"])
 
     input_sh = {
         k: NamedSharding(

@@ -267,11 +267,14 @@ def main() -> int:
     ap.add_argument(
         "--quantize",
         default="none",
-        choices=["none", "int8"],
+        choices=["none", "int8", "int8-dynamic", "int4"],
         help="one-shot weight quantization at load: projection weights "
-        "become int8 QuantizedTensors (per-output-channel symmetric "
-        "scales, dequant fused into the GEMM kernels) — decode GEMMs then "
-        "fingerprint/tune under the mixed '<act>*int8' dtype profile",
+        "become QuantizedTensors (per-output-channel symmetric scales, "
+        "dequant fused into the GEMM kernels). 'int8' keeps float "
+        "activations ('<act>*int8' fingerprints); 'int8-dynamic' also "
+        "quantizes activations per row at dispatch, running the int8xint8 "
+        "MXU path ('int8*int8'); 'int4' packs weights two nibbles per byte "
+        "along K ('<act>*int4', B traffic 0.5 bytes/element)",
     )
     ap.add_argument(
         "--adapt",
@@ -394,13 +397,21 @@ def main() -> int:
         raise SystemExit("serve CLI drives decoder-only archs; see examples/ for enc-dec")
     model = build_model(cfg)
     params = materialize_tree(model.param_specs(), jax.random.PRNGKey(args.seed))
-    if args.quantize == "int8":
+    if args.quantize != "none":
         # every decoder-only arch serves through LM, which owns the
         # quantization entry point (enc-dec was rejected above)
-        params, n_quant = model.quantize_weights(params)
+        bits = 4 if args.quantize == "int4" else 8
+        act_bits = 8 if args.quantize == "int8-dynamic" else None
+        params, n_quant, n_skipped = model.quantize_weights(
+            params, bits=bits, act_bits=act_bits
+        )
         log.info(
-            "quantized %d weight leaves to int8 (per-output-channel scales)",
+            "quantized %d weight leaves to int%d (per-output-channel "
+            "scales%s); %d float leaves skipped",
             n_quant,
+            bits,
+            ", dynamic int8 activations" if act_bits else "",
+            n_skipped,
         )
 
     grid_sizes = None

@@ -48,17 +48,27 @@ class LM:
         self.cfg = cfg
 
     # -- weight quantization ------------------------------------------------
-    def quantize_weights(self, params: Params) -> Tuple[Params, int]:
-        """One-shot int8 weight quantization for serving: every dense
-        projection leaf (attention/MLP/MoE-expert weights, the untied
-        lm_head, the shared hybrid block) becomes a
+    def quantize_weights(
+        self,
+        params: Params,
+        *,
+        bits: int = 8,
+        act_bits: Optional[int] = None,
+    ) -> Tuple[Params, int, int]:
+        """One-shot weight quantization for serving: every dense projection
+        leaf (attention/MLP/MoE-expert weights, the untied lm_head, the
+        shared hybrid block) becomes a
         :class:`~repro.core.quant.QuantizedTensor`; embeddings, routers and
-        norms stay full precision. Scan-stacked leaves quantize per layer
-        per output channel, so the stacked decode scan slices values and
-        scales coherently. Returns (quantized tree, leaves converted)."""
+        norms stay full precision. ``bits`` selects the ladder rung (8 or 4
+        — int4 packs two nibbles per byte along K); ``act_bits=8``
+        additionally requests dynamic int8 activation quantization at
+        dispatch (the int8xint8 MXU rung). Scan-stacked leaves quantize per
+        layer per output channel, so the stacked decode scan slices values
+        and scales coherently. Returns (quantized tree, leaves converted,
+        float leaves skipped under quantizable keys)."""
         from repro.core.quant import quantize_lm_params
 
-        return quantize_lm_params(params)
+        return quantize_lm_params(params, bits=bits, act_bits=act_bits)
 
     # -- layer metadata ------------------------------------------------------
     def layer_flags(self) -> Dict[str, jnp.ndarray]:

@@ -4,6 +4,7 @@ from repro.train.trainer import (
     StragglerMonitor,
     init_train_state,
     make_train_step,
+    train_gemm_div,
 )
 
 __all__ = [
@@ -12,4 +13,5 @@ __all__ = [
     "StragglerMonitor",
     "init_train_state",
     "make_train_step",
+    "train_gemm_div",
 ]

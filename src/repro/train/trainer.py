@@ -33,6 +33,62 @@ from repro.utils.timing import EWMA, Timer
 log = get_logger("train")
 
 
+def train_gemm_div(
+    model, batch: Optional[int] = None, plan=None
+) -> Dict[str, int]:
+    """Per-array-aware ambient GEMM divisor table for the train path.
+
+    ``ShardingPlan.gemm_div`` is mesh-level: it cannot see the per-array
+    divisibility demotion ``spec_for`` applies (an odd vocab on a model=4
+    mesh executes replicated while the mesh table still claims the split).
+    ``serve_gemm_div`` closed that gap for serving; this is the same probe
+    at the trainer call site — the other place the mesh-level table used to
+    be threaded verbatim (ROADMAP item 6's leftover). Every parameter spec
+    runs through the plan's own solver (:meth:`ShardingPlan.demoted_dims`);
+    when any tensor-parallel weight dim would be demoted to replication the
+    table's ``model`` entry drops to 1, and ``batch`` drops to 1 when the
+    global batch is not divisible by the data-parallel factor — so train
+    fingerprints never claim splits the arrays don't execute.
+
+    ``plan`` defaults to the ambient :func:`~repro.dist.sharding.current_plan`;
+    pass it explicitly when building the step before installing the plan.
+    Returns ``{}`` when no plan is active (unsharded training)."""
+    from repro.dist.sharding import current_plan
+
+    if plan is None:
+        plan = current_plan()
+    if plan is None:
+        return {}
+    div = dict(plan.gemm_div())
+    tp = div.get("model", 1)
+    if tp > 1:
+        offenders = plan.demoted_dims(model.param_specs(), mesh_axis="model")
+        if offenders:
+            shown = ", ".join(
+                f"dim {d} ({ax or '?'}) of {sh}" for sh, ax, _, d in offenders[:3]
+            )
+            log.warning(
+                "train fingerprints demote model divisor %d -> 1: %d weight "
+                "dim(s) fail the plan's divisibility solver and execute "
+                "replicated (e.g. %s); a mesh-level divisor would fingerprint "
+                "local shapes the kernels never see",
+                tp,
+                len(offenders),
+                shown,
+            )
+            div["model"] = 1
+    db = div.get("batch", 1)
+    if batch is not None and db > 1 and batch % db:
+        log.warning(
+            "train fingerprints demote batch divisor %d -> 1: global batch "
+            "%d is not divisible, so activations execute replicated",
+            db,
+            batch,
+        )
+        div["batch"] = 1
+    return div
+
+
 @dataclass
 class TrainerConfig:
     total_steps: int = 100
@@ -156,6 +212,11 @@ class Trainer:
         self.optimizer = optimizer
         self.data = data
         self.cfg = cfg
+        if div is None:
+            # default to the probed ambient table (no-op when no plan is
+            # installed) so direct Trainer users get the per-array demotion
+            # without threading the table themselves
+            div = train_gemm_div(model) or None
         self.div = div
         self.failure_injector = failure_injector
         step_fn = make_train_step(

@@ -34,7 +34,7 @@ import pytest
 from repro.core.gemm import gemm, gemm_context, gemm_grouped
 from repro.core.op import Epilogue, GemmOp
 from repro.core.policies import ALL_POLICIES, ALL_SK, DP, HYBRIDS, TileConfig
-from repro.core.quant import quantize_weight
+from repro.core.quant import quantize_activations, quantize_weight
 from repro.core.selector import KernelSelector, default_selector
 from repro.core.tuner import Tuner, TuningDatabase
 from repro.kernels.dp import ops as dp_ops
@@ -243,10 +243,8 @@ def test_dispatch_backends_agree_on_quantized_weight():
 # ---------------------------------------------------------------------------
 
 
-def _quant_op(m, n, k):
-    return GemmOp.plain(
-        m, n, k, in_dtype="float32*int8", out_dtype="float32"
-    )
+def _quant_op(m, n, k, in_dtype="float32*int8"):
+    return GemmOp.plain(m, n, k, in_dtype=in_dtype, out_dtype="float32")
 
 
 def test_some_suite_shape_selects_differently_for_int8_weight():
@@ -280,7 +278,7 @@ def test_serving_stack_quantized_vs_dequantized_dense_model():
     cfg = tiny("granite-8b")
     model = build_model(cfg)
     params = materialize_tree(model.param_specs(), jax.random.PRNGKey(0))
-    qparams, n_quant = model.quantize_weights(params)
+    qparams, n_quant, _ = model.quantize_weights(params)
     assert n_quant > 0
     dense = jax.tree.map(
         lambda leaf: leaf.dequantize(cfg.dtype) if isinstance(leaf, QuantizedTensor) else leaf,
@@ -317,11 +315,290 @@ def test_serving_stack_quantized_vs_dequantized_dense_model():
     assert {"attn.q", "mlp.in", "lm_head"} <= quant_tags
 
 
-def test_quantized_fingerprint_tunes_journals_and_warm_starts(tmp_path):
+# ---------------------------------------------------------------------------
+# the low-precision ladder below int8-weight: int8 x int8 and packed int4
+# ---------------------------------------------------------------------------
+
+#: ladder rungs: both dequantize exactly in f32 (int8->f32 and the rank-1
+#: rescale are exact; the int8 x int8 MAC is exact integer arithmetic), so
+#: the only divergence vs the dequantize-then-dot oracle is reassociation.
+LADDER = ("int8x8", "int4")
+LTOLS = {
+    "int8x8": dict(rtol=1e-4, atol=1e-4),
+    "int4": dict(rtol=1e-4, atol=1e-4),
+}
+
+
+def _ladder_problem(m, n, k, rung, seed=0):
+    """(a_kernel, b, scale, scale_a, a_ref, w_ref, b_bits): the kernel runs
+    the first four; the oracle contracts a_ref @ w_ref in dense f32 (both
+    are the dequantized masters, so the oracle IS dequantize-then-dot)."""
+    r = np.random.default_rng(seed)
+    a = jnp.asarray(r.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(k, n)), jnp.float32)
+    if rung == "int4":
+        q = quantize_weight(w, bits=4)
+        return a, q.values, q.scales, None, a, q.dequantize(), 4
+    q = quantize_weight(w)
+    aq, sa = quantize_activations(a)
+    a_ref = aq.astype(jnp.float32) * sa[:, None]
+    return aq, q.values, q.scales, sa, a_ref, q.dequantize(), 8
+
+
+@pytest.mark.parametrize("rung", LADDER)
+@pytest.mark.parametrize("g", [4, 16])
+@pytest.mark.parametrize("policy", ALL_POLICIES, ids=lambda p: p.name)
+def test_ladder_all_policies_grids_match_dequant_reference(policy, g, rung):
+    m, n, k = ODD
+    a, b, scale, scale_a, a_ref, w_ref, b_bits = _ladder_problem(m, n, k, rung)
+    want = _oracle(a_ref, w_ref)
+    got = sk_ops.gemm(
+        a,
+        b,
+        policy=policy,
+        cfg=CFG,
+        g=g,
+        interpret=True,
+        out_dtype=jnp.float32,
+        scale=scale,
+        scale_a=scale_a,
+        b_bits=b_bits,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **LTOLS[rung])
+
+
+@pytest.mark.parametrize("rung", LADDER)
+@pytest.mark.parametrize("epi", EPILOGUES, ids=lambda e: e.name)
+@pytest.mark.parametrize(
+    "policy", [DP, ALL_SK, HYBRIDS[0]], ids=lambda p: p.name
+)
+def test_ladder_composes_with_epilogues(policy, epi, rung):
+    """Rescale order: the rank-1 ``s_a (x) s_b`` applies on the f32
+    accumulator BEFORE bias/activation/binary — same contract as the
+    int8-weight rung's per-channel scale."""
+    m, n, k = 24, 384, 640
+    a, b, scale, scale_a, a_ref, w_ref, b_bits = _ladder_problem(
+        m, n, k, rung, seed=11
+    )
+    r = np.random.default_rng(12)
+    bias = jnp.asarray(r.normal(size=(n,)), jnp.float32) if epi.bias else None
+    operand = (
+        jnp.asarray(r.normal(size=(m, n)), jnp.float32)
+        if epi.binary != "none"
+        else None
+    )
+    want = _oracle(a_ref, w_ref, epilogue=epi, bias=bias, operand=operand)
+    got = sk_ops.gemm(
+        a,
+        b,
+        policy=policy,
+        cfg=CFG,
+        g=4,
+        interpret=True,
+        out_dtype=jnp.float32,
+        epilogue=epi,
+        bias=bias,
+        operand=operand,
+        scale=scale,
+        scale_a=scale_a,
+        b_bits=b_bits,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **LTOLS[rung])
+
+
+@pytest.mark.parametrize("rung", LADDER)
+@pytest.mark.parametrize("g", [0, 3])
+def test_dp_ops_ladder_matches_reference(g, rung):
+    a, b, scale, scale_a, a_ref, w_ref, b_bits = _ladder_problem(
+        *ODD, rung, seed=13
+    )
+    got = dp_ops.gemm(
+        a,
+        b,
+        cfg=CFG,
+        g=g,
+        interpret=True,
+        out_dtype=jnp.float32,
+        scale=scale,
+        scale_a=scale_a,
+        b_bits=b_bits,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(_oracle(a_ref, w_ref)), **LTOLS[rung]
+    )
+
+
+@pytest.mark.parametrize("rung", LADDER)
+@pytest.mark.parametrize("g", [0, 3])
+def test_splitk_ops_ladder_matches_reference(g, rung):
+    a, b, scale, scale_a, a_ref, w_ref, b_bits = _ladder_problem(
+        24, 256, 512, rung, seed=14
+    )
+    got = splitk_ops.gemm(
+        a,
+        b,
+        cfg=CFG,
+        s=2,
+        g=g,
+        interpret=True,
+        out_dtype=jnp.float32,
+        scale=scale,
+        scale_a=scale_a,
+        b_bits=b_bits,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(_oracle(a_ref, w_ref)), **LTOLS[rung]
+    )
+
+
+@pytest.mark.parametrize("rung", LADDER)
+@pytest.mark.parametrize("policy", [ALL_SK, DP], ids=lambda p: p.name)
+def test_grouped_fused_ladder_matches_reference(policy, rung):
+    """The fused grouped kernel unpacks/rescales per group: ragged sizes,
+    one empty group, per-group (G, M) activation-scale rows."""
+    from repro.kernels.streamk.grouped import gemm_grouped_streamk
+
+    n_groups, m_cap, k, n = 3, 16, 96, 128
+    sizes = [13, 0, 7]
+    r = np.random.default_rng(15)
+    a = jnp.asarray(r.normal(size=(n_groups, m_cap, k)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(n_groups, k, n)), jnp.float32)
+    if rung == "int4":
+        q = quantize_weight(w, bits=4)
+        a_kernel, scale_a, a_ref, b_bits = a, None, a, 4
+    else:
+        q = quantize_weight(w)
+        aq, sa = quantize_activations(a)
+        a_kernel, scale_a, b_bits = aq, sa, 8
+        a_ref = aq.astype(jnp.float32) * sa[..., None]
+    want = jnp.einsum("gmk,gkn->gmn", a_ref, q.dequantize())
+    got = gemm_grouped_streamk(
+        a_kernel,
+        q.values,
+        group_sizes=tuple(sizes),
+        policy=policy,
+        cfg=CFG,
+        g=4,
+        interpret=True,
+        out_dtype=jnp.float32,
+        scale=q.scales,
+        scale_a=scale_a,
+        b_bits=b_bits,
+    )
+    for i, s in enumerate(sizes):
+        np.testing.assert_allclose(
+            np.asarray(got[i, :s]), np.asarray(want[i, :s]), **LTOLS[rung]
+        )
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+def test_dispatch_int4_weight_fingerprint_and_numerics(backend):
+    r = np.random.default_rng(21)
+    x = jnp.asarray(r.normal(size=(2, 9, 96)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(96, 64)), jnp.float32)
+    q = quantize_weight(w, bits=4)
+    want = jnp.einsum("bsk,kn->bsn", x, q.dequantize())
+    with gemm_context(backend=backend) as ctx:
+        got = gemm(x, q, tag="q4")
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), **LTOLS["int4"]
+    )
+    op = ctx.log[-1].op
+    assert op.in_dtype == "float32*int4"
+    assert op.key[:3] == (18, 64, 96)  # logical K, not the packed row count
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+def test_dispatch_dynamic_int8_act_fingerprint_and_numerics(backend):
+    """act_bits=8 weights quantize the f32 activations on the fly; the op
+    fingerprints as int8*int8 (NOT collapsed to plain "int8") and the
+    output stays the activations' original float dtype."""
+    r = np.random.default_rng(22)
+    x = jnp.asarray(r.normal(size=(2, 9, 96)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(96, 64)), jnp.float32)
+    q = quantize_weight(w, act_bits=8)
+    xq, sa = quantize_activations(x)
+    want = jnp.einsum(
+        "bsk,kn->bsn",
+        xq.astype(jnp.float32) * sa[..., None],
+        q.dequantize(),
+    )
+    with gemm_context(backend=backend) as ctx:
+        got = gemm(x, q, tag="q88")
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), **LTOLS["int8x8"]
+    )
+    assert ctx.log[-1].op.in_dtype == "int8*int8"
+
+
+def test_dispatch_grouped_ladder_backends_agree():
+    r = np.random.default_rng(23)
+    x = jnp.asarray(r.normal(size=(3, 4, 32)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(3, 32, 48)), jnp.float32)
+    for q in (quantize_weight(w, bits=4), quantize_weight(w, act_bits=8)):
+        outs = {}
+        for backend in ("xla", "pallas_interpret"):
+            with gemm_context(backend=backend):
+                outs[backend] = np.asarray(gemm_grouped(x, q))
+        np.testing.assert_allclose(
+            outs["xla"], outs["pallas_interpret"], rtol=1e-5, atol=1e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# cost model: the integer-dtype bugs (satellite regressions)
+# ---------------------------------------------------------------------------
+
+
+def test_profile_clamps_integer_fallback_store_width():
+    """Regression: with no out_dtype the fallback used to score C at
+    ``max(a, b)`` = 1 byte for int8*int8, but every kernel stores >= 2-byte
+    outputs — low-precision inputs shrink A/B traffic, never the store."""
+    from repro.core.costmodel import profile_for
+
+    p = profile_for("int8*int8")
+    assert (p.a, p.b) == (1, 1)
+    assert p.out == 2  # clamped; max(a, b) would claim 1
+    # an explicit out_dtype is still honored verbatim
+    assert profile_for("int8*int8", "bfloat16").out == 2
+    assert profile_for("int8*int8", "float32").out == 4
+
+
+def test_int4_scores_half_byte_b_and_flips_selection_vs_int8():
+    """Acceptance: packed int4 B traffic is 0.5 bytes/element and that
+    halving flips the analytical selection away from the int8-weight
+    profile on at least one suite shape."""
+    from repro.configs.gemm_suite import suite
+    from repro.core.costmodel import profile_for
+
+    assert profile_for("float32*int4").b == 0.5
+    assert profile_for("float32*int4").a == 4
+    sel = default_selector()
+    diverged = 0
+    for m, n, k in suite()[::12][:80]:
+        s8 = sel.select_op(
+            GemmOp.plain(m, n, k, in_dtype="float32*int8", out_dtype="float32")
+        )
+        s4 = sel.select_op(
+            GemmOp.plain(m, n, k, in_dtype="float32*int4", out_dtype="float32")
+        )
+        if (s8.policy, s8.cfg, s8.g) != (s4.policy, s4.cfg, s4.g):
+            diverged += 1
+    assert diverged > 0
+
+
+@pytest.mark.parametrize(
+    "in_dtype", ["float32*int8", "int8*int8", "float32*int4"]
+)
+def test_quantized_fingerprint_tunes_journals_and_warm_starts(
+    tmp_path, in_dtype
+):
     """A mixed-dtype op tunes under its own key, journals, and replays to
-    an exact database hit — the serve-path warm-start contract."""
+    an exact database hit — the serve-path warm-start contract. Covers
+    every ladder rung: int8-weight, int8*int8 and packed int4."""
     journal = str(tmp_path / "j.jsonl")
-    op = _quant_op(64, 512, 256)
+    op = _quant_op(64, 512, 256, in_dtype)
     db = Tuner().tune([op], journal=journal)
     assert op.key in db.records
     # measured at the real widths: the record differs from the same-MNK

@@ -22,7 +22,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.quant import QuantizedTensor, quantize_lm_params, quantize_weight
+from repro.core.quant import (
+    QuantizedTensor,
+    pack_int4,
+    quantize_lm_params,
+    quantize_weight,
+    unpack_int4,
+)
 from repro.core.tuner import (
     LEGACY_GRID,
     TuningRecord,
@@ -65,6 +71,73 @@ def test_roundtrip_error_bound_spot():
     _assert_roundtrip_bound(r.normal(size=(64, 48)))
     _assert_roundtrip_bound(1e-4 * r.normal(size=(8, 8)))  # tiny magnitudes
     _assert_roundtrip_bound(r.normal(size=(3, 16, 8)))  # stacked (G, K, N)
+
+
+def _assert_roundtrip_bound_int4(w: np.ndarray):
+    q = quantize_weight(jnp.asarray(w, jnp.float32), bits=4)
+    err = np.abs(np.asarray(q.dequantize()) - w)
+    # int4 codes span +-7: scale = amax / 7, same round-to-nearest bound
+    bound = np.asarray(q.scales)[..., None, :] / 2.0
+    assert np.all(err <= bound + 1e-7), (err.max(), bound.max())
+    assert q.bits == 4
+    assert q.dtype_name == "int4"
+    # stored packed: ceil(k/2) rows of two nibbles each
+    assert q.values.shape[-2] == (w.shape[-2] + 1) // 2
+    assert q.shape == w.shape  # logical shape reports the unpacked K
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=11),
+    st.integers(min_value=1, max_value=9),
+    st.floats(min_value=1e-3, max_value=1e3),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_int4_roundtrip_error_bound_property(k, n, amp, seed):
+    r = np.random.default_rng(seed)
+    _assert_roundtrip_bound_int4(amp * r.normal(size=(k, n)))
+
+
+def test_int4_roundtrip_error_bound_spot():
+    r = np.random.default_rng(1)
+    _assert_roundtrip_bound_int4(r.normal(size=(63, 48)))  # odd K: pad row
+    _assert_roundtrip_bound_int4(r.normal(size=(3, 16, 8)))  # stacked
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=17),
+    st.integers(min_value=1, max_value=9),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pack_unpack_int4_roundtrip_property(k, n, seed):
+    r = np.random.default_rng(seed)
+    q = jnp.asarray(r.integers(-8, 8, size=(k, n)), jnp.int8)
+    packed = pack_int4(q)
+    assert packed.dtype == jnp.int8
+    assert packed.shape == ((k + 1) // 2, n)
+    restored = unpack_int4(packed)[:k]
+    np.testing.assert_array_equal(np.asarray(restored), np.asarray(q))
+
+
+def test_pack_unpack_int4_roundtrip_spot():
+    # full nibble range survives the sign-extension, odd and even K,
+    # stacked (G, K, N) layout included
+    q = jnp.asarray(
+        np.arange(-8, 8, dtype=np.int8).reshape(16, 1).repeat(3, axis=1)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(unpack_int4(pack_int4(q))), np.asarray(q)
+    )
+    odd = q[:15]
+    np.testing.assert_array_equal(
+        np.asarray(unpack_int4(pack_int4(odd))[:15]), np.asarray(odd)
+    )
+    r = np.random.default_rng(2)
+    g = jnp.asarray(r.integers(-8, 8, size=(4, 10, 6)), jnp.int8)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_int4(pack_int4(g))), np.asarray(g)
+    )
 
 
 def test_roundtrip_zero_and_constant_channels():
@@ -122,8 +195,9 @@ def test_quantize_lm_params_converts_only_projection_leaves():
             "moe": {"router": jnp.ones((8, 4), jnp.float32)},
         },
     }
-    out, n = quantize_lm_params(params)
+    out, n, n_skipped = quantize_lm_params(params)
     assert n == 3
+    assert n_skipped == 0
     assert isinstance(out["layers"]["attn"]["wq"], QuantizedTensor)
     assert isinstance(out["layers"]["mlp"]["w_in"], QuantizedTensor)
     # embeddings / norms / routers stay dense
@@ -133,6 +207,50 @@ def test_quantize_lm_params_converts_only_projection_leaves():
     # stacked leaves carry the leading axis into the scales, so lax.scan
     # slices both leaves coherently
     assert out["layers"]["attn"]["wq"].scales.shape == (2, 8)
+
+
+def test_quantize_lm_params_recurses_sequences():
+    """Regression: the walk used to visit only dict nodes, so list/tuple-
+    nested blocks (pipeline stages, per-layer lists) were silently served
+    dense with n_quantized undercounted and no skip report."""
+    params = {
+        "blocks": [
+            {"attn": {"wq": jnp.ones((8, 8), jnp.float32)}},
+            {"mlp": {"w_in": jnp.ones((8, 16), jnp.float32)}},
+        ],
+        "heads": ({"lm_head": jnp.ones((8, 32), jnp.float32)},),
+        "embed": jnp.ones((32, 8), jnp.float32),
+    }
+    out, n, n_skipped = quantize_lm_params(params)
+    assert n == 3
+    assert n_skipped == 0
+    assert isinstance(out["blocks"][0]["attn"]["wq"], QuantizedTensor)
+    assert isinstance(out["blocks"][1]["mlp"]["w_in"], QuantizedTensor)
+    assert isinstance(out["heads"][0]["lm_head"], QuantizedTensor)
+    assert isinstance(out["blocks"], list) and isinstance(out["heads"], tuple)
+    assert not isinstance(out["embed"], QuantizedTensor)
+
+
+def test_quantize_lm_params_reports_skipped_float_leaves():
+    # a named projection that cannot be quantized (ndim < 2) is surfaced
+    # as a skip count instead of vanishing into the dense tree
+    params = {
+        "wq": jnp.ones((8, 8), jnp.float32),
+        "layers": [{"w_out": jnp.ones((4,), jnp.float32)}],
+    }
+    out, n, n_skipped = quantize_lm_params(params)
+    assert n == 1
+    assert n_skipped == 1
+    assert not isinstance(out["layers"][0]["w_out"], QuantizedTensor)
+
+
+def test_quantize_lm_params_int4_and_dynamic_act_flags():
+    params = {"wq": jnp.ones((8, 8), jnp.float32)}
+    out, n, _ = quantize_lm_params(params, bits=4, act_bits=8)
+    assert n == 1
+    q = out["wq"]
+    assert q.bits == 4 and q.act_bits == 8
+    assert q.values.shape == (4, 8)  # packed along K
 
 
 # ---------------------------------------------------------------------------
@@ -196,6 +314,26 @@ def test_journal_roundtrip_quantized_key_spot():
     parsed = _roundtrip(rec)
     assert parsed.size[4] == "float32*int8"
     assert parsed.wall == 1.7e9
+
+
+@pytest.mark.parametrize("in_dt", ["int8*int8", "float32*int4", "bfloat16*int4"])
+def test_journal_roundtrip_low_precision_ladder_keys(in_dt):
+    """The new ladder rungs journal under their own mixed fingerprints —
+    including int8*int8, which must NOT collapse to plain "int8"."""
+    rec = TuningRecord(
+        size=(96, 256, 1024, 1, in_dt, "float32", "none"),
+        policy="sk2dp",
+        cfg="8x128x512",
+        tflops=3.3,
+        runner_up_policy="dp",
+        runner_up_tflops=3.0,
+        dp_best_tflops=3.0,
+        g=8,
+        version=1,
+        wall=2.0e9,
+    )
+    parsed = _roundtrip(rec, {"dp": 3.0, "sk2dp": 3.3})
+    assert parsed.size[4] == in_dt
 
 
 def test_legacy_journal_lines_parse_unchanged():

@@ -21,6 +21,7 @@ from repro.train import (
     TrainerConfig,
     init_train_state,
     make_train_step,
+    train_gemm_div,
 )
 
 
@@ -145,3 +146,80 @@ def test_grad_compression_training_still_converges():
     )
     t.fit(init_train_state(model, opt, params, grad_compression=True))
     assert t.history[-1] < t.history[0] * 0.9
+
+
+# -- per-array-aware train divisors (the serve_gemm_div gap, train side) -----
+
+
+class _StubPlan:
+    """Duck-typed stand-in for ShardingPlan: train_gemm_div only touches
+    gemm_div() and demoted_dims()."""
+
+    def __init__(self, offenders=(), div=None):
+        self._off = list(offenders)
+        self._div = dict(div or {"batch": 2, "model": 4})
+
+    def gemm_div(self):
+        return dict(self._div)
+
+    def demoted_dims(self, specs, mesh_axis="model"):
+        assert mesh_axis == "model"
+        return list(self._off)
+
+
+class _StubModel:
+    def param_specs(self):
+        return {}
+
+
+def test_train_gemm_div_threads_mesh_table_when_arrays_divide():
+    div = train_gemm_div(_StubModel(), batch=4, plan=_StubPlan())
+    assert div == {"batch": 2, "model": 4}
+
+
+def test_train_gemm_div_demotes_model_on_offending_weight_dims():
+    """Regression: the trainer used to thread the mesh-level
+    ``plan.gemm_div()`` verbatim, so an odd vocab on a model=4 mesh
+    fingerprinted quarter-shapes the kernels never executed. The per-array
+    probe must drop the model divisor to 1 when any weight dim fails the
+    plan's own divisibility solver."""
+    offenders = [((2049, 64), "model", None, 0)]
+    div = train_gemm_div(
+        _StubModel(), batch=4, plan=_StubPlan(offenders=offenders)
+    )
+    assert div["model"] == 1
+    assert div["batch"] == 2  # batch untouched by the model-axis probe
+
+
+def test_train_gemm_div_demotes_batch_on_indivisible_global_batch():
+    div = train_gemm_div(_StubModel(), batch=5, plan=_StubPlan())
+    assert div["batch"] == 1
+    assert div["model"] == 4
+    # divisible batch keeps the table; batch=None skips the probe
+    assert train_gemm_div(_StubModel(), batch=6, plan=_StubPlan())["batch"] == 2
+    assert train_gemm_div(_StubModel(), plan=_StubPlan())["batch"] == 2
+
+
+def test_train_gemm_div_no_plan_is_empty():
+    assert train_gemm_div(_StubModel()) == {}
+
+
+def test_trainer_defaults_div_from_ambient_probe(monkeypatch):
+    """Trainer() without an explicit div runs the probe (a no-op {} -> None
+    when no plan is installed) instead of silently fingerprinting global
+    shapes under an active plan."""
+    cfg, model, params = _setup()
+    opt = make_optimizer("sgd", constant(1e-2), momentum=0.0)
+    data = SyntheticLMData(cfg, batch=4, seq_len=16, seed=3)
+    t = Trainer(model, opt, data, TrainerConfig(total_steps=1), jit=False)
+    assert t.div is None  # no ambient plan -> unsharded fingerprints
+
+    import repro.train.trainer as trainer_mod
+
+    monkeypatch.setattr(
+        trainer_mod,
+        "train_gemm_div",
+        lambda m, batch=None, plan=None: {"batch": 1, "model": 1},
+    )
+    t2 = Trainer(model, opt, data, TrainerConfig(total_steps=1), jit=False)
+    assert t2.div == {"batch": 1, "model": 1}
